@@ -1,0 +1,136 @@
+//! E6 — design-choice ablations called out in DESIGN.md:
+//!   * channel-selection policy (Eq. 2–3 correlation vs variance vs
+//!     random vs first-C), isolated from BaF via the beta-fill
+//!     reconstruction;
+//!   * Eq. 6 consolidation on/off across quantizer depths;
+//!   * split vs fused cloud graph (BaF + consolidate + tail in one HLO,
+//!     using the Pallas consolidate kernel in-graph) — execution-time
+//!     comparison of the two deployments.
+//!
+//! Run: `cargo bench --bench bench_ablation`.
+
+use baf::bench::{fmt_stats, time_fn};
+use baf::codec::CodecKind;
+use baf::experiments::Context;
+use baf::quant;
+use baf::runtime::Engine;
+use baf::selection::Policy;
+use baf::tensor::{gather_channels_hwc_to_chw, Tensor};
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    baf::util::logging::init();
+    let dir = baf::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[bench_ablation] no artifacts — run `make artifacts` first");
+        return Ok(());
+    }
+    let images: usize = std::env::var("BAF_EVAL_IMAGES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(96);
+    let ctx = Context::open(&dir, images)?;
+
+    println!("selection policy (beta-fill, no BaF, C=16, n=8):");
+    println!("| policy | mAP@0.5 | bytes/img |");
+    println!("|---|---|---|");
+    let mut corr_map = 0.0;
+    let mut rand_map = 0.0;
+    for p in [Policy::Correlation, Policy::Variance, Policy::FirstC, Policy::Random(1)] {
+        let (map, bytes) = ctx.beta_fill(p, 16, 8)?;
+        if p == Policy::Correlation {
+            corr_map = map;
+        }
+        if matches!(p, Policy::Random(_)) {
+            rand_map = map;
+        }
+        println!("| {} | {map:.4} | {bytes:.0} |", p.name());
+    }
+    let (baf_map, _) = ctx.point(16, 8, CodecKind::Tlc, 0)?;
+    println!("| correlation + BaF | {baf_map:.4} | (same rate) |");
+    assert!(
+        baf_map > corr_map,
+        "BaF must improve over no-prediction ({baf_map} vs {corr_map})"
+    );
+    let _ = rand_map;
+
+    println!("\nEq.6 consolidation (C=16):");
+    println!("| n | mAP on | mAP off | clamp rate |");
+    println!("|---|---|---|---|");
+    for n in [4u8, 6, 8] {
+        let (on, off, rate) = ctx.consolidation_ablation(16, n)?;
+        println!("| {n} | {on:.4} | {off:.4} | {rate:.4} |");
+    }
+
+    // ---- split vs fused cloud graph ----
+    println!("\nsplit vs fused cloud graph (C=16, n=8, single request):");
+    let engine = Rc::new(Engine::new(&dir)?);
+    let m = engine.manifest().clone();
+    let stats = baf::selection::ChannelStats::load(&dir)?;
+    let sel = stats.select(Policy::Correlation, 16);
+    // prepare one decoded frame worth of inputs
+    let sample = baf::data::eval_set(1).remove(0);
+    let img = sample.image.clone().reshape(&[1, m.image_size, m.image_size, 3]);
+    let z = engine
+        .run("frontend_b1", &[&img])?
+        .reshape(&[m.z_shape.0, m.z_shape.1, m.z_shape.2]);
+    let planes = gather_channels_hwc_to_chw(&z, &sel);
+    let q = quant::quantize(&planes, 8);
+    let zhat = baf::tensor::chw_to_hwc(&quant::dequantize(&q)).reshape(&[
+        1,
+        m.z_shape.0,
+        m.z_shape.1,
+        16,
+    ]);
+
+    let baf_exe = engine.load("baf_c16_n8_b1")?;
+    let tail_exe = engine.load("tail_b1")?;
+    let split_stats = time_fn(
+        || {
+            let zt = baf_exe.run(&[&zhat]).unwrap().reshape(&[
+                m.z_shape.0,
+                m.z_shape.1,
+                m.z_shape.2,
+            ]);
+            let mut ztm = zt;
+            let pred = gather_channels_hwc_to_chw(&ztm, &sel);
+            let cons = quant::consolidate(&pred, &q);
+            baf::tensor::scatter_channels_chw_into_hwc(&cons, &sel, &mut ztm);
+            let zin = ztm.reshape(&[1, m.z_shape.0, m.z_shape.1, m.z_shape.2]);
+            std::hint::black_box(tail_exe.run(&[&zin]).unwrap());
+        },
+        3,
+        20,
+        2000.0,
+    );
+    println!("{}", fmt_stats("split graph (2 PJRT calls + rust Eq.6)", &split_stats));
+
+    if engine.load("fused_c16_n8_b1").is_ok() {
+        let fused = engine.load("fused_c16_n8_b1")?;
+        // fused graph wants q as f32 (1, C, H, W) + minmax (C, 2)
+        let qf = Tensor::from_vec(
+            &[1, 16, m.z_shape.0, m.z_shape.1],
+            q.bins.iter().map(|&b| b as f32).collect(),
+        );
+        let mm = Tensor::from_vec(
+            &[16, 2],
+            q.ranges.iter().flat_map(|r| [r.min, r.max]).collect(),
+        );
+        let fused_stats = time_fn(
+            || {
+                std::hint::black_box(fused.run(&[&zhat, &qf, &mm]).unwrap());
+            },
+            3,
+            20,
+            2000.0,
+        );
+        println!("{}", fmt_stats("fused graph (1 PJRT call, Eq.6 in-HLO)", &fused_stats));
+        println!(
+            "fused / split mean ratio: {:.3}",
+            fused_stats.mean_us / split_stats.mean_us
+        );
+    } else {
+        println!("(fused artifact not present)");
+    }
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! E4 — lossless codec comparison on tiled quantized tensors (the [5]
+//! comparison): TLC (FLIF stand-in) vs PNG-like vs zstd, rate and
+//! throughput, across C and n. Also micro-benchmarks of the codec hot
+//! paths on synthetic planes (used by the §Perf iteration log).
+//!
+//! Run: `cargo bench --bench bench_codec`.
+
+use baf::bench::{fmt_stats, time_fn};
+use baf::codec::{CodecKind, ImageMeta};
+use baf::experiments::{codec_table, codec_table_fmt, Context};
+use baf::util::SplitMix64;
+
+fn synthetic_plane(w: usize, h: usize, n: u8, seed: u64) -> Vec<u16> {
+    // smooth field + noise: representative of tiled BN-output tensors
+    let mut r = SplitMix64::new(seed);
+    let maxv = ((1u32 << n) - 1) as f32;
+    (0..w * h)
+        .map(|i| {
+            let x = (i % w) as f32 / w as f32;
+            let y = (i / w) as f32 / h as f32;
+            let v = 0.5
+                + 0.25 * (x * 9.0).sin() * (y * 7.0).cos()
+                + 0.08 * (r.next_f32() - 0.5);
+            (v.clamp(0.0, 1.0) * maxv) as u16
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    baf::util::logging::init();
+    let dir = baf::runtime::default_artifact_dir();
+
+    // ---- real-tensor comparison table (E4 proper) ----
+    if dir.join("manifest.json").exists() {
+        let ctx = Context::open(&dir, 32)?;
+        let rows = codec_table(&ctx, &[8, 16, 32], &[2, 4, 6, 8])?;
+        println!("{}", codec_table_fmt(&rows));
+        // FLIF-property assertion: TLC rate grows with n
+        for &c in &[8usize, 16, 32] {
+            let tlc: Vec<f64> = rows
+                .iter()
+                .filter(|r| r.codec == "tlc" && r.c == c)
+                .map(|r| r.mean_bytes)
+                .collect();
+            assert!(
+                tlc.windows(2).all(|w| w[0] < w[1]),
+                "TLC rate must grow with n at C={c}: {tlc:?}"
+            );
+        }
+    } else {
+        eprintln!("[bench_codec] no artifacts — skipping real-tensor table");
+    }
+
+    // ---- hot-path micro-benches (synthetic 128x128 plane) ----
+    println!("codec hot-path micro-benches (128x128 plane):");
+    let (w, h) = (128usize, 128usize);
+    for n in [4u8, 8] {
+        let plane = synthetic_plane(w, h, n, 42);
+        for codec in [CodecKind::Tlc, CodecKind::PngLike, CodecKind::ZstdRaw] {
+            let enc = codec.encode_image(&plane, w, h, n, 0);
+            let s = time_fn(
+                || {
+                    std::hint::black_box(codec.encode_image(&plane, w, h, n, 0));
+                },
+                3,
+                20,
+                300.0,
+            );
+            println!(
+                "{}  ({} bytes, {:.1} MB/s enc)",
+                fmt_stats(&format!("{} encode n={n}", codec.name()), &s),
+                enc.len(),
+                (w * h) as f64 / s.mean_us
+            );
+            let meta = ImageMeta { width: w, height: h, n };
+            let sd = time_fn(
+                || {
+                    std::hint::black_box(codec.decode_image(&enc, &meta, 0));
+                },
+                3,
+                20,
+                300.0,
+            );
+            println!(
+                "{}  ({:.1} MB/s dec)",
+                fmt_stats(&format!("{} decode n={n}", codec.name()), &sd),
+                (w * h) as f64 / sd.mean_us
+            );
+        }
+    }
+    // lossy codec RD sanity
+    println!("\nMIC lossy micro-bench (128x128 plane, n=8):");
+    let plane = synthetic_plane(w, h, 8, 7);
+    for qp in [4u8, 16, 28, 40] {
+        let enc = CodecKind::Mic.encode_image(&plane, w, h, 8, qp);
+        let s = time_fn(
+            || {
+                std::hint::black_box(CodecKind::Mic.encode_image(&plane, w, h, 8, qp));
+            },
+            2,
+            10,
+            200.0,
+        );
+        println!("{}  ({} bytes)", fmt_stats(&format!("mic encode qp={qp}"), &s), enc.len());
+    }
+    Ok(())
+}

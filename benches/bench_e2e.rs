@@ -1,0 +1,108 @@
+//! E5 — end-to-end serving: latency breakdown, throughput, and the
+//! dynamic-batching ablation (batch cap 1 vs 4 vs 8), plus offered-load
+//! scaling. This is the coordinator-contribution bench: it shows the
+//! split pipeline keeps the added (non-inference) work off the critical
+//! path and that batching the cloud stage lifts throughput.
+//!
+//! Run: `cargo bench --bench bench_e2e`.
+
+use baf::config::{PipelineConfig, ServerConfig};
+use baf::coordinator::run_server;
+
+fn main() -> anyhow::Result<()> {
+    baf::util::logging::init();
+    let dir = baf::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[bench_e2e] no artifacts — run `make artifacts` first");
+        return Ok(());
+    }
+    let pcfg = PipelineConfig { artifact_dir: dir, ..Default::default() };
+
+    println!("batching ablation (256 requests @ 300/s offered):");
+    println!("| batch cap | deadline us | throughput rps | mean batch | p50 e2e ms | p95 e2e ms |");
+    println!("|---|---|---|---|---|---|");
+    for (cap, deadline) in [(1usize, 0u64), (4, 2000), (8, 2000), (8, 8000)] {
+        let scfg = ServerConfig {
+            batch_cap: cap,
+            batch_deadline_us: deadline,
+            arrival_rate: 300.0,
+            num_requests: 256,
+            decode_workers: 2,
+            queue_depth: 64,
+            burst_factor: 1.0,
+        };
+        let r = run_server(&pcfg, &scfg)?;
+        let lat = r.metrics.get("latencies").unwrap();
+        let e2e = lat.get("5_e2e").unwrap();
+        println!(
+            "| {cap} | {deadline} | {:.1} | {:.2} | {:.2} | {:.2} |",
+            r.throughput_rps,
+            r.mean_batch_size,
+            e2e.get("p50_us").unwrap().as_f64().unwrap() / 1e3,
+            e2e.get("p95_us").unwrap().as_f64().unwrap() / 1e3,
+        );
+    }
+
+    println!("\noffered-load scaling (batch cap 8, deadline 2 ms):");
+    println!("| offered rps | achieved rps | p50 e2e ms | p95 e2e ms |");
+    println!("|---|---|---|---|");
+    for rate in [50.0, 150.0, 300.0, 600.0] {
+        let scfg = ServerConfig {
+            batch_cap: 8,
+            batch_deadline_us: 2000,
+            arrival_rate: rate,
+            num_requests: 256,
+            decode_workers: 2,
+            queue_depth: 64,
+            burst_factor: 1.0,
+        };
+        let r = run_server(&pcfg, &scfg)?;
+        let lat = r.metrics.get("latencies").unwrap();
+        let e2e = lat.get("5_e2e").unwrap();
+        println!(
+            "| {rate:.0} | {:.1} | {:.2} | {:.2} |",
+            r.throughput_rps,
+            e2e.get("p50_us").unwrap().as_f64().unwrap() / 1e3,
+            e2e.get("p95_us").unwrap().as_f64().unwrap() / 1e3,
+        );
+    }
+
+    println!("\nbursty arrivals (MMPP-2, mean 300/s, cap 8):");
+    println!("| burst factor | achieved rps | p50 e2e ms | p95 e2e ms | p99 e2e ms |");
+    println!("|---|---|---|---|---|");
+    for bf in [1.0f64, 4.0, 10.0] {
+        let scfg = ServerConfig {
+            batch_cap: 8,
+            batch_deadline_us: 2000,
+            arrival_rate: 300.0,
+            num_requests: 256,
+            decode_workers: 2,
+            queue_depth: 64,
+            burst_factor: bf,
+        };
+        let r = run_server(&pcfg, &scfg)?;
+        let lat = r.metrics.get("latencies").unwrap();
+        let e2e = lat.get("5_e2e").unwrap();
+        println!(
+            "| {bf:.0} | {:.1} | {:.2} | {:.2} | {:.2} |",
+            r.throughput_rps,
+            e2e.get("p50_us").unwrap().as_f64().unwrap() / 1e3,
+            e2e.get("p95_us").unwrap().as_f64().unwrap() / 1e3,
+            e2e.get("p99_us").unwrap().as_f64().unwrap() / 1e3,
+        );
+    }
+
+    println!("\nfull stage table at 300/s, cap 8:");
+    let scfg = ServerConfig {
+        batch_cap: 8,
+        batch_deadline_us: 2000,
+        arrival_rate: 300.0,
+        num_requests: 256,
+        decode_workers: 2,
+        queue_depth: 64,
+        burst_factor: 1.0,
+    };
+    let r = run_server(&pcfg, &scfg)?;
+    println!("{}", r.table);
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! E1 / Fig. 3 — mAP vs number of transmitted channels (n = 8).
+//!
+//! Regenerates the paper's Fig. 3: the mAP curve over the C sweep against
+//! the cloud-only benchmark line, plus the no-prediction (beta-fill)
+//! control that shows how much of the recovery is due to BaF itself.
+//!
+//! Run: `cargo bench --bench bench_fig3` (BAF_EVAL_IMAGES overrides the
+//! eval-set size; BAF_ARTIFACTS overrides the artifact dir).
+
+use baf::experiments::{fig3, fig3_table, Context, DEFAULT_EVAL_IMAGES};
+
+fn main() -> anyhow::Result<()> {
+    baf::util::logging::init();
+    let images: usize = std::env::var("BAF_EVAL_IMAGES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_EVAL_IMAGES);
+    let dir = baf::runtime::default_artifact_dir();
+    eprintln!("[bench_fig3] artifacts={} images={images}", dir.display());
+    let ctx = Context::open(&dir, images)?;
+    let (cloud_map, rows) = fig3(&ctx, &[4, 8, 16, 32, 64])?;
+    println!("{}", fig3_table(cloud_map, &rows));
+    // paper-shape assertions: monotone-ish saturation toward cloud-only
+    let full = rows.last().expect("rows");
+    assert!(
+        full.delta_vs_cloud.abs() < 0.02,
+        "C = P should recover cloud-only mAP (delta {})",
+        full.delta_vs_cloud
+    );
+    assert!(
+        rows.iter().all(|r| r.map_50 >= r.beta_fill_map - 0.02),
+        "BaF must not lose to the no-prediction control"
+    );
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! E2/E3 / Fig. 4 — rate–mAP curves, headline savings and BD-Bitrate-mAP.
+//!
+//! Regenerates the paper's Fig. 4: (a) BaF + lossless coding over the n
+//! sweep at C = quarter of the channels, (b) BaF 6-bit + lossy transform
+//! coding over a QP sweep, (c) the [4]-style baseline that lossy-codes
+//! ALL channels at 8 bits, and the cloud-only reference. Prints the
+//! bit-savings at <1 % and <2 % mAP loss and the BD-Bitrate-mAP of BaF vs
+//! the all-channel baseline (paper: 62 % / 75 % savings; >90 % BD-rate).
+//!
+//! Run: `cargo bench --bench bench_fig4`.
+
+use baf::experiments::{fig4, fig4_json, fig4_table, Context, DEFAULT_EVAL_IMAGES};
+
+fn main() -> anyhow::Result<()> {
+    baf::util::logging::init();
+    let images: usize = std::env::var("BAF_EVAL_IMAGES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_EVAL_IMAGES);
+    let dir = baf::runtime::default_artifact_dir();
+    eprintln!("[bench_fig4] artifacts={} images={images}", dir.display());
+    let ctx = Context::open(&dir, images)?;
+    let c = 16; // quarter of P=64, the paper's C=64-of-256 analog
+    let r = fig4(&ctx, c)?;
+    println!("{}", fig4_table(&r, c));
+    // machine-readable dump for EXPERIMENTS.md bookkeeping
+    let out = dir.join("fig4_results.json");
+    baf::json::to_file(&out, &fig4_json(&r))?;
+    eprintln!("[bench_fig4] wrote {}", out.display());
+
+    // paper-shape assertions
+    let rates: Vec<f64> = r.baf_lossless.iter().map(|(_, p)| p.rate).collect();
+    assert!(
+        rates.windows(2).all(|w| w[0] < w[1]),
+        "lossless rate must grow with n: {rates:?}"
+    );
+    if let Some(bd) = r.bd_rate_vs_all {
+        assert!(bd < 0.0, "BaF should save bits vs all-channel lossy (bd={bd})");
+    }
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! End-to-end validation driver (the run recorded in EXPERIMENTS.md §E2E).
+//!
+//! Exercises every layer of the stack on a real workload:
+//!   1. the deterministic ShapeWorld eval split (Rust generator, pinned
+//!      bit-exactly to the Python training data generator);
+//!   2. the AOT-compiled detector artifacts through PJRT (L2+L1);
+//!   3. the full BaF compression pipeline (L3) at the paper's operating
+//!      points, against the cloud-only baseline;
+//! and reports mAP, rate, savings and latency — the paper's headline
+//! experiment in one binary.
+//!
+//! Run: `cargo run --release --example collaborative_pipeline [-- images N]`
+
+use baf::codec::CodecKind;
+use baf::config::PipelineConfig;
+use baf::coordinator::{CloudOnly, Pipeline};
+use baf::data;
+use baf::runtime::Engine;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    baf::util::logging::init();
+    let images: usize = std::env::args()
+        .skip_while(|a| a != "images")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128);
+
+    let dir = baf::runtime::default_artifact_dir();
+    let engine = Rc::new(Engine::new(&dir)?);
+    let samples = data::eval_set(images);
+    println!("eval split: {} ShapeWorld images (seed {:#x})", images, data::EVAL_SEED);
+
+    // ---- cloud-only baseline ----
+    let co = CloudOnly::new(Rc::clone(&engine));
+    let base = co.evaluate_set(&samples)?;
+    let base_bytes: f64 = samples.iter().map(|s| co.image_bytes(&s.image) as f64).sum::<f64>()
+        / samples.len() as f64;
+    println!(
+        "\ncloud-only:  mAP@0.5 = {:.4}   mAP@[.5:.95] = {:.4}   input = {:.0} B/img",
+        base.map_50, base.map_50_95, base_bytes
+    );
+
+    // ---- BaF pipeline at three operating points ----
+    println!("\n| config | mAP@0.5 | delta | rate B/img | savings vs input |");
+    println!("|---|---|---|---|---|");
+    for (c, n, codec, qp) in [
+        (16usize, 8u8, CodecKind::Tlc, 0u8),   // paper's headline point
+        (16, 6, CodecKind::Tlc, 0),            // deeper quantization
+        (16, 6, CodecKind::Mic, 12),           // 6-bit + lossy (purple curve)
+    ] {
+        let cfg = PipelineConfig {
+            artifact_dir: dir.clone(),
+            c,
+            n,
+            codec,
+            qp,
+            ..Default::default()
+        };
+        let pipe = Pipeline::new(Rc::clone(&engine), cfg)?;
+        let (map, bytes) = pipe.evaluate_set(&samples)?;
+        println!(
+            "| C={c} n={n} {}{} | {:.4} | {:+.4} | {:.0} | {:.1}% |",
+            codec.name(),
+            if codec == CodecKind::Mic { format!(" qp={qp}") } else { String::new() },
+            map.map_50,
+            map.map_50 - base.map_50,
+            bytes,
+            (1.0 - bytes / base_bytes) * 100.0
+        );
+    }
+
+    // ---- single-request latency breakdown ----
+    let pipe = Pipeline::new(
+        Rc::clone(&engine),
+        PipelineConfig { artifact_dir: dir, ..Default::default() },
+    )?;
+    let out = pipe.process(&samples[0].image)?;
+    println!("\nsingle-request latency (C=16, n=8):");
+    let total: f64 = out.stages.iter().map(|(_, us)| us).sum();
+    for (name, us) in &out.stages {
+        println!("  {name:<18} {us:>8.1} us  ({:>4.1}%)", us / total * 100.0);
+    }
+    println!("  {:<18} {total:>8.1} us", "TOTAL");
+    Ok(())
+}

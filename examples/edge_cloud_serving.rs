@@ -1,0 +1,32 @@
+//! Serving scenario: the pipelined edge->cloud server under Poisson load,
+//! with and without dynamic batching — the deployment the paper's
+//! collaborative-intelligence setting implies (many devices, one cloud).
+//!
+//! Run: `cargo run --release --example edge_cloud_serving`
+
+use baf::config::{PipelineConfig, ServerConfig};
+use baf::coordinator::run_server;
+
+fn main() -> anyhow::Result<()> {
+    baf::util::logging::init();
+    let pcfg = PipelineConfig::default();
+
+    for (label, cap) in [("no batching (cap 1)", 1usize), ("dynamic batching (cap 8)", 8)] {
+        let scfg = ServerConfig {
+            batch_cap: cap,
+            batch_deadline_us: 2000,
+            arrival_rate: 250.0,
+            num_requests: 192,
+            decode_workers: 2,
+            queue_depth: 64,
+            burst_factor: 1.0,
+        };
+        println!("=== {label}: {} requests @ {}/s ===", scfg.num_requests, scfg.arrival_rate);
+        let report = run_server(&pcfg, &scfg)?;
+        println!(
+            "throughput {:.1} req/s, mean batch {:.2}\n{}",
+            report.throughput_rps, report.mean_batch_size, report.table
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: the whole system in ~40 lines.
+//!
+//! Generates one ShapeWorld image, runs the split edge->cloud pipeline at
+//! the paper's quarter-channels operating point (C=16 of P=64, n=8,
+//! lossless TLC), and prints the detections next to the ground truth.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` to have produced ./artifacts)
+
+use baf::config::PipelineConfig;
+use baf::coordinator::Pipeline;
+use baf::data;
+
+fn main() -> anyhow::Result<()> {
+    baf::util::logging::init();
+
+    // 1. open the pipeline (compiles the AOT artifacts on first use)
+    let cfg = PipelineConfig::default(); // C=16, n=8, TLC, correlation
+    let pipe = Pipeline::open(cfg)?;
+
+    // 2. one image from the deterministic eval split
+    // (index 1; warm the executables on index 0 so the printed stage
+    // latencies reflect steady state, not first-call PJRT compilation)
+    let mut set = data::eval_set(2);
+    let warm = set.remove(0);
+    let sample = set.remove(0);
+    let _ = pipe.process(&warm.image)?;
+    println!("ground truth:");
+    for b in &sample.boxes {
+        println!(
+            "  {:>8}  [{:5.1}, {:5.1}, {:5.1}, {:5.1}]",
+            data::CLASS_NAMES[b.class], b.x0, b.y0, b.x1, b.y1
+        );
+    }
+
+    // 3. edge -> bitstream -> cloud -> detections
+    let out = pipe.process(&sample.image)?;
+    println!("\ncompressed tensor: {} bytes (vs {} raw f32 bytes for Z)",
+        out.frame_bytes,
+        16 * 16 * 64 * 4
+    );
+    println!("detections:");
+    for b in out.boxes.iter().filter(|b| b.score > 0.2) {
+        println!(
+            "  {:>8}  [{:5.1}, {:5.1}, {:5.1}, {:5.1}]  score {:.2}",
+            data::CLASS_NAMES[b.class], b.x0, b.y0, b.x1, b.y1, b.score
+        );
+    }
+    println!("\nstage latencies:");
+    for (name, us) in &out.stages {
+        println!("  {name:<18} {us:>8.1} us");
+    }
+    Ok(())
+}

@@ -1,0 +1,380 @@
+"""AOT export: train (cached) -> lower to HLO text -> artifacts/.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (see Makefile).
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Everything the Rust runtime needs lands in artifacts/:
+  *.hlo.txt            one per (stage, variant, batch) — weights baked in
+  manifest.json        artifact index + model geometry (grid, anchors, ...)
+  channel_stats.json   Eq. 2–3 channel ordering + split-layer BN params
+  golden/              cross-language golden vectors (npy + json)
+  cache/weights.npz    trained parameters (build cache only)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import baf as B
+from . import dataset as D
+from . import detector as det
+from . import layers as L
+from . import prng, stats, train
+from .kernels import consolidate as kcons
+from .kernels import ref as KR
+
+# The (C, n) grid of BaF models to train/export. C sweep at n=8 mirrors the
+# paper's Fig. 3 ({8..128} of 256 == {4..64} of 64); the n sweep at C=16
+# mirrors Fig. 4 (C=64 of 256 == quarter of the channels).
+C_SWEEP = (4, 8, 16, 32, 64)
+N_SWEEP = (2, 3, 4, 5, 6, 7, 8)
+C_FOR_N_SWEEP = 16
+BATCHES = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax function -> XLA HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked weights ARE the model — without this
+    # flag the printer elides them as '{...}' and the Rust-side parser would
+    # load garbage.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export(fn, example_args: Sequence[jnp.ndarray], path: str) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+# --------------------------------------------------------------------------
+# Weight cache
+# --------------------------------------------------------------------------
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    for k, v in tree.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, key + "/"))
+        else:
+            out[key] = np.asarray(v)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Dict:
+    tree: Dict = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(v)
+    return tree
+
+
+def save_weights(path: str, det_params: Dict, baf_models: Dict[Tuple[int, int], Dict]):
+    flat = _flatten({"det": det_params})
+    for (c, n), params in baf_models.items():
+        flat.update(_flatten({f"baf_c{c}_n{n}": params}))
+    np.savez(path, **flat)
+
+
+def load_weights(path: str):
+    data = np.load(path)
+    groups: Dict[str, Dict[str, np.ndarray]] = {}
+    for key in data.files:
+        top, rest = key.split("/", 1)
+        groups.setdefault(top, {})[rest] = data[key]
+    det_params = _unflatten(groups["det"])
+    baf_models = {}
+    for top, flat in groups.items():
+        if top.startswith("baf_c"):
+            c, n = top[len("baf_") :].split("_")
+            baf_models[(int(c[1:]), int(n[1:]))] = _unflatten(flat)
+    return det_params, baf_models
+
+
+# --------------------------------------------------------------------------
+# Golden vectors (cross-language contract with the Rust side)
+# --------------------------------------------------------------------------
+def write_prng_golden(path: str) -> None:
+    cases = []
+    for seed in (0, 1, 42, 0xDEADBEEF, (1 << 64) - 1):
+        r = prng.SplitMix64(seed)
+        u64s = [str(r.next_u64()) for _ in range(8)]
+        r2 = prng.SplitMix64(seed)
+        f32s = [r2.next_f32() for _ in range(8)]
+        r3 = prng.SplitMix64(seed)
+        ranges = [r3.next_range(10, 29) for _ in range(8)]
+        cases.append({"seed": str(seed), "u64": u64s, "f32": f32s, "range_10_29": ranges})
+    with open(path, "w") as f:
+        json.dump({"cases": cases}, f, indent=1)
+
+
+def write_dataset_golden(dir_: str) -> None:
+    cases = []
+    for idx in range(4):
+        s = D.generate(dataset_seed=42, index=idx)
+        cases.append(
+            {
+                "index": idx,
+                "sum": float(np.float64(s.image.sum())),
+                "nboxes": int(s.boxes.shape[0]),
+                "boxes": [[float(v) for v in b] for b in s.boxes],
+            }
+        )
+    with open(os.path.join(dir_, "dataset.json"), "w") as f:
+        json.dump({"dataset_seed": 42, "cases": cases}, f, indent=1)
+    np.save(os.path.join(dir_, "dataset_img0.npy"), D.generate(42, 0).image)
+
+
+def write_kernel_goldens(dir_: str) -> None:
+    rng = np.random.default_rng(1234)
+    z = rng.normal(size=(16, 16, 16)).astype(np.float32) * 2.0 + 0.3
+    for n in (2, 4, 8):
+        q, mm = KR.quantize_ref(jnp.asarray(z), n)
+        zh = KR.dequantize_ref(q, mm, n)
+        zt = jnp.asarray(
+            z + rng.normal(size=z.shape).astype(np.float32) * 0.2
+        )
+        cons = KR.consolidate_ref(zt, q, mm, n)
+        np.save(os.path.join(dir_, f"quant_n{n}_q.npy"), np.asarray(q, np.int32))
+        np.save(os.path.join(dir_, f"quant_n{n}_mm.npy"), np.asarray(mm))
+        np.save(os.path.join(dir_, f"quant_n{n}_deq.npy"), np.asarray(zh))
+        np.save(os.path.join(dir_, f"quant_n{n}_cons.npy"), np.asarray(cons))
+        if n == 4:
+            np.save(os.path.join(dir_, "quant_zt.npy"), np.asarray(zt))
+    np.save(os.path.join(dir_, "quant_z.npy"), z)
+
+
+def write_pipeline_goldens(
+    dir_: str, det_params: Dict, baf_models: Dict, order: List[int]
+) -> None:
+    """End-to-end golden: image 0 through every stage at (C=16, n=8)."""
+    img = D.generate(dataset_seed=42, index=0).image[None]
+    z = np.asarray(jax.jit(lambda i: det.frontend(det_params, i))(jnp.asarray(img)))
+    c, n = 16, 8
+    sel = tuple(order[:c])
+    zc = z[0][:, :, list(sel)]  # (16,16,C)
+    zc_chw = np.transpose(zc, (2, 0, 1))
+    q, mm = KR.quantize_ref(jnp.asarray(zc_chw), n)
+    zhat = KR.dequantize_ref(q, mm, n)
+    zhat_nhwc = np.transpose(np.asarray(zhat), (1, 2, 0))[None]
+    z_tilde = np.asarray(
+        jax.jit(
+            lambda zc_: B.predict(baf_models[(c, n)], det_params, zc_, sel)
+        )(jnp.asarray(zhat_nhwc))
+    )
+    # consolidation + scatter (the Rust hot path repeats this)
+    zt_sel = np.transpose(z_tilde[0][:, :, list(sel)], (2, 0, 1))
+    cons = np.asarray(KR.consolidate_ref(jnp.asarray(zt_sel), q, mm, n))
+    z_final = z_tilde.copy()
+    z_final[0][:, :, list(sel)] = np.transpose(cons, (1, 2, 0))
+    head = np.asarray(
+        jax.jit(lambda zt: det.tail(det_params, zt))(jnp.asarray(z_final))
+    )
+    mono = np.asarray(
+        jax.jit(lambda i: det.forward(det_params, i)[0])(jnp.asarray(img))
+    )
+    np.save(os.path.join(dir_, "pipe_img.npy"), img[0])
+    np.save(os.path.join(dir_, "pipe_z.npy"), z[0])
+    np.save(os.path.join(dir_, "pipe_q.npy"), np.asarray(q, np.int32))
+    np.save(os.path.join(dir_, "pipe_mm.npy"), np.asarray(mm))
+    np.save(os.path.join(dir_, "pipe_zhat.npy"), zhat_nhwc[0])
+    np.save(os.path.join(dir_, "pipe_ztilde.npy"), z_tilde[0])
+    np.save(os.path.join(dir_, "pipe_zfinal.npy"), z_final[0])
+    np.save(os.path.join(dir_, "pipe_head.npy"), head[0])
+    np.save(os.path.join(dir_, "pipe_mono_head.npy"), mono[0])
+    with open(os.path.join(dir_, "pipe_meta.json"), "w") as f:
+        json.dump({"c": c, "n": n, "sel": list(sel), "dataset_seed": 42, "index": 0}, f)
+
+
+# --------------------------------------------------------------------------
+# Main export
+# --------------------------------------------------------------------------
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--det-steps", type=int, default=700)
+    ap.add_argument("--baf-steps", type=int, default=350)
+    ap.add_argument("--calib-images", type=int, default=192)
+    ap.add_argument("--force-train", action="store_true")
+    args = ap.parse_args()
+
+    out = os.path.abspath(args.out_dir)
+    golden = os.path.join(out, "golden")
+    cache = os.path.join(out, "cache")
+    for d in (out, golden, cache):
+        os.makedirs(d, exist_ok=True)
+
+    t0 = time.time()
+    weights_path = os.path.join(cache, "weights.npz")
+    pairs = [(c, 8) for c in C_SWEEP] + [
+        (C_FOR_N_SWEEP, n) for n in N_SWEEP if n != 8
+    ]
+
+    if os.path.exists(weights_path) and not args.force_train:
+        print(f"[aot] loading cached weights from {weights_path}")
+        det_params, baf_models = load_weights(weights_path)
+        st = json.load(open(os.path.join(out, "channel_stats.json")))
+        order = st["order"]
+    else:
+        det_params = train.train_detector(steps=args.det_steps)
+        print(f"[aot] channel statistics over {args.calib_images} images ...")
+        st = stats.channel_stats(det_params, images=args.calib_images)
+        order = st["order"]
+        with open(os.path.join(out, "channel_stats.json"), "w") as f:
+            json.dump(st, f, indent=1)
+        z_pool = train.compute_z_pool(det_params, count=768)
+        baf_models = {}
+        for c, n in pairs:
+            sel = tuple(order[:c])
+            baf_models[(c, n)] = train.train_baf(
+                det_params, sel, n, z_pool, steps=args.baf_steps
+            )
+        save_weights(weights_path, det_params, baf_models)
+        # training-time validation (the authoritative eval lives in Rust)
+        from . import evalpy
+
+        val_map = evalpy.evaluate_detector(det_params, images=64)
+        print(f"[aot] detector val mAP@0.5 (python twin) = {val_map:.4f}")
+    print(f"[aot] weights ready ({time.time() - t0:.1f}s)")
+
+    # ---- goldens ----
+    write_prng_golden(os.path.join(golden, "prng.json"))
+    write_dataset_golden(golden)
+    write_kernel_goldens(golden)
+    write_pipeline_goldens(golden, det_params, baf_models, order)
+    print(f"[aot] goldens written ({time.time() - t0:.1f}s)")
+
+    # ---- HLO export ----
+    manifest: Dict = {
+        "version": 1,
+        "image_size": D.IMG,
+        "grid": det.GRID,
+        "cell": det.CELL,
+        "anchors": [list(a) for a in det.ANCHORS],
+        "num_classes": det.NUM_CLASSES,
+        "head_channels": det.HEAD_CH,
+        "p_channels": det.P_CHANNELS,
+        "q_channels": det.Q_CHANNELS,
+        "z_shape": list(det.Z_SHAPE),
+        "leaky_slope": L.LEAKY_SLOPE,
+        "artifacts": {},
+    }
+
+    def art(name: str, fn, arg_shapes: List[List[int]], extra: Dict = None):
+        path = os.path.join(out, f"{name}.hlo.txt")
+        examples = [jnp.zeros(s, jnp.float32) for s in arg_shapes]
+        export(fn, examples, path)
+        entry = {"file": f"{name}.hlo.txt", "inputs": arg_shapes}
+        if extra:
+            entry.update(extra)
+        manifest["artifacts"][name] = entry
+        print(f"[aot] exported {name} ({os.path.getsize(path) // 1024} KiB)")
+
+    img_sz = D.IMG
+    zs = det.Z_SHAPE
+    for b in BATCHES:
+        art(
+            f"frontend_b{b}",
+            lambda i: det.frontend(det_params, i),
+            [[b, img_sz, img_sz, 3]],
+            {"output": [b, *zs], "stage": "frontend", "batch": b},
+        )
+        art(
+            f"tail_b{b}",
+            lambda zt: det.tail(det_params, zt),
+            [[b, *zs]],
+            {"output": [b, det.GRID, det.GRID, det.HEAD_CH], "stage": "tail", "batch": b},
+        )
+        art(
+            f"monolith_b{b}",
+            lambda i: det.forward(det_params, i)[0],
+            [[b, img_sz, img_sz, 3]],
+            {
+                "output": [b, det.GRID, det.GRID, det.HEAD_CH],
+                "stage": "monolith",
+                "batch": b,
+            },
+        )
+
+    for (c, n), params in sorted(baf_models.items()):
+        sel = tuple(order[:c])
+        batches = BATCHES if (c, n) == (C_FOR_N_SWEEP, 8) else (1,)
+        for b in batches:
+            art(
+                f"baf_c{c}_n{n}_b{b}",
+                lambda zc, p=params, s=sel: B.predict(
+                    p, det_params, zc, s, use_pallas=True
+                ),
+                [[b, zs[0], zs[1], c]],
+                {
+                    "output": [b, *zs],
+                    "stage": "baf",
+                    "c": c,
+                    "n": n,
+                    "batch": b,
+                    "sel": list(sel),
+                },
+            )
+
+    # Fused cloud graph (ablation E6): BaF + in-graph Eq.6 consolidation +
+    # tail in a single HLO — uses the Pallas consolidate kernel.
+    c, n = C_FOR_N_SWEEP, 8
+    sel = tuple(order[:c])
+    params = baf_models[(c, n)]
+
+    def fused(zc, qf, mm):
+        z_tilde = B.predict(params, det_params, zc, sel, use_pallas=True)
+        zt_sel = jnp.transpose(z_tilde[0][:, :, jnp.asarray(sel)], (2, 0, 1))
+        cons = kcons.consolidate(zt_sel, qf.astype(jnp.int32)[0], mm, n)
+        z_final = z_tilde.at[0, :, :, jnp.asarray(sel)].set(cons)
+        return det.tail(det_params, z_final)
+
+    path = os.path.join(out, f"fused_c{c}_n{n}_b1.hlo.txt")
+    export(
+        fused,
+        [
+            jnp.zeros((1, zs[0], zs[1], c), jnp.float32),
+            jnp.zeros((1, c, zs[0], zs[1]), jnp.float32),
+            jnp.zeros((c, 2), jnp.float32),
+        ],
+        path,
+    )
+    manifest["artifacts"][f"fused_c{c}_n{n}_b1"] = {
+        "file": f"fused_c{c}_n{n}_b1.hlo.txt",
+        "inputs": [[1, zs[0], zs[1], c], [1, c, zs[0], zs[1]], [c, 2]],
+        "output": [1, det.GRID, det.GRID, det.HEAD_CH],
+        "stage": "fused",
+        "c": c,
+        "n": n,
+        "batch": 1,
+        "sel": list(sel),
+    }
+    print(f"[aot] exported fused_c{c}_n{n}_b1")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

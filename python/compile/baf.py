@@ -1,0 +1,97 @@
+"""The Back-and-Forth (BaF) predictor (paper §3.3, Fig. 2).
+
+Backward half: inverse BN of the C received channels, then a small
+trainable deconvolution network — four 3x3 conv layers with PReLU
+activations (identity on the last), the first preceded by a 2x nearest
+upsample to bridge the stride-2 resolution gap — producing X-tilde, an
+estimate of *all* Q input channels of the split layer.
+
+Forward half: the split layer's own frozen pre-trained conv + BN applied
+to X-tilde, producing Z-tilde — estimates of all P BN-output channels.
+At export time the forward half runs through the L1 Pallas conv_bn kernel
+so it lowers into the same HLO artifact.
+
+Only the deconv-net (and its PReLU slopes) is trainable; the base
+detector is never retrained — the paper's central deployment claim.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import detector
+from . import layers as L
+from .kernels import conv_bn as kconv
+
+# Deconv-net widths (paper: 4 conv layers; ours sized for Q=32 outputs).
+HIDDEN = (48, 48, 32)
+
+
+def init(key, c: int) -> Dict:
+    """Initialize a BaF deconv-net taking C input channels."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    q = detector.Q_CHANNELS
+    return {
+        "c1": L.conv_init(k1, 3, 3, c, HIDDEN[0]),
+        "p1": L.prelu_init(HIDDEN[0]),
+        "c2": L.conv_init(k2, 3, 3, HIDDEN[0], HIDDEN[1]),
+        "p2": L.prelu_init(HIDDEN[1]),
+        "c3": L.conv_init(k3, 3, 3, HIDDEN[1], HIDDEN[2]),
+        "p3": L.prelu_init(HIDDEN[2]),
+        "c4": L.conv_init(k4, 3, 3, HIDDEN[2], q),  # identity activation
+    }
+
+
+def backward_predict(
+    baf_params: Dict, z_hat_c: jnp.ndarray, split_bn: Dict, sel: Sequence[int]
+) -> jnp.ndarray:
+    """z-hat_C (N,16,16,C) -> X-tilde (N,32,32,Q): the backward half.
+
+    ``sel`` are the (static) indices of the transmitted channels; the
+    inverse BN uses the split layer's per-channel parameters restricted to
+    that subset.
+    """
+    sel = jnp.asarray(sel, jnp.int32)
+    sub_bn = {k: split_bn[k][sel] for k in ("gamma", "beta", "mean", "var")}
+    u = L.bn_inverse(z_hat_c, sub_bn)
+    h = L.upsample2x(u)
+    h = L.prelu(L.conv2d(h, baf_params["c1"]["w"]), baf_params["p1"])
+    h = L.prelu(L.conv2d(h, baf_params["c2"]["w"]), baf_params["p2"])
+    h = L.prelu(L.conv2d(h, baf_params["c3"]["w"]), baf_params["p3"])
+    return L.conv2d(h, baf_params["c4"]["w"])  # identity activation
+
+
+def forward_predict(
+    det_params: Dict, x_tilde: jnp.ndarray, use_pallas: bool = False
+) -> jnp.ndarray:
+    """X-tilde -> Z-tilde via the frozen split-layer conv + BN."""
+    p = det_params[detector.SPLIT]
+    bn = p["bn"]
+    if use_pallas:
+        return kconv.conv3x3s2_bn(
+            x_tilde, p["conv"]["w"], bn["gamma"], bn["beta"], bn["mean"], bn["var"]
+        )
+    u = L.conv2d(x_tilde, p["conv"]["w"], 2)
+    return L.bn_apply(u, bn)
+
+
+def predict(
+    baf_params: Dict,
+    det_params: Dict,
+    z_hat_c: jnp.ndarray,
+    sel: Sequence[int],
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Full BaF prediction: decoded subset -> Z-tilde (all P channels)."""
+    bn = det_params[detector.SPLIT]["bn"]
+    x_tilde = backward_predict(baf_params, z_hat_c, bn, sel)
+    return forward_predict(det_params, x_tilde, use_pallas=use_pallas)
+
+
+def charbonnier(a: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-3) -> jnp.ndarray:
+    """Eq. 7 loss: sum of sqrt((a-b)^2 + eps^2) over all elements."""
+    d = a - b
+    return jnp.sum(jnp.sqrt(d * d + eps * eps))

@@ -1,0 +1,160 @@
+"""ShapeWorld — deterministic procedural object-detection dataset.
+
+This is the COCO-2014 substitute (see DESIGN.md §2). Images are 64x64x3
+float32 in [0,1]: a two-color diagonal-gradient background, 1..4 filled
+shapes (circle / square / triangle / cross) of random size, position and
+color, plus low-amplitude uniform noise. Ground truth is a list of
+axis-aligned boxes (x0, y0, x1, y1, class), x1/y1 exclusive.
+
+DETERMINISM CONTRACT (shared with rust/src/data/shapeworld.rs):
+
+SplitMix64 is counter-based: draw ``j`` (0-indexed) of a stream with seed
+``s`` is ``mix(s + (j+1)*GAMMA)``, so the stream can be generated either
+sequentially (Rust) or vectorized (NumPy) with identical outputs.
+
+Per-image stream seed: ``img_seed = dataset_seed XOR (i * GAMMA mod 2^64)``
+for image index ``i``.
+
+Draw layout (indices within the per-image stream):
+  0..2   background color c0 (r,g,b) : f32 draws, scaled 0.10 + 0.55*f
+  3..5   background color c1 (r,g,b) : same scaling
+  6      nshapes = range(1, 5)
+  7+k*8 .. 7+k*8+7  shape k (slots always reserved for k = 0..3):
+         +0 class  = range(0, 4)         (0 circle, 1 square, 2 tri, 3 cross)
+         +1 size   = range(10, 29)
+         +2 cx     = range(half+1, 64-half)   where half = size // 2
+         +3 cy     = range(half+1, 64-half)
+         +4..6 color (r,g,b) : f32 draws, scaled 0.25 + 0.75*f
+         +7 spare (always drawn, reserved)
+  39 .. 39+64*64*3-1  per-pixel noise, row-major (y, x, channel):
+         img += (f - 0.5) * 0.04, then clip to [0, 1]
+
+Geometry (all integer; half = size//2; x is column, y is row):
+  circle   : (x-cx)^2 + (y-cy)^2 <= half^2
+  square   : |x-cx| <= half and |y-cy| <= half
+  triangle : dy = y - (cy-half); 0 <= dy <= 2*half and |x-cx| <= dy // 2
+  cross    : t = max(1, half//3);
+             (|x-cx| <= t and |y-cy| <= half) or (|y-cy| <= t and |x-cx| <= half)
+  box      : (cx-half, cy-half, cx+half+1, cy+half+1)
+
+Background: bg[y,x,c] = c0[c] + (c1[c]-c0[c]) * ((x+y) * (1/126)) in f32.
+Shapes painted in order (later shapes overdraw earlier ones); all shapes
+are kept as ground truth regardless of occlusion.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+from .prng import GAMMA, MASK64, MIX1, MIX2
+
+IMG = 64
+CHANNELS = 3
+NUM_CLASSES = 4
+CLASS_NAMES = ("circle", "square", "triangle", "cross")
+_NOISE_BASE = 39  # first draw index of the noise block
+_NOISE_LEN = IMG * IMG * CHANNELS
+
+
+def _mix(z: np.ndarray) -> np.ndarray:
+    """SplitMix64 output function, vectorized over uint64 arrays."""
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(MIX1)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(MIX2)
+    return z ^ (z >> np.uint64(31))
+
+
+def stream(seed: int, start: int, count: int) -> np.ndarray:
+    """Draws [start, start+count) of the SplitMix64 stream with ``seed``."""
+    idx = np.arange(start + 1, start + count + 1, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        return _mix(np.uint64(seed & MASK64) + idx * np.uint64(GAMMA))
+
+
+def to_f32(u: np.ndarray) -> np.ndarray:
+    """u64 -> f32 in [0,1) with 24-bit precision (matches prng.next_f32)."""
+    return (u >> np.uint64(40)).astype(np.float32) * np.float32(1.0 / (1 << 24))
+
+
+def to_range(u: np.ndarray, lo: int, hi: int) -> np.ndarray:
+    return (np.uint64(lo) + u % np.uint64(hi - lo)).astype(np.int64)
+
+
+def image_seed(dataset_seed: int, index: int) -> int:
+    return (dataset_seed ^ ((index * GAMMA) & MASK64)) & MASK64
+
+
+@dataclass
+class Sample:
+    """One ShapeWorld image with its ground truth."""
+
+    image: np.ndarray  # (64, 64, 3) float32 in [0, 1]
+    boxes: np.ndarray  # (n, 5) float32: x0, y0, x1, y1, class
+
+
+def generate(dataset_seed: int, index: int) -> Sample:
+    """Generate image ``index`` of the dataset with ``dataset_seed``."""
+    s = image_seed(dataset_seed, index)
+    head = stream(s, 0, _NOISE_BASE)
+
+    c0 = np.float32(0.10) + np.float32(0.55) * to_f32(head[0:3])
+    c1 = np.float32(0.10) + np.float32(0.55) * to_f32(head[3:6])
+    nshapes = int(to_range(head[6:7], 1, 5)[0])
+
+    # Background gradient.
+    xs = np.arange(IMG, dtype=np.float32)
+    t = (xs[None, :] + xs[:, None]) * np.float32(1.0 / 126.0)  # (y, x)
+    img = c0[None, None, :] + (c1 - c0)[None, None, :] * t[:, :, None]
+    img = img.astype(np.float32)
+
+    yy, xx = np.meshgrid(np.arange(IMG), np.arange(IMG), indexing="ij")
+    boxes: List[Tuple[float, float, float, float, float]] = []
+    for k in range(nshapes):
+        base = 7 + k * 8
+        cls = int(to_range(head[base : base + 1], 0, 4)[0])
+        size = int(to_range(head[base + 1 : base + 2], 10, 29)[0])
+        half = size // 2
+        cx = int(to_range(head[base + 2 : base + 3], half + 1, IMG - half)[0])
+        cy = int(to_range(head[base + 3 : base + 4], half + 1, IMG - half)[0])
+        color = np.float32(0.25) + np.float32(0.75) * to_f32(head[base + 4 : base + 7])
+        # slot +7 is reserved (drawn but unused) — keeps the layout static.
+
+        dx = xx - cx
+        dy_c = yy - cy
+        if cls == 0:  # circle
+            mask = dx * dx + dy_c * dy_c <= half * half
+        elif cls == 1:  # square
+            mask = (np.abs(dx) <= half) & (np.abs(dy_c) <= half)
+        elif cls == 2:  # triangle
+            dy = yy - (cy - half)
+            mask = (dy >= 0) & (dy <= 2 * half) & (np.abs(dx) <= dy // 2)
+        else:  # cross
+            tbar = max(1, half // 3)
+            mask = ((np.abs(dx) <= tbar) & (np.abs(dy_c) <= half)) | (
+                (np.abs(dy_c) <= tbar) & (np.abs(dx) <= half)
+            )
+        img[mask] = color[None, :]
+        boxes.append(
+            (
+                float(cx - half),
+                float(cy - half),
+                float(cx + half + 1),
+                float(cy + half + 1),
+                float(cls),
+            )
+        )
+
+    noise = to_f32(stream(s, _NOISE_BASE, _NOISE_LEN)).reshape(IMG, IMG, CHANNELS)
+    img = np.clip(img + (noise - np.float32(0.5)) * np.float32(0.04), 0.0, 1.0)
+    return Sample(image=img.astype(np.float32), boxes=np.asarray(boxes, np.float32))
+
+
+def batch(dataset_seed: int, start: int, count: int):
+    """Generate ``count`` consecutive samples; images stacked, boxes listed."""
+    samples = [generate(dataset_seed, start + i) for i in range(count)]
+    return (
+        np.stack([s.image for s in samples]),
+        [s.boxes for s in samples],
+    )

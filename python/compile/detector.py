@@ -1,0 +1,163 @@
+"""YOLO-Lite: the scaled-down YOLO-v3 stand-in (DESIGN.md §2).
+
+An 8-layer Darknet-style single-scale detector over 64x64x3 ShapeWorld
+images. Structurally it preserves everything the BaF method relies on:
+
+  * the split layer ``l`` = layer 4 is a 3x3 *stride-2* conv followed by BN,
+    and the network is cut *after* BN, *before* the LeakyReLU activation;
+  * no residual connection bypasses the split layer;
+  * the split-layer input X is 32x32x32 (post-activation of layer 3) and the
+    BN output Z is 16x16x64 — the same 4x resolution ratio and channel
+    expansion the paper's l=12 has (64x64x256 from 128x128x128).
+
+Head: 8x8 grid, B=2 anchors, 4 classes -> 8x8x(2*(5+4)) = 8x8x18 raw output.
+Anchor boxes are (16,16) and (40,40) pixels, chosen to bracket ShapeWorld's
+11..29-pixel shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+# (name, cout, stride); all convs 3x3 except the 1x1 head.
+CFG: List[Tuple[str, int, int]] = [
+    ("l1", 16, 1),  # 64x64x16
+    ("l2", 32, 2),  # 32x32x32
+    ("l3", 32, 1),  # 32x32x32
+    ("l4", 64, 2),  # 16x16x64   <- SPLIT layer l: conv + BN, cut pre-activation
+    ("l5", 64, 1),  # 16x16x64
+    ("l6", 128, 2),  # 8x8x128
+    ("l7", 64, 1),  # 8x8x64
+]
+SPLIT = "l4"
+SPLIT_INDEX = 3  # position of the split layer in CFG
+
+GRID = 8
+CELL = 8  # pixels per cell (64 / GRID)
+NUM_ANCHORS = 2
+ANCHORS = ((16.0, 16.0), (40.0, 40.0))
+NUM_CLASSES = 4
+HEAD_CH = NUM_ANCHORS * (5 + NUM_CLASSES)  # 18
+
+# Shapes at the split (the paper's 64x64x256 analog).
+X_SHAPE = (32, 32, 32)  # layer-l input (post-sigma of l3)
+Z_SHAPE = (16, 16, 64)  # layer-l BN output (pre-sigma)
+P_CHANNELS = Z_SHAPE[2]
+Q_CHANNELS = X_SHAPE[2]
+
+
+def init(key) -> Dict:
+    """Initialize all detector parameters."""
+    params: Dict = {}
+    cin = 3
+    keys = jax.random.split(key, len(CFG) + 1)
+    for k, (name, cout, _stride) in zip(keys, CFG):
+        params[name] = {"conv": L.conv_init(k, 3, 3, cin, cout), "bn": L.bn_init(cout)}
+        cin = cout
+    params["head"] = {
+        "conv": L.conv_init(keys[-1], 1, 1, cin, HEAD_CH),
+        "bias": jnp.zeros((HEAD_CH,), jnp.float32),
+    }
+    return params
+
+
+def _block(x, p, stride, train: bool):
+    """conv -> BN -> LeakyReLU. Returns (y, updated_bn)."""
+    u = L.conv2d(x, p["conv"]["w"], stride)
+    if train:
+        z, new_bn = L.bn_train(u, p["bn"])
+    else:
+        z, new_bn = L.bn_apply(u, p["bn"]), p["bn"]
+    return L.leaky_relu(z), new_bn
+
+
+def forward(params: Dict, img: jnp.ndarray, train: bool = False):
+    """Full monolithic forward pass: image -> raw head (cloud-only path).
+
+    Returns (head, new_params) where new_params carries EMA'd BN stats when
+    ``train`` is True (identical to ``params`` otherwise).
+    """
+    x = img
+    new_params = dict(params)
+    for name, _cout, stride in CFG:
+        x, new_bn = _block(x, params[name], stride, train)
+        new_params[name] = {"conv": params[name]["conv"], "bn": new_bn}
+    head = L.conv2d(x, params["head"]["conv"]["w"], 1) + params["head"]["bias"]
+    return head, new_params
+
+
+def frontend(params: Dict, img: jnp.ndarray) -> jnp.ndarray:
+    """Edge half: image -> Z, the split-layer BN output (PRE-activation).
+
+    This is what runs on the mobile device: layers 1..l-1 complete
+    (conv+BN+sigma), then layer l's conv and BN only — the activation is
+    applied cloud-side after reconstruction (Fig. 1 of the paper).
+    """
+    x = img
+    for name, _cout, stride in CFG[:SPLIT_INDEX]:
+        x, _ = _block(x, params[name], stride, train=False)
+    p = params[SPLIT]
+    u = L.conv2d(x, p["conv"]["w"], 2)
+    return L.bn_apply(u, p["bn"])
+
+
+def frontend_with_x(params: Dict, img: jnp.ndarray):
+    """Like ``frontend`` but also returns X, the split-layer input.
+
+    Only used offline: channel-selection statistics (Eq. 2) and BaF
+    training targets need X; it never leaves the build machine.
+    """
+    x = img
+    for name, _cout, stride in CFG[:SPLIT_INDEX]:
+        x, _ = _block(x, params[name], stride, train=False)
+    p = params[SPLIT]
+    u = L.conv2d(x, p["conv"]["w"], 2)
+    return L.bn_apply(u, p["bn"]), x
+
+
+def tail(params: Dict, z_tilde: jnp.ndarray) -> jnp.ndarray:
+    """Cloud half: reconstructed Z-tilde (pre-activation) -> raw head.
+
+    The first op is the split layer's activation sigma(.), then the
+    remaining layers run unchanged with pre-trained weights.
+    """
+    x = L.leaky_relu(z_tilde)
+    for name, _cout, stride in CFG[SPLIT_INDEX + 1 :]:
+        x, _ = _block(x, params[name], stride, train=False)
+    return L.conv2d(x, params["head"]["conv"]["w"], 1) + params["head"]["bias"]
+
+
+def decode_head(head: jnp.ndarray) -> jnp.ndarray:
+    """Raw head (N,8,8,18) -> (N, 8*8*2, 6) boxes: x0,y0,x1,y1,score,class.
+
+    Box parameterization is YOLO-v3's: sigmoid offsets within the cell,
+    exponential anchor scaling. Score = objectness * max class prob.
+    NMS and thresholding live in the Rust eval module (and a NumPy twin in
+    train.py for training-time validation).
+    """
+    n = head.shape[0]
+    h = head.reshape(n, GRID, GRID, NUM_ANCHORS, 5 + NUM_CLASSES)
+    gy, gx = jnp.meshgrid(
+        jnp.arange(GRID, dtype=jnp.float32),
+        jnp.arange(GRID, dtype=jnp.float32),
+        indexing="ij",
+    )
+    aw = jnp.asarray([a[0] for a in ANCHORS], jnp.float32)
+    ah = jnp.asarray([a[1] for a in ANCHORS], jnp.float32)
+    cx = (gx[None, :, :, None] + L.sigmoid(h[..., 0])) * CELL
+    cy = (gy[None, :, :, None] + L.sigmoid(h[..., 1])) * CELL
+    bw = aw[None, None, None, :] * jnp.exp(jnp.clip(h[..., 2], -6, 6))
+    bh = ah[None, None, None, :] * jnp.exp(jnp.clip(h[..., 3], -6, 6))
+    obj = L.sigmoid(h[..., 4])
+    cls_prob = jax.nn.softmax(h[..., 5:], axis=-1)
+    cls_id = jnp.argmax(cls_prob, axis=-1).astype(jnp.float32)
+    score = obj * jnp.max(cls_prob, axis=-1)
+    boxes = jnp.stack(
+        [cx - bw / 2, cy - bh / 2, cx + bw / 2, cy + bh / 2, score, cls_id], axis=-1
+    )
+    return boxes.reshape(n, GRID * GRID * NUM_ANCHORS, 6)

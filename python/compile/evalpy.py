@@ -1,0 +1,114 @@
+"""Training-time detection evaluation (NumPy twin of rust/src/eval).
+
+Used by `aot.py --validate` to sanity-check the detector before export
+(the authoritative evaluation lives in Rust where the serving stack is);
+the two implementations agree on the metric definition: greedy matching
+at IoU 0.5, 101-point interpolated AP, classes absent from GT excluded.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def iou(a: np.ndarray, b: np.ndarray) -> float:
+    ix0 = max(a[0], b[0])
+    iy0 = max(a[1], b[1])
+    ix1 = min(a[2], b[2])
+    iy1 = min(a[3], b[3])
+    inter = max(0.0, ix1 - ix0) * max(0.0, iy1 - iy0)
+    area_a = max(0.0, a[2] - a[0]) * max(0.0, a[3] - a[1])
+    area_b = max(0.0, b[2] - b[0]) * max(0.0, b[3] - b[1])
+    union = area_a + area_b - inter
+    return inter / union if union > 0 else 0.0
+
+
+def nms(boxes: np.ndarray, iou_thresh: float = 0.45, topk: int = 50) -> np.ndarray:
+    """boxes: (n, 6) x0,y0,x1,y1,score,class — greedy per-class NMS."""
+    if boxes.size == 0:
+        return boxes.reshape(0, 6)
+    order = np.argsort(-boxes[:, 4])
+    keep: List[np.ndarray] = []
+    for i in order:
+        b = boxes[i]
+        if any(k[5] == b[5] and iou(k, b) > iou_thresh for k in keep):
+            continue
+        keep.append(b)
+        if len(keep) >= topk:
+            break
+    return np.stack(keep) if keep else boxes[:0]
+
+
+def average_precision(
+    dets: Sequence[np.ndarray], gts: Sequence[np.ndarray], cls: int, thresh: float
+):
+    """dets/gts: per-image arrays (n,6)/(m,5). Returns AP or None."""
+    records = []  # (score, img, box)
+    total_gt = 0
+    for i, (d, g) in enumerate(zip(dets, gts)):
+        total_gt += int((g[:, 4] == cls).sum()) if g.size else 0
+        if d.size:
+            for row in d[d[:, 5] == cls]:
+                records.append((float(row[4]), i, row))
+    if total_gt == 0:
+        return None
+    records.sort(key=lambda r: -r[0])
+    matched = [np.zeros(len(g), bool) for g in gts]
+    tp = np.zeros(len(records), bool)
+    for di, (_s, img, box) in enumerate(records):
+        g = gts[img]
+        best, best_iou = -1, thresh
+        for gi in range(len(g)):
+            if g[gi, 4] != cls or matched[img][gi]:
+                continue
+            v = iou(box, g[gi])
+            if v >= best_iou:
+                best_iou, best = v, gi
+        if best >= 0:
+            matched[img][best] = True
+            tp[di] = True
+    cum_tp = np.cumsum(tp)
+    recall = cum_tp / total_gt
+    precision = cum_tp / np.arange(1, len(records) + 1)
+    ap = 0.0
+    for r in np.linspace(0, 1, 101):
+        mask = recall >= r
+        ap += precision[mask].max() if mask.any() else 0.0
+    return ap / 101.0
+
+
+def mean_ap(
+    dets: Sequence[np.ndarray],
+    gts: Sequence[np.ndarray],
+    num_classes: int,
+    thresh: float = 0.5,
+) -> float:
+    aps = [average_precision(dets, gts, c, thresh) for c in range(num_classes)]
+    aps = [a for a in aps if a is not None]
+    return float(np.mean(aps)) if aps else 0.0
+
+
+def evaluate_detector(det_params, images: int = 64, seed: int = 0xE7A1) -> float:
+    """mAP@0.5 of the detector over a ShapeWorld split (same split family
+    as the Rust eval set when seed = 0xE7A1)."""
+    import jax
+    import jax.numpy as jnp
+
+    from . import dataset as D
+    from . import detector as det
+
+    fwd = jax.jit(lambda i: det.forward(det_params, i)[0])
+    dets, gts = [], []
+    for start in range(0, images, 32):
+        cnt = min(32, images - start)
+        imgs, boxes = D.batch(seed, start, cnt)
+        heads = fwd(jnp.asarray(imgs))
+        decoded = np.asarray(det.decode_head(heads))
+        for i in range(cnt):
+            d = decoded[i]
+            d = d[d[:, 4] >= 0.05]
+            dets.append(nms(d))
+            gts.append(boxes[i])
+    return mean_ap(dets, gts, det.NUM_CLASSES)

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles (ref)."""

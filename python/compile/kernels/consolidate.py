@@ -1,0 +1,62 @@
+"""Pallas kernel: Eq. 6 consolidation of BaF-predicted channels.
+
+For each transmitted channel p < C the cloud holds two candidate values
+per element: the BaF prediction z-tilde and the decoded bin index q. The
+paper's case split (keep z-tilde when it re-quantizes to the same bin,
+else snap to the nearest boundary of the decoded bin) is algebraically a
+clip of z-tilde to the decoded bin's interval
+
+    [m + (q - 1/2) * step,  m + (q + 1/2) * step],
+    step = (M - m) / (2^n - 1)
+
+which is what the kernel computes — one fused VPU pass per channel, no
+separate re-quantization of z-tilde. Grid: one program per channel with a
+(1, H, W) block, same schedule as the quantize kernel.
+
+Always interpret=True (see quantize.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(zt_ref, q_ref, mm_ref, out_ref, *, levels: float):
+    zt = zt_ref[...]
+    q = q_ref[...].astype(jnp.float32)
+    m = mm_ref[0, 0]
+    mx = mm_ref[0, 1]
+    span = mx - m
+    step = jnp.where(span > 0, span, 1.0) / levels
+    lo = m + (q - 0.5) * step
+    hi = m + (q + 0.5) * step
+    out = jnp.clip(zt, lo, hi)
+    out_ref[...] = jnp.where(span > 0, out, m)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def consolidate(
+    z_tilde: jnp.ndarray, q: jnp.ndarray, minmax: jnp.ndarray, n: int
+) -> jnp.ndarray:
+    """Consolidate (C,H,W) BaF predictions against decoded bins.
+
+    Matches ref.consolidate_ref elementwise.
+    """
+    c, h, w = z_tilde.shape
+    levels = float(2**n - 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, levels=levels),
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h, w), jnp.float32),
+        interpret=True,
+    )(z_tilde, q, minmax)

@@ -1,0 +1,91 @@
+"""Pallas kernel: the split layer's 3x3 stride-2 conv + folded BN.
+
+This is the compute hot-spot of the whole pipeline: it runs once on the
+edge (frontend, producing Z) and once per request in the cloud (the
+*forward* half of BaF prediction, §3.3, turning the deconv-net output
+X-tilde into Z-tilde with the frozen pre-trained weights).
+
+TPU mapping (§Hardware-Adaptation): instead of a CUDA threadblock per
+output tile, the kernel is written as 9 shifted MXU matmuls — for each of
+the 3x3 taps (ki,kj) the stride-2 slice of the padded input, shaped
+(Ho*Wo, Cin), is multiplied into w[ki,kj] of shape (Cin, Cout) and
+accumulated. BN is folded into the matmul epilogue as a per-Cout scale and
+shift computed from (gamma, beta, mean, var), so the kernel writes the BN
+output directly — this is exactly the conv+BN fusion the serving path
+needs, and it keeps the accumulator in VMEM for the whole channel block.
+
+Grid: one program per batch element (the 33x33x32 padded input plus the
+16x16x64 accumulator are a few hundred KiB — comfortably VMEM-resident).
+
+Always interpret=True (see quantize.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN_EPS = 1e-5
+
+
+def _kernel(x_ref, w_ref, scale_ref, shift_ref, o_ref, *, ho: int, wo: int):
+    x = x_ref[0]  # (Hp, Wp, Cin) padded input
+    w = w_ref[...]  # (3, 3, Cin, Cout)
+    cout = w.shape[3]
+    acc = jnp.zeros((ho, wo, cout), jnp.float32)
+    for ki in range(3):
+        for kj in range(3):
+            # stride-2 slice of the padded input for this tap:
+            # rows ki, ki+2, ..., ki+2*(ho-1)
+            tap = jax.lax.slice(
+                x,
+                (ki, kj, 0),
+                (ki + 2 * (ho - 1) + 1, kj + 2 * (wo - 1) + 1, x.shape[2]),
+                (2, 2, 1),
+            )  # (ho, wo, cin)
+            acc += jnp.dot(
+                tap, w[ki, kj], preferred_element_type=jnp.float32
+            )  # (ho, wo, cout)
+    # BN folded as epilogue: scale/shift precomputed outside the kernel.
+    o_ref[0] = acc * scale_ref[...] + shift_ref[...]
+
+
+@jax.jit
+def conv3x3s2_bn(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    gamma: jnp.ndarray,
+    beta: jnp.ndarray,
+    mean: jnp.ndarray,
+    var: jnp.ndarray,
+) -> jnp.ndarray:
+    """SAME 3x3 stride-2 conv + inference BN. x: (N,H,W,Cin), w: HWIO.
+
+    H and W must be even (true everywhere in this network). Matches
+    ref.conv_bn_ref(x, w, ..., stride=2).
+    """
+    n, h, wdt, cin = x.shape
+    cout = w.shape[3]
+    ho, wo = h // 2, wdt // 2
+    # SAME for even extents with k=3, s=2: pad 0 before, 1 after.
+    xp = jnp.pad(x, ((0, 0), (0, 1), (0, 1), (0, 0)))
+    hp, wp = h + 1, wdt + 1
+    inv = jax.lax.rsqrt(var + BN_EPS)
+    scale = gamma * inv  # (Cout,)
+    shift = beta - mean * scale  # (Cout,)
+    return pl.pallas_call(
+        functools.partial(_kernel, ho=ho, wo=wo),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, 3, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), jnp.float32),
+        interpret=True,
+    )(xp, w, scale, shift)

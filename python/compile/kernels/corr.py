@@ -1,0 +1,100 @@
+"""Pallas kernel: Eq. 2 correlation statistic as MXU-tiled Gram matmul.
+
+The GPU-minded formulation of Eq. 2 is a per-(p,q,s) reduction. On TPU the
+right shape is a Gram matrix: with Z in (P, N) (vectorized BN-output
+channels) and X in (S, N) (S = 4*Q vectorized polyphase downsamplings of
+the layer input), the O(P*S*N) work is G = Z @ X^T — a classic tiled
+matmul the MXU systolic array eats — while means and norms are O((P+S)*N)
+rank-1 corrections done outside:
+
+    pearson(p,s) = (G[p,s] - N * mean_z[p] * mean_x[s])
+                   / (||z_p - mean|| * ||x_s - mean||)
+
+The kernel below is the standard three-axis blocked matmul with an
+accumulation grid over N; block sizes adapt to the operand shapes (tests
+sweep ragged shapes via padding in the wrapper).
+
+Always interpret=True (see quantize.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(z_ref, x_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        z_ref[...], x_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` not exceeding ``target``."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@jax.jit
+def gram(z: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """G = z @ x.T via the blocked Pallas kernel. z: (P,N), x: (S,N)."""
+    p, n = z.shape
+    s, n2 = x.shape
+    assert n == n2, "row-vector lengths must agree"
+    bp = _pick_block(p, 32)
+    bs = _pick_block(s, 64)
+    bn = _pick_block(n, 128)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(p // bp, s // bs, n // bn),
+        in_specs=[
+            pl.BlockSpec((bp, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bs, bn), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bp, bs), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, s), jnp.float32),
+        interpret=True,
+    )(z, x)
+
+
+@jax.jit
+def abs_pearson(z: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Full Eq. 2 statistic: |pearson| between all row pairs, (P, S).
+
+    Gram matrix on the (Pallas) MXU path, rank-1 corrections in plain jnp.
+    Matches ref.corr_ref.
+    """
+    n = z.shape[1]
+    g = gram(z, x)
+    mz = jnp.mean(z, axis=1)
+    mx = jnp.mean(x, axis=1)
+    num = g - float(n) * mz[:, None] * mx[None, :]
+    zn = jnp.sqrt(jnp.maximum(jnp.sum(z * z, axis=1) - float(n) * mz * mz, 0.0))
+    xn = jnp.sqrt(jnp.maximum(jnp.sum(x * x, axis=1) - float(n) * mx * mx, 0.0))
+    denom = zn[:, None] * xn[None, :]
+    return jnp.where(denom > 0, jnp.abs(num) / jnp.where(denom > 0, denom, 1.0), 0.0)
+
+
+def polyphase(x_img: jnp.ndarray) -> jnp.ndarray:
+    """(H, W, Q) layer-l input -> (4*Q, H*W/4) polyphase row vectors.
+
+    The four stride-2 offsets s = (0,0),(0,1),(1,0),(1,1) of §3.1 — each
+    downsampled X_q matches Z_p's resolution. Row order: s-major, then q,
+    i.e. row index = s * Q + q.
+    """
+    h, w, q = x_img.shape
+    rows = []
+    for si in range(2):
+        for sj in range(2):
+            sub = x_img[si::2, sj::2, :]  # (h/2, w/2, q)
+            rows.append(sub.reshape(-1, q).T)  # (q, h*w/4)
+    return jnp.concatenate(rows, axis=0)

@@ -1,0 +1,92 @@
+"""Pallas kernel: fused per-channel min/max + n-bit quantization (Eq. 4).
+
+Grid layout: one program per channel (the quantizer in Eq. 4 is strictly
+per-channel), each program owning a (1, H, W) VMEM block. The min/max
+reduction, f16 side-info rounding, scale computation and rounding all
+happen inside the same block — on TPU this means a single HBM->VMEM read
+of the channel and two writes (q and the 2-element minmax), instead of the
+three passes a naive min / max / quantize composition would do.
+
+TPU notes (§Hardware-Adaptation): H*W here is 16*16 = 256 f32 = 1 KiB per
+channel — far under VMEM; the lane dimension (W) is below 128 so interpret
+mode is the only functional target, but the BlockSpec already expresses
+the HBM<->VMEM schedule a Mosaic build would use with W padded to 128.
+
+Always invoked with interpret=True: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import F16_SAFE_MAX, F16_SAFE_MIN
+
+
+def _kernel(z_ref, q_ref, mm_ref, *, levels: float):
+    z = z_ref[...]  # (1, H, W)
+    m = jnp.clip(jnp.min(z), F16_SAFE_MIN, F16_SAFE_MAX)
+    mx = jnp.clip(jnp.max(z), F16_SAFE_MIN, F16_SAFE_MAX)
+    # Round the side info to f16 BEFORE quantizing so encoder and decoder
+    # agree bit-for-bit (the paper transmits m, M as 16-bit floats).
+    m = m.astype(jnp.float16).astype(jnp.float32)
+    mx = mx.astype(jnp.float16).astype(jnp.float32)
+    span = mx - m
+    safe = jnp.where(span > 0, span, 1.0)
+    q = jnp.round((z - m) / safe * levels)
+    q = jnp.clip(q, 0.0, levels).astype(jnp.int32)
+    q_ref[...] = jnp.where(span > 0, q, 0)
+    mm_ref[...] = jnp.stack([m, mx]).reshape(1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def quantize(z: jnp.ndarray, n: int):
+    """Quantize (C, H, W) f32 to n bits per channel.
+
+    Returns (q int32 (C,H,W), minmax f32 (C,2)); matches ref.quantize_ref.
+    """
+    c, h, w = z.shape
+    levels = float(2**n - 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, levels=levels),
+        grid=(c,),
+        in_specs=[pl.BlockSpec((1, h, w), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, h, w), jnp.int32),
+            jax.ShapeDtypeStruct((c, 2), jnp.float32),
+        ],
+        interpret=True,
+    )(z)
+
+
+def _dequant_kernel(q_ref, mm_ref, z_ref, *, levels: float):
+    q = q_ref[...].astype(jnp.float32)
+    m = mm_ref[0, 0]
+    mx = mm_ref[0, 1]
+    z_ref[...] = q / levels * (mx - m) + m
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def dequantize(q: jnp.ndarray, minmax: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Eq. 5 inverse quantization; matches ref.dequantize_ref."""
+    c, h, w = q.shape
+    levels = float(2**n - 1)
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, levels=levels),
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h, w), jnp.float32),
+        interpret=True,
+    )(q, minmax)

@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function here is the *definition* of what the corresponding kernel in
+this package must compute; pytest (python/tests/test_kernels.py) asserts
+allclose between kernel and oracle over hypothesis-generated shapes/values,
+and aot.py embeds golden vectors for the Rust side to re-check.
+
+Layout note: quantization/consolidation oracles operate channel-major
+(C, H, W) — one quantizer per channel (Eq. 4) — matching both the Pallas
+grid (one program per channel) and the Rust hot-path layout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F16_SAFE_MIN = -65504.0
+F16_SAFE_MAX = 65504.0
+
+
+def minmax_f16(z: jnp.ndarray):
+    """Per-channel min/max of (C,H,W), rounded to f16 precision (§3.2).
+
+    The paper transmits m_p and M_p as 16-bit floats (C*32 bits of side
+    info); rounding happens *before* quantization so encoder and decoder
+    use bit-identical quantizer parameters.
+    """
+    m = jnp.min(z, axis=(1, 2))
+    mx = jnp.max(z, axis=(1, 2))
+    m = jnp.clip(m, F16_SAFE_MIN, F16_SAFE_MAX).astype(jnp.float16).astype(jnp.float32)
+    mx = (
+        jnp.clip(mx, F16_SAFE_MIN, F16_SAFE_MAX)
+        .astype(jnp.float16)
+        .astype(jnp.float32)
+    )
+    # f16 rounding may move m above the true min (and M below the true max);
+    # quantization clips, so this only costs at most half a bin at the edges,
+    # exactly as in the paper's pipeline.
+    return m, mx
+
+
+def quantize_ref(z: jnp.ndarray, n: int):
+    """Eq. 4: per-channel n-bit uniform scalar quantization of (C,H,W).
+
+    Returns (q int32 in [0, 2^n-1], minmax (C,2) f32 holding f16-rounded
+    m_p, M_p). Constant channels (M == m) quantize to all-zeros.
+    """
+    m, mx = minmax_f16(z)
+    span = mx - m
+    safe = jnp.where(span > 0, span, 1.0)
+    levels = float(2**n - 1)
+    q = jnp.round((z - m[:, None, None]) / safe[:, None, None] * levels)
+    q = jnp.clip(q, 0.0, levels).astype(jnp.int32)
+    q = jnp.where(span[:, None, None] > 0, q, 0)
+    return q, jnp.stack([m, mx], axis=-1)
+
+
+def dequantize_ref(q: jnp.ndarray, minmax: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Eq. 5: inverse quantization back to f32 (C,H,W)."""
+    m = minmax[:, 0][:, None, None]
+    mx = minmax[:, 1][:, None, None]
+    levels = float(2**n - 1)
+    return q.astype(jnp.float32) / levels * (mx - m) + m
+
+
+def consolidate_ref(
+    z_tilde: jnp.ndarray, q: jnp.ndarray, minmax: jnp.ndarray, n: int
+) -> jnp.ndarray:
+    """Eq. 6: consolidation of BaF-predicted transmitted channels.
+
+    For each element of the C transmitted channels we have the decoded bin
+    index q and the BaF prediction z_tilde. If z_tilde falls in bin q it is
+    kept; otherwise it is clamped to the nearest boundary of bin q — i.e.
+    the closest value consistent with what the encoder transmitted. Bin k
+    covers [m + (k-1/2)*step, m + (k+1/2)*step] with
+    step = (M-m)/(2^n - 1), so the whole case split in Eq. 6 is a clip.
+    Constant channels (M == m) are pinned to m.
+    """
+    m = minmax[:, 0][:, None, None]
+    mx = minmax[:, 1][:, None, None]
+    levels = float(2**n - 1)
+    span = mx - m
+    step = jnp.where(span > 0, span, 1.0) / levels
+    qf = q.astype(jnp.float32)
+    lo = m + (qf - 0.5) * step
+    hi = m + (qf + 0.5) * step
+    out = jnp.clip(z_tilde, lo, hi)
+    return jnp.where(span > 0, out, m)
+
+
+def corr_ref(z: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 2 inner statistic: |pearson| between every row pair of z and x.
+
+    z: (P, N) vectorized BN-output channels; x: (S, N) vectorized polyphase
+    downsamplings of the input channels (S = 4*Q). Returns (P, S) absolute
+    correlation coefficients. Zero-variance rows yield 0 (a constant
+    channel carries no predictive signal).
+    """
+    zc = z - jnp.mean(z, axis=1, keepdims=True)
+    xc = x - jnp.mean(x, axis=1, keepdims=True)
+    num = zc @ xc.T
+    zn = jnp.linalg.norm(zc, axis=1)
+    xn = jnp.linalg.norm(xc, axis=1)
+    denom = zn[:, None] * xn[None, :]
+    return jnp.where(denom > 0, jnp.abs(num) / jnp.where(denom > 0, denom, 1.0), 0.0)
+
+
+def gram_ref(z: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """The raw Gram matrix z @ x.T — what the Pallas corr kernel computes.
+
+    (Centering/normalization are rank-1 corrections applied outside; see
+    kernels/corr.py and DESIGN.md §Hardware-Adaptation.)
+    """
+    return z @ x.T
+
+
+def conv_bn_ref(
+    x: jnp.ndarray, w: jnp.ndarray, gamma, beta, mean, var, stride: int = 2
+) -> jnp.ndarray:
+    """3x3 SAME conv (NHWC x HWIO) + inference BN — the split layer."""
+    u = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    inv = jax.lax.rsqrt(var + 1e-5)
+    return (u - mean) * inv * gamma + beta

@@ -1,0 +1,111 @@
+"""L2 building blocks: conv / batch-norm / activations / upsampling.
+
+Parameters are plain pytrees (dicts of jnp arrays) so everything works with
+``jax.grad`` and serializes trivially to the ``.npz`` weight cache.
+
+Conventions:
+  * NHWC layout everywhere.
+  * Conv weights are HWIO (kh, kw, cin, cout).
+  * BatchNorm carries (gamma, beta, mean, var); ``bn_apply`` is the
+    inference form; training uses batch statistics and EMA-updates the
+    running stats (see ``bn_train``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BN_EPS = 1e-5
+LEAKY_SLOPE = 0.1
+
+
+def conv_init(key, kh: int, kw: int, cin: int, cout: int) -> Dict:
+    """He-normal conv init (matches Darknet's scheme closely enough)."""
+    fan_in = kh * kw * cin
+    std = jnp.sqrt(2.0 / fan_in)
+    w = jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+    return {"w": w}
+
+
+def bn_init(c: int) -> Dict:
+    return {
+        "gamma": jnp.ones((c,), jnp.float32),
+        "beta": jnp.zeros((c,), jnp.float32),
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+def prelu_init(c: int) -> Dict:
+    """Per-channel PReLU slope, initialized at 0.25 (paper's BaF block)."""
+    return {"alpha": jnp.full((c,), 0.25, jnp.float32)}
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """SAME-padded 2-D convolution, NHWC x HWIO -> NHWC."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def bn_apply(x: jnp.ndarray, bn: Dict) -> jnp.ndarray:
+    """Inference-mode batch norm using running statistics."""
+    inv = jax.lax.rsqrt(bn["var"] + BN_EPS)
+    return (x - bn["mean"]) * inv * bn["gamma"] + bn["beta"]
+
+
+def bn_inverse(z: jnp.ndarray, bn: Dict) -> jnp.ndarray:
+    """Invert ``bn_apply``: recover the conv output u from z = BN(u).
+
+    Used by the backward half of BaF prediction (§3.3). gamma is guarded
+    away from zero; BN layers in a trained net essentially never have
+    exactly-zero gamma, but the guard keeps the export well-defined.
+    """
+    gamma = jnp.where(jnp.abs(bn["gamma"]) < 1e-6, 1e-6, bn["gamma"])
+    std = jnp.sqrt(bn["var"] + BN_EPS)
+    return (z - bn["beta"]) / gamma * std + bn["mean"]
+
+
+def bn_train(
+    x: jnp.ndarray, bn: Dict, momentum: float = 0.9
+) -> Tuple[jnp.ndarray, Dict]:
+    """Training-mode BN: normalize with batch stats, EMA the running stats."""
+    axes = (0, 1, 2)
+    mean = jnp.mean(x, axes)
+    var = jnp.var(x, axes)
+    inv = jax.lax.rsqrt(var + BN_EPS)
+    y = (x - mean) * inv * bn["gamma"] + bn["beta"]
+    new_bn = {
+        "gamma": bn["gamma"],
+        "beta": bn["beta"],
+        "mean": momentum * bn["mean"] + (1.0 - momentum) * mean,
+        "var": momentum * bn["var"] + (1.0 - momentum) * var,
+    }
+    return y, new_bn
+
+
+def leaky_relu(x: jnp.ndarray) -> jnp.ndarray:
+    """YOLO's activation sigma(.) with slope 0.1."""
+    return jnp.where(x >= 0, x, LEAKY_SLOPE * x)
+
+
+def prelu(x: jnp.ndarray, p: Dict) -> jnp.ndarray:
+    return jnp.where(x >= 0, x, p["alpha"] * x)
+
+
+def upsample2x(x: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-neighbour 2x upsampling (first BaF deconv layer, §3.3)."""
+    n, h, w, c = x.shape
+    x = jnp.broadcast_to(x[:, :, None, :, None, :], (n, h, 2, w, 2, c))
+    return x.reshape(n, 2 * h, 2 * w, c)
+
+
+def sigmoid(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.sigmoid(x)

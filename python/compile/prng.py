@@ -1,0 +1,61 @@
+"""SplitMix64 — the cross-language deterministic PRNG used by ShapeWorld.
+
+This module is the *specification*: the Rust twin (`rust/src/util/prng.rs`)
+implements the exact same algorithm, and `artifacts/golden/prng.json`
+(emitted by aot.py) pins the first outputs of several seeds so both sides
+are checked against the same golden values.
+
+Algorithm (Steele, Lea, Flood — "Fast Splittable Pseudorandom Number
+Generators", OOPSLA'14), 64-bit state, all arithmetic mod 2^64:
+
+    state += 0x9E3779B97F4A7C15
+    z  = state
+    z  = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9
+    z  = (z ^ (z >> 27)) * 0x94D049BB133111EB
+    out = z ^ (z >> 31)
+
+Derived draws (must match Rust bit-for-bit):
+  * ``next_u64``   — raw output.
+  * ``next_f32``   — ``(next_u64 >> 40) / 2**24`` as f32 in [0, 1).
+  * ``next_range(lo, hi)`` — ``lo + next_u64 % (hi - lo)`` (hi exclusive).
+    Modulo bias is irrelevant here and keeping the naive form makes the
+    cross-language contract trivial.
+"""
+
+from __future__ import annotations
+
+MASK64 = (1 << 64) - 1
+GAMMA = 0x9E3779B97F4A7C15
+MIX1 = 0xBF58476D1CE4E5B9
+MIX2 = 0x94D049BB133111EB
+
+
+class SplitMix64:
+    """Deterministic 64-bit PRNG; see module docstring for the contract."""
+
+    __slots__ = ("state",)
+
+    def __init__(self, seed: int) -> None:
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + GAMMA) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * MIX1) & MASK64
+        z = ((z ^ (z >> 27)) * MIX2) & MASK64
+        return z ^ (z >> 31)
+
+    def next_f32(self) -> float:
+        """Uniform f32 in [0, 1) with 24 bits of precision."""
+        import numpy as np
+
+        return float(np.float32(self.next_u64() >> 40) / np.float32(1 << 24))
+
+    def next_range(self, lo: int, hi: int) -> int:
+        """Uniform integer in [lo, hi). Requires hi > lo."""
+        assert hi > lo, "next_range needs a non-empty range"
+        return lo + self.next_u64() % (hi - lo)
+
+    def fork(self) -> "SplitMix64":
+        """Derive an independent stream (used for per-image streams)."""
+        return SplitMix64(self.next_u64())

@@ -1,0 +1,107 @@
+"""Offline channel-selection statistics (paper §3.1, Eq. 2–3).
+
+Computes the absolute pairwise correlations rho(p, q) between every
+BN-output channel Z_p and the four polyphase (stride-2 offset)
+downsamplings of every split-layer input channel X_q, averaged over a
+calibration set, then greedily orders the P channels by total correlation
+(Eq. 3, repeated over the remaining channels).
+
+The Gram-matrix heavy lifting goes through the L1 Pallas corr kernel
+(kernels/corr.py); everything else is rank-1 bookkeeping.
+
+The resulting ordering ships to the Rust side via
+artifacts/channel_stats.json and is *static* at serving time — exactly as
+in the paper, selection adds zero request-path complexity.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset as D
+from . import detector as det
+from .kernels import corr as KC
+
+
+def correlation_matrix(det_params: Dict, images: int = 256, seed: int = 0xC0FFEE):
+    """Mean-over-images rho matrix, shape (P, 4, Q).
+
+    Eq. 2 averages the absolute correlation over the four offsets s; we
+    keep the (P, 4, Q) tensor so tests can check each slice, and reduce to
+    (P, Q) with .mean(axis=1).
+    """
+    fe = jax.jit(lambda img: det.frontend_with_x(det_params, img))
+    p, q = det.P_CHANNELS, det.Q_CHANNELS
+    acc = np.zeros((p, 4 * q), np.float64)
+    done = 0
+    for start in range(0, images, 32):
+        cnt = min(32, images - start)
+        imgs, _ = D.batch(dataset_seed=seed, start=start, count=cnt)
+        z, x = fe(jnp.asarray(imgs))
+        for i in range(cnt):
+            zv = z[i].reshape(-1, p).T  # (P, 256)
+            xv = KC.polyphase(x[i])  # (4Q, 256)
+            acc += np.asarray(KC.abs_pearson(zv, xv), np.float64)
+            done += 1
+    rho = (acc / done).reshape(p, 4, q).astype(np.float32)
+    return rho
+
+
+def greedy_order(rho: np.ndarray) -> List[int]:
+    """Eq. 3 selection, repeated over remaining channels.
+
+    rho: (P, 4, Q). Score_p = sum_q mean_s rho[p, s, q]; channels are
+    picked highest-score-first. (With a static rho this equals a
+    descending sort, but we keep the paper's iterative form.)
+    """
+    score = rho.mean(axis=1).sum(axis=1).astype(np.float64)
+    remaining = set(range(rho.shape[0]))
+    order: List[int] = []
+    while remaining:
+        best = max(remaining, key=lambda p: (score[p], -p))
+        order.append(int(best))
+        remaining.discard(best)
+    return order
+
+
+def channel_stats(det_params: Dict, images: int = 256) -> Dict:
+    """Everything the Rust side needs, JSON-serializable.
+
+    * order: the greedy channel ranking (take the first C for any C);
+    * rho_total: per-channel total-correlation scores (for ablations);
+    * variance: per-channel Z variance over the calibration set (the
+      'variance' selection ablation);
+    * bn: split-layer BN parameters (inverse-BN on the cloud, §3.3);
+    * global minmax stats of Z (container sanity checks).
+    """
+    rho = correlation_matrix(det_params, images=images)
+    order = greedy_order(rho)
+
+    z_pool = _z_sample(det_params, count=128)
+    var = z_pool.reshape(-1, det.P_CHANNELS).var(axis=0)
+    var_order = [int(i) for i in np.argsort(-var)]
+
+    bn = det_params[det.SPLIT]["bn"]
+    return {
+        "split_layer": det.SPLIT,
+        "p_channels": det.P_CHANNELS,
+        "q_channels": det.Q_CHANNELS,
+        "order": order,
+        "rho_total": [float(v) for v in rho.mean(axis=1).sum(axis=1)],
+        "variance_order": var_order,
+        "variance": [float(v) for v in var],
+        "bn": {k: [float(v) for v in np.asarray(bn[k])] for k in bn},
+        "z_min": float(z_pool.min()),
+        "z_max": float(z_pool.max()),
+        "calibration_images": images,
+    }
+
+
+def _z_sample(det_params: Dict, count: int = 128) -> np.ndarray:
+    fe = jax.jit(lambda img: det.frontend(det_params, img))
+    imgs, _ = D.batch(dataset_seed=0x5EED, start=0, count=count)
+    return np.asarray(fe(jnp.asarray(imgs)))

@@ -1,0 +1,218 @@
+"""Build-time training: the YOLO-Lite detector and the BaF predictors.
+
+This module only ever runs inside ``make artifacts`` (aot.py); nothing
+here is on the request path. Weights are cached under artifacts/cache/ so
+re-running the build is a no-op.
+
+Detector loss — standard single-scale YOLO-v3 recipe:
+  * each ground-truth box is assigned to its center cell and to the anchor
+    with the best (w,h)-IoU;
+  * coordinate loss: squared error on (sigmoid tx - tx*, sigmoid ty - ty*)
+    and on (tw - log w/aw, th - log h/ah), weight 5.0;
+  * objectness: BCE, positives weight 1.0, negatives 0.5;
+  * class: softmax cross-entropy on positives.
+
+BaF loss — the paper's Charbonnier penalty (Eq. 7) between sigma(Z-tilde)
+and the true post-activation Y, eps = 1e-3, with the n-bit quantizer in
+the loop (models are trained per (C, n) exactly as in §4). Consolidation
+(Eq. 6) is ignored during training, as in the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import baf as B
+from . import dataset as D
+from . import detector as det
+from . import layers as L
+from . import optim
+from .kernels import ref as KR
+
+LAMBDA_COORD = 5.0
+LAMBDA_NOOBJ = 0.5
+
+
+# --------------------------------------------------------------------------
+# Target assignment (NumPy, per batch — tiny, not worth jitting)
+# --------------------------------------------------------------------------
+def build_targets(boxes_list: List[np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
+    """Ground truth -> dense YOLO targets.
+
+    Returns (target, mask):
+      target (N, G, G, A, 5 + K): tx*, ty*, tw*, th*, 1, one-hot class
+      mask   (N, G, G, A): 1.0 where a GT is assigned
+    """
+    n = len(boxes_list)
+    g, a, k = det.GRID, det.NUM_ANCHORS, det.NUM_CLASSES
+    target = np.zeros((n, g, g, a, 5 + k), np.float32)
+    mask = np.zeros((n, g, g, a), np.float32)
+    anchors = np.asarray(det.ANCHORS, np.float32)
+    for i, boxes in enumerate(boxes_list):
+        for x0, y0, x1, y1, cls in boxes:
+            cx, cy = (x0 + x1) / 2, (y0 + y1) / 2
+            w, h = x1 - x0, y1 - y0
+            gx = min(int(cx / det.CELL), g - 1)
+            gy = min(int(cy / det.CELL), g - 1)
+            # anchor with best (w,h) IoU
+            inter = np.minimum(w, anchors[:, 0]) * np.minimum(h, anchors[:, 1])
+            union = w * h + anchors[:, 0] * anchors[:, 1] - inter
+            ai = int(np.argmax(inter / union))
+            target[i, gy, gx, ai, 0] = cx / det.CELL - gx
+            target[i, gy, gx, ai, 1] = cy / det.CELL - gy
+            target[i, gy, gx, ai, 2] = np.log(max(w, 1e-3) / anchors[ai, 0])
+            target[i, gy, gx, ai, 3] = np.log(max(h, 1e-3) / anchors[ai, 1])
+            target[i, gy, gx, ai, 4] = 1.0
+            target[i, gy, gx, ai, 5 + int(cls)] = 1.0
+            mask[i, gy, gx, ai] = 1.0
+    return target, mask
+
+
+def yolo_loss(params: Dict, img, target, mask):
+    """Detector loss; returns (scalar, new_params-with-EMA-BN)."""
+    head, new_params = det.forward(params, img, train=True)
+    n = head.shape[0]
+    h = head.reshape(n, det.GRID, det.GRID, det.NUM_ANCHORS, 5 + det.NUM_CLASSES)
+    pxy = L.sigmoid(h[..., 0:2])
+    pwh = h[..., 2:4]
+    pobj = h[..., 4]
+    pcls = h[..., 5:]
+
+    m = mask[..., None]
+    coord = jnp.sum(m * (pxy - target[..., 0:2]) ** 2) + jnp.sum(
+        m * (pwh - target[..., 2:4]) ** 2
+    )
+    # BCE with logits on objectness.
+    tobj = target[..., 4]
+    bce = jnp.maximum(pobj, 0) - pobj * tobj + jnp.log1p(jnp.exp(-jnp.abs(pobj)))
+    obj = jnp.sum(mask * bce) + LAMBDA_NOOBJ * jnp.sum((1 - mask) * bce)
+    # softmax CE on positives.
+    logp = jax.nn.log_softmax(pcls, axis=-1)
+    cls = -jnp.sum(m * target[..., 5:] * logp)
+    total = (LAMBDA_COORD * coord + obj + cls) / n
+    return total, new_params
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _det_step(params, opt_state, img, target, mask, lr):
+    (loss, new_params), grads = jax.value_and_grad(yolo_loss, has_aux=True)(
+        params, img, target, mask
+    )
+    upd, opt_state = optim.adam_step(params, grads, opt_state, lr=lr)
+    # keep the EMA'd BN stats from the forward pass, Adam-updated weights
+    for name, _c, _s in det.CFG:
+        upd[name]["bn"]["mean"] = new_params[name]["bn"]["mean"]
+        upd[name]["bn"]["var"] = new_params[name]["bn"]["var"]
+    return upd, opt_state, loss
+
+
+def train_detector(
+    seed: int = 7,
+    steps: int = 700,
+    batch: int = 32,
+    pool: int = 4096,
+    log=print,
+) -> Dict:
+    """Train YOLO-Lite on ShapeWorld; returns final params."""
+    log(f"[train] generating {pool} ShapeWorld images ...")
+    imgs, boxes = D.batch(dataset_seed=0xD5EA5ED, start=0, count=pool)
+    targets, masks = zip(*(build_targets([b]) for b in boxes))
+    targets = np.concatenate(targets)
+    masks = np.concatenate(masks)
+
+    params = det.init(jax.random.PRNGKey(seed))
+    opt_state = optim.adam_init(params)
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, pool, size=batch)
+        lr = 1e-3 if step < steps * 0.7 else 2e-4
+        params, opt_state, loss = _det_step(
+            params,
+            opt_state,
+            jnp.asarray(imgs[idx]),
+            jnp.asarray(targets[idx]),
+            jnp.asarray(masks[idx]),
+            lr,
+        )
+        if step % 100 == 0 or step == steps - 1:
+            log(f"[train] det step {step:4d} loss {float(loss):8.3f} "
+                f"({time.time() - t0:5.1f}s)")
+    return params
+
+
+# --------------------------------------------------------------------------
+# BaF training
+# --------------------------------------------------------------------------
+def baf_loss(baf_params, det_params, z_hat_c, y_true, sel):
+    """Charbonnier(sigma(Z-tilde), Y) per Eq. 7 (normalized per element)."""
+    z_tilde = B.predict(baf_params, det_params, z_hat_c, sel)
+    return B.charbonnier(L.leaky_relu(z_tilde), y_true) / y_true.size
+
+
+@functools.partial(jax.jit, static_argnames=("sel", "n"), donate_argnums=(0, 1))
+def _baf_step(baf_params, opt_state, det_params, z_batch, sel, n, lr):
+    """One Adam step; quantize/dequantize of the selected channels in-loop."""
+    sel_arr = jnp.asarray(sel, jnp.int32)
+    zc = z_batch[:, :, :, sel_arr]  # (B,16,16,C)
+    # per-sample, per-channel quantizer: fold batch into channel axis (C,H,W)
+    b, h, w, c = zc.shape
+    zc_chw = jnp.transpose(zc, (0, 3, 1, 2)).reshape(b * c, h, w)
+    q, mm = KR.quantize_ref(zc_chw, n)
+    zhat = KR.dequantize_ref(q, mm, n).reshape(b, c, h, w).transpose(0, 2, 3, 1)
+    y_true = L.leaky_relu(z_batch)
+    loss, grads = jax.value_and_grad(baf_loss)(
+        baf_params, det_params, zhat, y_true, sel_arr
+    )
+    baf_params, opt_state = optim.adam_step(baf_params, grads, opt_state, lr=lr)
+    return baf_params, opt_state, loss
+
+
+def train_baf(
+    det_params: Dict,
+    sel: Tuple[int, ...],
+    n: int,
+    z_pool: np.ndarray,
+    seed: int = 11,
+    steps: int = 400,
+    batch: int = 16,
+    log=print,
+) -> Dict:
+    """Train one BaF model for (C=len(sel), n) on precomputed Z tensors."""
+    c = len(sel)
+    baf_params = B.init(jax.random.PRNGKey(seed + 101 * c + n), c)
+    opt_state = optim.adam_init(baf_params)
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, z_pool.shape[0], size=batch)
+        lr = 2e-3 if step < steps * 0.6 else 5e-4
+        baf_params, opt_state, loss = _baf_step(
+            baf_params,
+            opt_state,
+            det_params,
+            jnp.asarray(z_pool[idx]),
+            tuple(int(s) for s in sel),
+            n,
+            lr,
+        )
+        if step % 100 == 0 or step == steps - 1:
+            log(f"[train] baf C={c:3d} n={n} step {step:4d} "
+                f"loss {float(loss):.5f} ({time.time() - t0:5.1f}s)")
+    return baf_params
+
+
+def compute_z_pool(det_params: Dict, count: int = 1024, seed: int = 0xCA11B) -> np.ndarray:
+    """Run the frontend over ``count`` calibration images -> Z pool (N,16,16,P)."""
+    fe = jax.jit(lambda img: det.frontend(det_params, img))
+    out = []
+    for start in range(0, count, 64):
+        imgs, _ = D.batch(dataset_seed=seed, start=start, count=min(64, count - start))
+        out.append(np.asarray(fe(jnp.asarray(imgs))))
+    return np.concatenate(out)

@@ -1,0 +1,98 @@
+"""The BaF predictor: shapes, frozen forward path, loss properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import baf as B
+from compile import detector as det
+from compile import layers as L
+
+
+@pytest.fixture(scope="module")
+def det_params():
+    return det.init(jax.random.PRNGKey(1))
+
+
+@pytest.mark.parametrize("c", [4, 16, 64])
+def test_predict_shapes(det_params, c):
+    baf_params = B.init(jax.random.PRNGKey(2), c)
+    sel = tuple(range(c))
+    zc = jnp.asarray(
+        np.random.default_rng(0).normal(size=(2, 16, 16, c)).astype(np.float32)
+    )
+    x_tilde = B.backward_predict(baf_params, zc, det_params[det.SPLIT]["bn"], sel)
+    assert x_tilde.shape == (2, *det.X_SHAPE)
+    z_tilde = B.predict(baf_params, det_params, zc, sel)
+    assert z_tilde.shape == (2, *det.Z_SHAPE)
+
+
+def test_forward_predict_matches_frontend_layer(det_params):
+    """The forward half with pallas must equal the plain-lax split layer."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(1, *det.X_SHAPE)).astype(np.float32))
+    lax_out = B.forward_predict(det_params, x, use_pallas=False)
+    pallas_out = B.forward_predict(det_params, x, use_pallas=True)
+    np.testing.assert_allclose(
+        np.asarray(lax_out), np.asarray(pallas_out), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_perfect_input_gives_good_forward_prediction(det_params):
+    """If the deconv-net recovered X exactly, forward prediction IS the
+    true Z — the upper bound the backward net is trained toward."""
+    rng = np.random.default_rng(6)
+    img = jnp.asarray(rng.uniform(0, 1, (1, 64, 64, 3)).astype(np.float32))
+    z_true, x_true = det.frontend_with_x(det_params, img)
+    z_fwd = B.forward_predict(det_params, x_true)
+    np.testing.assert_allclose(
+        np.asarray(z_true), np.asarray(z_fwd), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_charbonnier_properties():
+    a = jnp.zeros((4, 4))
+    assert float(B.charbonnier(a, a)) == pytest.approx(16 * 1e-3, rel=1e-3)
+    b = jnp.ones((4, 4))
+    big = float(B.charbonnier(a, b))
+    assert big == pytest.approx(16 * np.sqrt(1 + 1e-6), rel=1e-4)
+    # monotone in |a - b|
+    assert float(B.charbonnier(a, 2 * b)) > big
+
+
+def test_gradients_flow_only_into_baf(det_params):
+    """Training must not touch detector weights (paper: no retraining)."""
+    c = 8
+    baf_params = B.init(jax.random.PRNGKey(3), c)
+    sel = tuple(range(c))
+    rng = np.random.default_rng(7)
+    zc = jnp.asarray(rng.normal(size=(1, 16, 16, c)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(1, *det.Z_SHAPE)).astype(np.float32))
+
+    def loss(bp, dp):
+        zt = B.predict(bp, dp, zc, sel)
+        return B.charbonnier(L.leaky_relu(zt), y)
+
+    g_baf, g_det = jax.grad(loss, argnums=(0, 1))(baf_params, det_params)
+    # BaF grads are nonzero
+    leaves = jax.tree_util.tree_leaves(g_baf)
+    assert any(float(jnp.abs(l).max()) > 0 for l in leaves)
+    # in deployment only baf_params are passed to the optimizer; the
+    # detector gradient exists mathematically but is discarded — verify
+    # the training step treats det_params as a constant by API shape.
+    from compile import train as T
+
+    assert "det_params" in T._baf_step.__wrapped__.__code__.co_varnames
+
+
+def test_prelu_identity_last_layer(det_params):
+    """The last deconv layer must be linear (identity activation)."""
+    c = 4
+    p = B.init(jax.random.PRNGKey(4), c)
+    sel = tuple(range(c))
+    bn = det_params[det.SPLIT]["bn"]
+    z1 = B.backward_predict(p, jnp.zeros((1, 16, 16, c)), bn, sel)
+    z2 = B.backward_predict(p, jnp.zeros((1, 16, 16, c)) + 1e-6, bn, sel)
+    # tiny input perturbation -> tiny output change (no dead zone at the end)
+    assert float(jnp.abs(z2 - z1).max()) < 1e-2

@@ -1,0 +1,56 @@
+"""NumPy eval twin: metric definition matches the Rust implementation."""
+
+import numpy as np
+
+from compile import evalpy as E
+
+
+def det(x, score, cls):
+    return np.array([x, 0.0, x + 10.0, 10.0, score, cls], np.float32)
+
+
+def gt(x, cls):
+    return np.array([x, 0.0, x + 10.0, 10.0, cls], np.float32)
+
+
+def test_iou_cases():
+    a = np.array([0, 0, 2, 2], np.float32)
+    b = np.array([1, 0, 3, 2], np.float32)
+    assert abs(E.iou(a, b) - 1 / 3) < 1e-6
+    assert E.iou(a, a) == 1.0
+    assert E.iou(a, np.array([5, 5, 6, 6], np.float32)) == 0.0
+
+
+def test_nms_suppresses_same_class_only():
+    boxes = np.stack(
+        [det(0, 0.9, 0), det(1, 0.8, 0), det(1, 0.7, 1), det(40, 0.6, 0)]
+    )
+    kept = E.nms(boxes)
+    assert len(kept) == 3
+    assert 0.8 not in kept[:, 4]
+
+
+def test_perfect_map_is_one():
+    dets = [np.stack([det(0, 0.9, 0), det(20, 0.8, 1)])]
+    gts = [np.stack([gt(0, 0), gt(20, 1)])]
+    assert abs(E.mean_ap(dets, gts, 4) - 1.0) < 1e-9
+
+
+def test_miss_halves_recall():
+    dets = [np.stack([det(0, 0.9, 0)])]
+    gts = [np.stack([gt(0, 0), gt(30, 0)])]
+    m = E.mean_ap(dets, gts, 4)
+    assert 0.4 < m < 0.6
+
+
+def test_false_positive_lowers_map():
+    clean = E.mean_ap([np.stack([det(0, 0.9, 0)])], [np.stack([gt(0, 0)])], 4)
+    noisy = E.mean_ap(
+        [np.stack([det(40, 0.95, 0), det(0, 0.9, 0)])], [np.stack([gt(0, 0)])], 4
+    )
+    assert noisy < clean
+
+
+def test_empty_inputs():
+    assert E.mean_ap([np.zeros((0, 6))], [np.zeros((0, 5))], 4) == 0.0
+    assert E.nms(np.zeros((0, 6))).shape == (0, 6)

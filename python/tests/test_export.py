@@ -1,0 +1,106 @@
+"""AOT export path: HLO text form, weight cache roundtrip, stats, and
+manifest integrity (artifact checks skip when `make artifacts` hasn't run).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, detector as det, stats
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_includes_large_constants():
+    params = det.init(jax.random.PRNGKey(0))
+    lowered = jax.jit(lambda z: det.tail(params, z)).lower(
+        jnp.zeros((1, *det.Z_SHAPE))
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "{...}" not in text, "weights must be printed, not elided"
+    # the tail's first conv weight tensor appears with its full shape
+    assert "f32[3,3,64,64]" in text
+
+
+def test_weight_cache_roundtrip(tmp_path):
+    det_params = det.init(jax.random.PRNGKey(1))
+    from compile import baf as B
+
+    baf_models = {(8, 8): B.init(jax.random.PRNGKey(2), 8)}
+    path = str(tmp_path / "w.npz")
+    aot.save_weights(path, det_params, baf_models)
+    det2, baf2 = aot.load_weights(path)
+    for name, _c, _s in det.CFG:
+        np.testing.assert_array_equal(
+            np.asarray(det_params[name]["conv"]["w"]),
+            np.asarray(det2[name]["conv"]["w"]),
+        )
+    np.testing.assert_array_equal(
+        np.asarray(baf_models[(8, 8)]["c1"]["w"]), np.asarray(baf2[(8, 8)]["c1"]["w"])
+    )
+
+
+def test_greedy_order_is_permutation_and_sorted_by_score():
+    rng = np.random.default_rng(0)
+    rho = rng.uniform(0, 1, (16, 4, 8)).astype(np.float32)
+    order = stats.greedy_order(rho)
+    assert sorted(order) == list(range(16))
+    score = rho.mean(axis=1).sum(axis=1)
+    got = [score[i] for i in order]
+    assert all(got[i] >= got[i + 1] - 1e-9 for i in range(len(got) - 1))
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@needs_artifacts
+def test_manifest_covers_all_stages():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    names = set(m["artifacts"])
+    for required in ["frontend_b1", "tail_b1", "monolith_b1", "baf_c16_n8_b1"]:
+        assert required in names
+    for name, spec in m["artifacts"].items():
+        path = os.path.join(ART, spec["file"])
+        assert os.path.exists(path), f"{name}: missing {path}"
+        assert os.path.getsize(path) > 10_000, f"{name}: suspiciously small"
+        assert spec["inputs"], name
+
+
+@needs_artifacts
+def test_channel_stats_consistent_with_manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    with open(os.path.join(ART, "channel_stats.json")) as f:
+        st = json.load(f)
+    assert st["p_channels"] == m["p_channels"]
+    assert st["q_channels"] == m["q_channels"]
+    assert sorted(st["order"]) == list(range(st["p_channels"]))
+    # the BaF artifacts' baked selections agree with the stats order
+    for name, spec in m["artifacts"].items():
+        if spec.get("sel"):
+            c = spec["c"]
+            assert spec["sel"] == st["order"][:c], name
+
+
+@needs_artifacts
+def test_goldens_present():
+    g = os.path.join(ART, "golden")
+    for f in [
+        "prng.json",
+        "dataset.json",
+        "dataset_img0.npy",
+        "quant_z.npy",
+        "pipe_z.npy",
+        "pipe_head.npy",
+        "pipe_meta.json",
+    ]:
+        assert os.path.exists(os.path.join(g, f)), f

@@ -1,0 +1,155 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes-in-range values and bit depths; each
+property asserts allclose (or exact equality for integer outputs) between
+the interpret-mode Pallas kernel and ref.py. This is the core correctness
+signal for the compile path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import consolidate as KC
+from compile.kernels import conv_bn as KB
+from compile.kernels import corr as KR
+from compile.kernels import quantize as KQ
+from compile.kernels import ref as R
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def arr(rng, *shape, scale=3.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@st.composite
+def chw_case(draw):
+    c = draw(st.sampled_from([1, 2, 4, 8, 16]))
+    h = draw(st.sampled_from([4, 8, 16]))
+    w = draw(st.sampled_from([4, 8, 16]))
+    n = draw(st.sampled_from([2, 3, 4, 6, 8, 12]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return c, h, w, n, seed
+
+
+@given(chw_case())
+def test_quantize_matches_ref(case):
+    c, h, w, n, seed = case
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(arr(rng, c, h, w))
+    q1, mm1 = KQ.quantize(z, n)
+    q2, mm2 = R.quantize_ref(z, n)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(mm1), np.asarray(mm2))
+
+
+@given(chw_case())
+def test_dequantize_matches_ref(case):
+    c, h, w, n, seed = case
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(arr(rng, c, h, w))
+    q, mm = R.quantize_ref(z, n)
+    d1 = KQ.dequantize(q, mm, n)
+    d2 = R.dequantize_ref(q, mm, n)
+    # identical formula; tolerance covers fma/association differences
+    # between the pallas-interpret and plain-jnp lowerings
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6, atol=1e-5)
+
+
+@given(chw_case())
+def test_consolidate_matches_ref(case):
+    c, h, w, n, seed = case
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(arr(rng, c, h, w))
+    q, mm = R.quantize_ref(z, n)
+    zt = z + jnp.asarray(arr(rng, c, h, w, scale=0.3))
+    c1 = KC.consolidate(zt, q, mm, n)
+    c2 = R.consolidate_ref(zt, q, mm, n)
+    # tolerance covers fma/association differences between lowerings
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-6, atol=1e-5)
+
+
+def test_quantize_constant_channel():
+    z = jnp.ones((2, 4, 4)) * 0.5
+    q, mm = KQ.quantize(z, 8)
+    assert np.all(np.asarray(q) == 0)
+    np.testing.assert_allclose(np.asarray(mm)[:, 0], 0.5)
+
+
+@given(
+    st.sampled_from([16, 32, 64]),
+    st.sampled_from([32, 64, 128]),
+    st.sampled_from([128, 256]),
+    st.integers(0, 2**31 - 1),
+)
+def test_gram_and_pearson_match_ref(p, s, nvec, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(arr(rng, p, nvec))
+    x = jnp.asarray(arr(rng, s, nvec))
+    np.testing.assert_allclose(
+        np.asarray(KR.gram(z, x)), np.asarray(R.gram_ref(z, x)), rtol=2e-4, atol=2e-3
+    )
+    np.testing.assert_allclose(
+        np.asarray(KR.abs_pearson(z, x)), np.asarray(R.corr_ref(z, x)), atol=2e-4
+    )
+
+
+def test_pearson_known_correlations():
+    n = 256
+    t = np.linspace(0, 1, n, dtype=np.float32)
+    z = jnp.asarray(np.stack([t, -t]))  # rows perfectly (anti)correlated with t
+    x = jnp.asarray(np.stack([t, np.ones_like(t)]))
+    rho = np.asarray(KR.abs_pearson(z, x))
+    np.testing.assert_allclose(rho[:, 0], 1.0, atol=1e-4)  # |corr| -> sign-free
+    np.testing.assert_allclose(rho[:, 1], 0.0, atol=1e-4)  # constant row -> 0
+
+
+@given(
+    st.sampled_from([1, 2]),
+    st.sampled_from([8, 16, 32]),
+    st.sampled_from([4, 8, 16]),
+    st.sampled_from([8, 16]),
+    st.integers(0, 2**31 - 1),
+)
+def test_conv_bn_matches_ref(b, hw, cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(arr(rng, b, hw, hw, cin, scale=1.0))
+    w = jnp.asarray(arr(rng, 3, 3, cin, cout, scale=0.1))
+    gamma = jnp.asarray(rng.uniform(0.5, 1.5, cout).astype(np.float32))
+    beta = jnp.asarray(arr(rng, cout, scale=0.5))
+    mean = jnp.asarray(arr(rng, cout, scale=0.5))
+    var = jnp.asarray(rng.uniform(0.2, 2.0, cout).astype(np.float32))
+    got = KB.conv3x3s2_bn(x, w, gamma, beta, mean, var)
+    want = R.conv_bn_ref(x, w, gamma, beta, mean, var, stride=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_polyphase_layout():
+    h, w, q = 8, 8, 3
+    x = jnp.arange(h * w * q, dtype=jnp.float32).reshape(h, w, q)
+    rows = np.asarray(KR.polyphase(x))
+    assert rows.shape == (4 * q, h * w // 4)
+    # row 0 = offset (0,0), channel 0
+    np.testing.assert_array_equal(
+        rows[0], np.asarray(x)[0::2, 0::2, 0].reshape(-1)
+    )
+    # row s*q + c layout: offset s=(1,1) is the 4th block
+    np.testing.assert_array_equal(
+        rows[3 * q + 2], np.asarray(x)[1::2, 1::2, 2].reshape(-1)
+    )
+
+
+@pytest.mark.parametrize("n", [2, 8])
+def test_consolidate_clips_to_bin(n):
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(arr(rng, 2, 8, 8))
+    q, mm = R.quantize_ref(z, n)
+    far = z + 100.0
+    out = np.asarray(R.consolidate_ref(far, q, mm, n))
+    # every element must be the UPPER boundary of its bin
+    step = (np.asarray(mm)[:, 1] - np.asarray(mm)[:, 0]) / (2**n - 1)
+    hi = np.asarray(mm)[:, 0][:, None, None] + (np.asarray(q) + 0.5) * step[:, None, None]
+    np.testing.assert_allclose(out, hi, atol=1e-5)

@@ -1,0 +1,123 @@
+"""L2 model structure: split consistency, shapes, BN, head decoding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import detector as det
+from compile import layers as L
+
+
+@pytest.fixture(scope="module")
+def params():
+    return det.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def img():
+    rng = np.random.default_rng(1)
+    return jnp.asarray(rng.uniform(0, 1, (2, 64, 64, 3)).astype(np.float32))
+
+
+def test_forward_shapes(params, img):
+    head, _ = det.forward(params, img)
+    assert head.shape == (2, det.GRID, det.GRID, det.HEAD_CH)
+
+
+def test_split_consistency(params, img):
+    """sigma(frontend) -> tail must equal the monolith exactly.
+
+    This is the structural fact the whole paper rests on: cutting at the
+    split layer (post-BN, pre-activation) and re-entering the tail is
+    the identity transformation of the network.
+    """
+    z = det.frontend(params, img)
+    assert z.shape == (2, *det.Z_SHAPE)
+    head_split = det.tail(params, z)
+    head_mono, _ = det.forward(params, img)
+    np.testing.assert_allclose(
+        np.asarray(head_split), np.asarray(head_mono), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_frontend_with_x_consistency(params, img):
+    z1 = det.frontend(params, img)
+    z2, x = det.frontend_with_x(params, img)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), atol=1e-6)
+    assert x.shape == (2, *det.X_SHAPE)
+
+
+def test_z_is_pre_activation(params, img):
+    """Z must contain negative values (BN output before LeakyReLU)."""
+    z = np.asarray(det.frontend(params, img))
+    assert (z < 0).any(), "split tensor should be pre-activation"
+
+
+def test_bn_inverse_roundtrip():
+    rng = np.random.default_rng(3)
+    bn = {
+        "gamma": jnp.asarray(rng.uniform(0.5, 1.5, 8).astype(np.float32)),
+        "beta": jnp.asarray(rng.normal(size=8).astype(np.float32)),
+        "mean": jnp.asarray(rng.normal(size=8).astype(np.float32)),
+        "var": jnp.asarray(rng.uniform(0.5, 2.0, 8).astype(np.float32)),
+    }
+    u = jnp.asarray(rng.normal(size=(2, 4, 4, 8)).astype(np.float32))
+    z = L.bn_apply(u, bn)
+    u2 = L.bn_inverse(z, bn)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(u2), rtol=1e-4, atol=1e-4)
+
+
+def test_bn_train_normalizes_and_updates_stats():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray((rng.normal(size=(8, 6, 6, 4)) * 3 + 5).astype(np.float32))
+    bn = L.bn_init(4)
+    y, new_bn = L.bn_train(x, bn)
+    ym = np.asarray(jnp.mean(y, axis=(0, 1, 2)))
+    ys = np.asarray(jnp.std(y, axis=(0, 1, 2)))
+    np.testing.assert_allclose(ym, 0.0, atol=1e-4)
+    np.testing.assert_allclose(ys, 1.0, atol=1e-3)
+    assert np.all(np.asarray(new_bn["mean"]) != 0.0)
+
+
+def test_upsample2x_nearest():
+    x = jnp.asarray(np.arange(4, dtype=np.float32).reshape(1, 2, 2, 1))
+    y = np.asarray(L.upsample2x(x))[0, :, :, 0]
+    want = np.array([[0, 0, 1, 1], [0, 0, 1, 1], [2, 2, 3, 3], [2, 2, 3, 3]], np.float32)
+    np.testing.assert_array_equal(y, want)
+
+
+def test_leaky_relu_slope():
+    x = jnp.asarray([-10.0, -1.0, 0.0, 2.0])
+    y = np.asarray(L.leaky_relu(x))
+    np.testing.assert_allclose(y, [-1.0, -0.1, 0.0, 2.0], atol=1e-7)
+
+
+def test_decode_head_boxes_in_frame(params, img):
+    head, _ = det.forward(params, img)
+    boxes = np.asarray(det.decode_head(head))
+    assert boxes.shape == (2, det.GRID * det.GRID * det.NUM_ANCHORS, 6)
+    # scores are probabilities
+    assert (boxes[..., 4] >= 0).all() and (boxes[..., 4] <= 1).all()
+    # classes are valid ids
+    assert set(np.unique(boxes[..., 5])).issubset(set(range(det.NUM_CLASSES)))
+
+
+def test_decode_head_localizes_peak():
+    """A hand-built head with one hot cell must decode to that cell."""
+    head = np.full((1, det.GRID, det.GRID, det.NUM_ANCHORS, 5 + det.NUM_CLASSES), -8.0, np.float32)
+    gy, gx, a = 3, 5, 0
+    head[0, gy, gx, a, 0:2] = 0.0  # center of cell
+    head[0, gy, gx, a, 2:4] = 0.0  # anchor-sized
+    head[0, gy, gx, a, 4] = 8.0  # high objectness
+    head[0, gy, gx, a, 5] = 8.0  # class 0
+    boxes = np.asarray(
+        det.decode_head(jnp.asarray(head.reshape(1, det.GRID, det.GRID, -1)))
+    )
+    best = boxes[0, np.argmax(boxes[0, :, 4])]
+    cx, cy = (best[0] + best[2]) / 2, (best[1] + best[3]) / 2
+    assert abs(cx - (gx + 0.5) * det.CELL) < 1e-3
+    assert abs(cy - (gy + 0.5) * det.CELL) < 1e-3
+    w = best[2] - best[0]
+    assert abs(w - det.ANCHORS[a][0]) < 1e-3
+    assert best[5] == 0.0

@@ -1,0 +1,97 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` binaries (benches/*.rs, harness = false) use this to get
+//! warmup, repetition, and robust statistics, and to emit the markdown
+//! tables EXPERIMENTS.md records.
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs (all in microseconds).
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub min_us: f64,
+    pub p95_us: f64,
+    pub stddev_us: f64,
+}
+
+impl Stats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_us / 1e6)
+    }
+}
+
+/// Time `f` with warmup; chooses iteration count so total time ~budget.
+pub fn time_fn<F: FnMut()>(mut f: F, warmup: usize, min_iters: usize, budget_ms: f64) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    // estimate one call
+    let t0 = Instant::now();
+    f();
+    let est_us = t0.elapsed().as_secs_f64() * 1e6;
+    let iters = ((budget_ms * 1e3 / est_us.max(0.01)) as usize)
+        .clamp(min_iters, 100_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    stats_of(&mut samples)
+}
+
+fn stats_of(samples: &mut [f64]) -> Stats {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    Stats {
+        iters: n,
+        mean_us: mean,
+        median_us: samples[n / 2],
+        min_us: samples[0],
+        p95_us: samples[(n as f64 * 0.95) as usize % n],
+        stddev_us: var.sqrt(),
+    }
+}
+
+/// Pretty one-line summary.
+pub fn fmt_stats(name: &str, s: &Stats) -> String {
+    format!(
+        "{name:<34} mean {m:>9.1} us  median {md:>9.1} us  min {mn:>9.1} us  p95 {p:>9.1} us  (n={i})",
+        m = s.mean_us,
+        md = s.median_us,
+        mn = s.min_us,
+        p = s.p95_us,
+        i = s.iters
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let s = time_fn(|| { std::hint::black_box((0..1000).sum::<u64>()); }, 2, 10, 5.0);
+        assert!(s.iters >= 10);
+        assert!(s.min_us <= s.median_us && s.median_us <= s.p95_us);
+        assert!(s.mean_us > 0.0);
+    }
+
+    #[test]
+    fn throughput_inverts_time() {
+        let s = Stats {
+            iters: 1,
+            mean_us: 1000.0,
+            median_us: 1000.0,
+            min_us: 1000.0,
+            p95_us: 1000.0,
+            stddev_us: 0.0,
+        };
+        assert!((s.throughput(10.0) - 10_000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `baf <command> [--key value]... [--flag]... [positional]...`
+//! `--key=value` is also accepted. Unknown keys are rejected by each
+//! command via `expect_known`.
+//!
+//! Ambiguity rule: `--name token` always binds `token` as the value of
+//! `--name` (greedy). A bare flag must therefore come last or be followed
+//! by another `--option`; use `--flag --` style ordering when mixing
+//! flags and positionals.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (without the binary name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        out.command = it.next().cloned().unwrap_or_else(|| "help".to_string());
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow!("--{key}: cannot parse '{s}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Error on unknown option keys/flags (catches typos).
+    pub fn expect_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} for '{}'", self.command);
+            }
+        }
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                bail!("unknown flag --{f} for '{}'", self.command);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(&argv("sweep pos1 --c 16 --codec=tlc --verbose")).unwrap();
+        assert_eq!(a.command, "sweep");
+        assert_eq!(a.opt("c"), Some("16"));
+        assert_eq!(a.opt("codec"), Some("tlc"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        // greedy rule: a token after --name binds as its value
+        let b = Args::parse(&argv("sweep --verbose pos1")).unwrap();
+        assert_eq!(b.opt("verbose"), Some("pos1"));
+    }
+
+    #[test]
+    fn typed_parse_and_errors() {
+        let a = Args::parse(&argv("x --n 6")).unwrap();
+        assert_eq!(a.opt_parse::<u8>("n").unwrap(), Some(6));
+        assert_eq!(a.opt_parse::<u8>("missing").unwrap(), None);
+        let b = Args::parse(&argv("x --n six")).unwrap();
+        assert!(b.opt_parse::<u8>("n").is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = Args::parse(&argv("run --typo 3")).unwrap();
+        assert!(a.expect_known(&["c", "n"]).is_err());
+        let b = Args::parse(&argv("run --c 3")).unwrap();
+        assert!(b.expect_known(&["c", "n"]).is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(&argv("run --fast --c 4")).unwrap();
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.opt("c"), Some("4"));
+    }
+}

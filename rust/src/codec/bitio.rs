@@ -1,0 +1,125 @@
+//! Plain MSB-first bit I/O (used by tests and the container; the entropy
+//! coders use the range coder in `rc.rs` instead).
+
+/// MSB-first bit writer.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn put_bit(&mut self, bit: bool) {
+        self.cur = (self.cur << 1) | bit as u8;
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.buf.push(self.cur);
+            self.cur = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Write the low `n` bits of `v`, MSB first.
+    pub fn put_bits(&mut self, v: u32, n: u8) {
+        debug_assert!(n <= 32);
+        for i in (0..n).rev() {
+            self.put_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Pad with zeros to a byte boundary and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.cur <<= 8 - self.nbits;
+            self.buf.push(self.cur);
+        }
+        self.buf
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+}
+
+/// MSB-first bit reader.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    cur: u8,
+    nbits: u8,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0, cur: 0, nbits: 0 }
+    }
+
+    /// Read one bit; returns false past the end (zero padding semantics).
+    #[inline]
+    pub fn get_bit(&mut self) -> bool {
+        if self.nbits == 0 {
+            self.cur = self.buf.get(self.pos).copied().unwrap_or(0);
+            self.pos += 1;
+            self.nbits = 8;
+        }
+        self.nbits -= 1;
+        (self.cur >> self.nbits) & 1 == 1
+    }
+
+    pub fn get_bits(&mut self, n: u8) -> u32 {
+        let mut v = 0u32;
+        for _ in 0..n {
+            v = (v << 1) | self.get_bit() as u32;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn roundtrip_random_bit_patterns() {
+        let mut r = SplitMix64::new(3);
+        let values: Vec<(u32, u8)> =
+            (0..500).map(|_| {
+                let n = (r.next_u64() % 24 + 1) as u8;
+                ((r.next_u64() as u32) & ((1u32 << n) - 1), n)
+            }).collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &values {
+            w.put_bits(v, n);
+        }
+        let bytes = w.finish();
+        let mut rd = BitReader::new(&bytes);
+        for &(v, n) in &values {
+            assert_eq!(rd.get_bits(n), v);
+        }
+    }
+
+    #[test]
+    fn bit_len_counts_partial_bytes() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b101, 3);
+        assert_eq!(w.bit_len(), 3);
+        w.put_bits(0xffff, 16);
+        assert_eq!(w.bit_len(), 19);
+        assert_eq!(w.finish().len(), 3);
+    }
+
+    #[test]
+    fn reading_past_end_returns_zero() {
+        let mut rd = BitReader::new(&[0xff]);
+        assert_eq!(rd.get_bits(8), 0xff);
+        assert_eq!(rd.get_bits(8), 0);
+    }
+}

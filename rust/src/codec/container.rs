@@ -1,0 +1,266 @@
+//! The BaF bitstream container — what actually travels edge -> cloud.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset size  field
+//! 0      4     magic "BAFT"
+//! 4      1     version (1)
+//! 5      1     codec id (CodecKind)
+//! 6      1     n  (sample bit depth)
+//! 7      1     qp (lossy codecs only; 0 otherwise)
+//! 8      2     C  (number of channels)
+//! 10     2     tile_w
+//! 12     2     tile_h
+//! 14     2     cols
+//! 16     2     rows
+//! 18     4     payload length in bytes
+//! 22     4*C   side info: per channel (min f16, max f16) — the paper's
+//!              C*32 bits of quantizer parameters (§3.2)
+//! ..     len   entropy-coded payload
+//! ..     4     CRC32 over everything above
+//! ```
+
+use super::{CodecKind, ImageMeta};
+use crate::quant::{ChannelRange, QuantizedTensor};
+use crate::tile::{tile, untile, TiledImage};
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+use anyhow::{bail, Result};
+
+pub const MAGIC: &[u8; 4] = b"BAFT";
+pub const VERSION: u8 = 1;
+const HEADER_LEN: usize = 22;
+
+/// A decoded frame header + payload view.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub codec: CodecKind,
+    pub n: u8,
+    pub qp: u8,
+    pub channels: usize,
+    pub tile_w: usize,
+    pub tile_h: usize,
+    pub cols: usize,
+    pub rows: usize,
+    pub ranges: Vec<ChannelRange>,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn image_meta(&self) -> ImageMeta {
+        ImageMeta {
+            width: self.cols * self.tile_w,
+            height: self.rows * self.tile_h,
+            n: self.n,
+        }
+    }
+}
+
+/// Serialize: quantized tensor -> tiled image -> codec -> framed bytes.
+pub fn pack(q: &QuantizedTensor, codec: CodecKind, qp: u8) -> Vec<u8> {
+    let img = tile(q);
+    // TLC-IC codes the channel-plane sequence directly (inter-channel
+    // prediction needs plane structure); other codecs get the tiled image.
+    let payload = if codec == CodecKind::TlcIc {
+        super::tlc_ic::encode_planes(&q.bins, q.c, q.h, q.w, q.n)
+    } else {
+        codec.encode_image(&img.samples, img.width, img.height, q.n, qp)
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + 4 * q.c + payload.len() + 4);
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    out.push(codec as u8);
+    out.push(q.n);
+    out.push(qp);
+    out.extend_from_slice(&(q.c as u16).to_le_bytes());
+    out.extend_from_slice(&(img.tile_w as u16).to_le_bytes());
+    out.extend_from_slice(&(img.tile_h as u16).to_le_bytes());
+    out.extend_from_slice(&(img.cols as u16).to_le_bytes());
+    out.extend_from_slice(&(img.rows as u16).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    for r in &q.ranges {
+        out.extend_from_slice(&f32_to_f16_bits(r.min).to_le_bytes());
+        out.extend_from_slice(&f32_to_f16_bits(r.max).to_le_bytes());
+    }
+    out.extend_from_slice(&payload);
+    let crc = crc32fast::hash(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse and CRC-check a frame.
+pub fn parse(bytes: &[u8]) -> Result<Frame> {
+    if bytes.len() < HEADER_LEN + 4 {
+        bail!("frame too short ({} bytes)", bytes.len());
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let got = crc32fast::hash(body);
+    if want != got {
+        bail!("CRC mismatch: stored {want:#010x}, computed {got:#010x}");
+    }
+    if &body[0..4] != MAGIC {
+        bail!("bad magic");
+    }
+    if body[4] != VERSION {
+        bail!("unsupported version {}", body[4]);
+    }
+    let codec = CodecKind::from_u8(body[5])?;
+    let n = body[6];
+    let qp = body[7];
+    if !(2..=16).contains(&n) {
+        bail!("bad bit depth {n}");
+    }
+    let rd16 = |off: usize| u16::from_le_bytes([body[off], body[off + 1]]) as usize;
+    let channels = rd16(8);
+    let tile_w = rd16(10);
+    let tile_h = rd16(12);
+    let cols = rd16(14);
+    let rows = rd16(16);
+    let payload_len =
+        u32::from_le_bytes([body[18], body[19], body[20], body[21]]) as usize;
+    if channels == 0 || cols * rows < channels {
+        bail!("inconsistent geometry: C={channels}, grid {cols}x{rows}");
+    }
+    let side_len = 4 * channels;
+    if body.len() != HEADER_LEN + side_len + payload_len {
+        bail!(
+            "length mismatch: header says {} body is {}",
+            HEADER_LEN + side_len + payload_len,
+            body.len()
+        );
+    }
+    let mut ranges = Vec::with_capacity(channels);
+    for ch in 0..channels {
+        let off = HEADER_LEN + 4 * ch;
+        let min = f16_bits_to_f32(u16::from_le_bytes([body[off], body[off + 1]]));
+        let max = f16_bits_to_f32(u16::from_le_bytes([body[off + 2], body[off + 3]]));
+        if !(min.is_finite() && max.is_finite()) || max < min {
+            bail!("bad channel range [{min}, {max}]");
+        }
+        ranges.push(ChannelRange { min, max });
+    }
+    let payload = body[HEADER_LEN + side_len..].to_vec();
+    Ok(Frame { codec, n, qp, channels, tile_w, tile_h, cols, rows, ranges, payload })
+}
+
+/// Decode a parsed frame back to a `QuantizedTensor`.
+pub fn unpack(frame: &Frame) -> QuantizedTensor {
+    let meta = frame.image_meta();
+    if frame.codec == CodecKind::TlcIc {
+        return QuantizedTensor {
+            bins: super::tlc_ic::decode_planes(
+                &frame.payload,
+                frame.channels,
+                frame.tile_h,
+                frame.tile_w,
+                frame.n,
+            ),
+            c: frame.channels,
+            h: frame.tile_h,
+            w: frame.tile_w,
+            n: frame.n,
+            ranges: frame.ranges.clone(),
+        };
+    }
+    let samples = frame.codec.decode_image(&frame.payload, &meta, frame.qp);
+    let img = TiledImage {
+        width: meta.width,
+        height: meta.height,
+        samples,
+        n: frame.n,
+        cols: frame.cols,
+        rows: frame.rows,
+        tile_w: frame.tile_w,
+        tile_h: frame.tile_h,
+        channels: frame.channels,
+    };
+    QuantizedTensor {
+        bins: untile(&img),
+        c: frame.channels,
+        h: frame.tile_h,
+        w: frame.tile_w,
+        n: frame.n,
+        ranges: frame.ranges.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize;
+    use crate::tensor::Tensor;
+    use crate::util::SplitMix64;
+
+    fn random_quant(c: usize, n: u8, seed: u64) -> QuantizedTensor {
+        let mut r = SplitMix64::new(seed);
+        let z = Tensor::from_vec(
+            &[c, 16, 16],
+            (0..c * 256).map(|_| r.next_f32() * 5.0 - 2.5).collect(),
+        );
+        quantize(&z, n)
+    }
+
+    #[test]
+    fn pack_parse_unpack_lossless_roundtrip() {
+        for codec in [
+            CodecKind::Tlc,
+            CodecKind::PngLike,
+            CodecKind::ZstdRaw,
+            CodecKind::TlcIc,
+        ] {
+            let q = random_quant(16, 8, 1);
+            let bytes = pack(&q, codec, 0);
+            let frame = parse(&bytes).unwrap();
+            assert_eq!(frame.n, 8);
+            assert_eq!(frame.channels, 16);
+            let q2 = unpack(&frame);
+            assert_eq!(q2.bins, q.bins, "{codec:?}");
+            // ranges roundtrip exactly (already f16-rounded by quantize)
+            for (a, b) in q.ranges.iter().zip(&q2.ranges) {
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_roundtrip_preserves_geometry() {
+        let q = random_quant(8, 8, 2);
+        let bytes = pack(&q, CodecKind::Mic, 20);
+        let frame = parse(&bytes).unwrap();
+        let q2 = unpack(&frame);
+        assert_eq!((q2.c, q2.h, q2.w, q2.n), (q.c, q.h, q.w, q.n));
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let q = random_quant(4, 6, 3);
+        let mut bytes = pack(&q, CodecKind::Tlc, 0);
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        assert!(parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let q = random_quant(4, 6, 4);
+        let bytes = pack(&q, CodecKind::Tlc, 0);
+        for cut in [0, 5, HEADER_LEN, bytes.len() - 5] {
+            assert!(parse(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn header_overhead_matches_paper_accounting() {
+        // side info = C * 32 bits, exactly the paper's accounting
+        let q = random_quant(32, 8, 5);
+        let bytes = pack(&q, CodecKind::Tlc, 0);
+        let frame = parse(&bytes).unwrap();
+        let side_bits = 32 * frame.channels;
+        let fixed_bits = (HEADER_LEN + 4) * 8;
+        assert_eq!(
+            bytes.len() * 8,
+            fixed_bits + side_bits + frame.payload.len() * 8
+        );
+    }
+}

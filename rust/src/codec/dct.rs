@@ -1,0 +1,143 @@
+//! 8x8 orthonormal DCT-II / DCT-III for the lossy codec (MIC).
+//!
+//! Separable float implementation with precomputed basis; exactness
+//! matters less than symmetry (encode and decode must use the same
+//! basis), but the pair is inverse to ~1e-4 over the full dynamic range,
+//! far below one quantizer step at any usable QP.
+
+use once_cell::sync::Lazy;
+
+pub const N: usize = 8;
+
+/// cos basis[k][x] = c(k) * cos((2x+1) k pi / 16), c(0)=sqrt(1/8), else sqrt(2/8)
+static BASIS: Lazy<[[f32; N]; N]> = Lazy::new(|| {
+    let mut b = [[0f32; N]; N];
+    for (k, row) in b.iter_mut().enumerate() {
+        let ck = if k == 0 { (1.0 / N as f64).sqrt() } else { (2.0 / N as f64).sqrt() };
+        for (x, v) in row.iter_mut().enumerate() {
+            *v = (ck
+                * ((2.0 * x as f64 + 1.0) * k as f64 * std::f64::consts::PI
+                    / (2.0 * N as f64))
+                    .cos()) as f32;
+        }
+    }
+    b
+});
+
+/// Forward 2-D DCT of an 8x8 block (row-major).
+pub fn forward(block: &[f32; N * N]) -> [f32; N * N] {
+    let b = &*BASIS;
+    let mut tmp = [0f32; N * N];
+    // rows
+    for y in 0..N {
+        for k in 0..N {
+            let mut acc = 0f32;
+            for x in 0..N {
+                acc += block[y * N + x] * b[k][x];
+            }
+            tmp[y * N + k] = acc;
+        }
+    }
+    // cols
+    let mut out = [0f32; N * N];
+    for k in 0..N {
+        for u in 0..N {
+            let mut acc = 0f32;
+            for y in 0..N {
+                acc += tmp[y * N + u] * b[k][y];
+            }
+            out[k * N + u] = acc;
+        }
+    }
+    out
+}
+
+/// Inverse 2-D DCT of an 8x8 coefficient block.
+pub fn inverse(coef: &[f32; N * N]) -> [f32; N * N] {
+    let b = &*BASIS;
+    let mut tmp = [0f32; N * N];
+    // cols (transpose of forward)
+    for y in 0..N {
+        for u in 0..N {
+            let mut acc = 0f32;
+            for k in 0..N {
+                acc += coef[k * N + u] * b[k][y];
+            }
+            tmp[y * N + u] = acc;
+        }
+    }
+    let mut out = [0f32; N * N];
+    for y in 0..N {
+        for x in 0..N {
+            let mut acc = 0f32;
+            for k in 0..N {
+                acc += tmp[y * N + k] * b[k][x];
+            }
+            out[y * N + x] = acc;
+        }
+    }
+    out
+}
+
+/// JPEG-style zigzag scan order for an 8x8 block.
+pub static ZIGZAG: [usize; 64] = [
+    0, 1, 8, 16, 9, 2, 3, 10, 17, 24, 32, 25, 18, 11, 4, 5, 12, 19, 26, 33, 40,
+    48, 41, 34, 27, 20, 13, 6, 7, 14, 21, 28, 35, 42, 49, 56, 57, 50, 43, 36,
+    29, 22, 15, 23, 30, 37, 44, 51, 58, 59, 52, 45, 38, 31, 39, 46, 53, 60, 61,
+    54, 47, 55, 62, 63,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn inverse_of_forward_is_identity() {
+        let mut r = SplitMix64::new(6);
+        for _ in 0..20 {
+            let mut block = [0f32; 64];
+            for v in &mut block {
+                *v = r.next_f32() * 510.0 - 255.0;
+            }
+            let rec = inverse(&forward(&block));
+            for (a, b) in block.iter().zip(&rec) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn dc_is_mean_times_8() {
+        let block = [32.0f32; 64];
+        let coef = forward(&block);
+        assert!((coef[0] - 32.0 * 8.0).abs() < 1e-3);
+        for &c in &coef[1..] {
+            assert!(c.abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let mut r = SplitMix64::new(8);
+        let mut block = [0f32; 64];
+        for v in &mut block {
+            *v = r.next_f32() * 100.0;
+        }
+        let coef = forward(&block);
+        let e1: f32 = block.iter().map(|v| v * v).sum();
+        let e2: f32 = coef.iter().map(|v| v * v).sum();
+        assert!((e1 - e2).abs() / e1 < 1e-4);
+    }
+
+    #[test]
+    fn zigzag_is_permutation() {
+        let mut seen = [false; 64];
+        for &i in &ZIGZAG {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert_eq!(ZIGZAG[0], 0);
+        assert_eq!(ZIGZAG[63], 63);
+    }
+}

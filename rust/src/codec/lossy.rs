@@ -1,0 +1,297 @@
+//! MIC — Mini Intra Codec, the HEVC-intra stand-in (DESIGN.md §2).
+//!
+//! Transform-codes a single-plane image of n-bit samples: 8x8 blocks,
+//! orthonormal DCT, HEVC-style quantizer step `Qstep = 2^((QP-4)/6)`
+//! (scaled to bit depth), zigzag scan, and a context-coded symbol stream
+//! (DC predicted from the previous block; per-band zero/sign/magnitude
+//! models) through the range coder.
+//!
+//! Used for the paper's two lossy curves: the [4] baseline that codes
+//! ALL channels at 8 bits over a QP sweep, and the "quantize to 6 bits
+//! then lossy-code" variant (Fig. 4, purple).
+
+use super::dct::{self, ZIGZAG};
+use super::rc::{BitModel, BitTree, Decoder, Encoder};
+use super::ImageMeta;
+
+/// Frequency band of a zigzag position (context grouping for AC models).
+#[inline]
+fn band(pos: usize) -> usize {
+    match pos {
+        1..=5 => 0,
+        6..=20 => 1,
+        _ => 2,
+    }
+}
+
+/// HEVC-style quantizer step for a QP, normalized so that QP has the
+/// same *relative* meaning at any bit depth (QP 0 ~ near-lossless at 8
+/// bits).
+pub fn qstep(qp: u8, n: u8) -> f32 {
+    let base = 2f32.powf((qp as f32 - 4.0) / 6.0);
+    // scale with dynamic range relative to 8-bit
+    base * 2f32.powi(n as i32 - 8)
+}
+
+struct Models {
+    dc: BitTree,           // DC residual magnitude class
+    dc_sign: BitModel,
+    last: BitTree,         // index of last significant coefficient
+    zero: [BitModel; 3],   // per-band significance
+    sign: [BitModel; 3],
+    exp: [[BitModel; 14]; 3],
+}
+
+impl Models {
+    fn new() -> Self {
+        Models {
+            dc: BitTree::new(5),
+            dc_sign: BitModel::default(),
+            last: BitTree::new(7),
+            zero: [BitModel::default(); 3],
+            sign: [BitModel::default(); 3],
+            exp: [[BitModel::default(); 14]; 3],
+        }
+    }
+}
+
+fn encode_mag(enc: &mut Encoder, exp: &mut [BitModel; 14], mag: u32) {
+    debug_assert!(mag >= 1);
+    let k = (31 - mag.leading_zeros()).min(13);
+    for i in 0..k {
+        enc.encode(&mut exp[i as usize], 1);
+    }
+    if k < 13 {
+        enc.encode(&mut exp[k as usize], 0);
+    }
+    if k > 0 {
+        enc.encode_direct(mag & ((1 << k) - 1), k);
+    }
+}
+
+fn decode_mag(dec: &mut Decoder, exp: &mut [BitModel; 14]) -> u32 {
+    let mut k = 0u32;
+    while k < 13 && dec.decode(&mut exp[k as usize]) == 1 {
+        k += 1;
+    }
+    let mantissa = if k > 0 { dec.decode_direct(k) } else { 0 };
+    (1 << k) | mantissa
+}
+
+/// Encode. Returns the bitstream; decoding requires the same (w, h, n, qp).
+pub fn encode(samples: &[u16], width: usize, height: usize, n: u8, qp: u8) -> Vec<u8> {
+    assert_eq!(samples.len(), width * height);
+    let bw = width.div_ceil(8);
+    let bh = height.div_ceil(8);
+    let step = qstep(qp, n);
+    let center = (1i32 << (n - 1)) as f32;
+    let mut enc = Encoder::new();
+    let mut m = Models::new();
+    let mut prev_dc = 0i32;
+    for by in 0..bh {
+        for bx in 0..bw {
+            // gather block with edge replication
+            let mut block = [0f32; 64];
+            for y in 0..8 {
+                for x in 0..8 {
+                    let sy = (by * 8 + y).min(height - 1);
+                    let sx = (bx * 8 + x).min(width - 1);
+                    block[y * 8 + x] = samples[sy * width + sx] as f32 - center;
+                }
+            }
+            let coef = dct::forward(&block);
+            // quantize
+            let mut q = [0i32; 64];
+            for (i, &c) in coef.iter().enumerate() {
+                q[i] = (c / step).round() as i32;
+            }
+            // DC: differential vs previous block
+            let ddc = q[0] - prev_dc;
+            prev_dc = q[0];
+            let (dsign, dmag) = (ddc < 0, ddc.unsigned_abs());
+            if dmag == 0 {
+                m.dc.encode(&mut enc, 0);
+            } else {
+                let k = (32 - dmag.leading_zeros()).min(31); // 1..=31 -> class
+                m.dc.encode(&mut enc, k);
+                enc.encode(&mut m.dc_sign, dsign as u32);
+                if k > 1 {
+                    enc.encode_direct(dmag & ((1 << (k - 1)) - 1), k - 1);
+                }
+            }
+            // AC: last significant position in zigzag order
+            let mut last = 0usize;
+            for pos in (1..64).rev() {
+                if q[ZIGZAG[pos]] != 0 {
+                    last = pos;
+                    break;
+                }
+            }
+            m.last.encode(&mut enc, last as u32);
+            for pos in 1..=last {
+                let v = q[ZIGZAG[pos]];
+                let b = band(pos);
+                if v == 0 {
+                    enc.encode(&mut m.zero[b], 0);
+                    continue;
+                }
+                enc.encode(&mut m.zero[b], 1);
+                enc.encode(&mut m.sign[b], (v < 0) as u32);
+                encode_mag(&mut enc, &mut m.exp[b], v.unsigned_abs());
+            }
+        }
+    }
+    enc.finish()
+}
+
+/// Decode back to (lossy) samples.
+pub fn decode(bytes: &[u8], meta: &ImageMeta, qp: u8) -> Vec<u16> {
+    let (width, height, n) = (meta.width, meta.height, meta.n);
+    let bw = width.div_ceil(8);
+    let bh = height.div_ceil(8);
+    let step = qstep(qp, n);
+    let center = (1i32 << (n - 1)) as f32;
+    let maxv = (1i32 << n) - 1;
+    let mut dec = Decoder::new(bytes);
+    let mut m = Models::new();
+    let mut out = vec![0u16; width * height];
+    let mut prev_dc = 0i32;
+    for by in 0..bh {
+        for bx in 0..bw {
+            let mut q = [0i32; 64];
+            // DC
+            let k = m.dc.decode(&mut dec);
+            let ddc = if k == 0 {
+                0
+            } else {
+                let neg = dec.decode(&mut m.dc_sign) == 1;
+                let mag = if k > 1 {
+                    (1u32 << (k - 1)) | dec.decode_direct(k - 1)
+                } else {
+                    1
+                };
+                if neg {
+                    -(mag as i32)
+                } else {
+                    mag as i32
+                }
+            };
+            prev_dc += ddc;
+            q[0] = prev_dc;
+            // AC
+            let last = m.last.decode(&mut dec) as usize;
+            for pos in 1..=last {
+                let b = band(pos);
+                if dec.decode(&mut m.zero[b]) == 0 {
+                    continue;
+                }
+                let neg = dec.decode(&mut m.sign[b]) == 1;
+                let mag = decode_mag(&mut dec, &mut m.exp[b]) as i32;
+                q[ZIGZAG[pos]] = if neg { -mag } else { mag };
+            }
+            // reconstruct
+            let mut coef = [0f32; 64];
+            for i in 0..64 {
+                coef[i] = q[i] as f32 * step;
+            }
+            let block = dct::inverse(&coef);
+            for y in 0..8 {
+                for x in 0..8 {
+                    let sy = by * 8 + y;
+                    let sx = bx * 8 + x;
+                    if sy < height && sx < width {
+                        let v = (block[y * 8 + x] + center).round() as i32;
+                        out[sy * width + sx] = v.clamp(0, maxv) as u16;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn psnr(a: &[u16], b: &[u16], n: u8) -> f64 {
+        let peak = ((1u32 << n) - 1) as f64;
+        let mse: f64 = a
+            .iter()
+            .zip(b)
+            .map(|(&x, &y)| {
+                let d = x as f64 - y as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / a.len() as f64;
+        if mse == 0.0 {
+            f64::INFINITY
+        } else {
+            10.0 * (peak * peak / mse).log10()
+        }
+    }
+
+    fn smooth_image(w: usize, h: usize, n: u8, seed: u64) -> Vec<u16> {
+        let mut r = SplitMix64::new(seed);
+        let maxv = (1u32 << n) - 1;
+        (0..w * h)
+            .map(|i| {
+                let x = (i % w) as f32 / w as f32;
+                let y = (i / w) as f32 / h as f32;
+                let v = (0.5 + 0.3 * (6.0 * x).sin() * (4.0 * y).cos()
+                    + 0.05 * (r.next_f32() - 0.5)) as f32;
+                ((v.clamp(0.0, 1.0)) * maxv as f32) as u16
+            })
+            .collect()
+    }
+
+    #[test]
+    fn quality_degrades_with_qp_and_rate_shrinks() {
+        let img = smooth_image(64, 64, 8, 1);
+        let meta = ImageMeta { width: 64, height: 64, n: 8 };
+        let mut prev_size = usize::MAX;
+        let mut prev_psnr = f64::INFINITY;
+        for qp in [4u8, 16, 28, 40] {
+            let bytes = encode(&img, 64, 64, 8, qp);
+            let rec = decode(&bytes, &meta, qp);
+            let p = psnr(&img, &rec, 8);
+            assert!(bytes.len() < prev_size, "rate must shrink with QP");
+            assert!(p <= prev_psnr + 0.5, "psnr must not improve with QP");
+            prev_size = bytes.len();
+            prev_psnr = p;
+        }
+    }
+
+    #[test]
+    fn low_qp_is_near_lossless() {
+        let img = smooth_image(48, 40, 8, 3);
+        let meta = ImageMeta { width: 48, height: 40, n: 8 };
+        let bytes = encode(&img, 48, 40, 8, 0);
+        let rec = decode(&bytes, &meta, 0);
+        assert!(psnr(&img, &rec, 8) > 48.0);
+    }
+
+    #[test]
+    fn non_multiple_of_8_dimensions() {
+        let img = smooth_image(37, 29, 8, 9);
+        let meta = ImageMeta { width: 37, height: 29, n: 8 };
+        let bytes = encode(&img, 37, 29, 8, 12);
+        let rec = decode(&bytes, &meta, 12);
+        assert_eq!(rec.len(), 37 * 29);
+        assert!(psnr(&img, &rec, 8) > 25.0);
+    }
+
+    #[test]
+    fn works_at_low_bit_depth() {
+        let img = smooth_image(32, 32, 6, 4);
+        let meta = ImageMeta { width: 32, height: 32, n: 6 };
+        for qp in [0u8, 10, 20] {
+            let bytes = encode(&img, 32, 32, 6, qp);
+            let rec = decode(&bytes, &meta, qp);
+            assert!(rec.iter().all(|&v| v < 64));
+            assert!(psnr(&img, &rec, 6) > 20.0, "qp={qp}");
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! The codec substrate: lossless (TLC / PNG-like / zstd) and lossy (MIC)
+//! single-plane image coders plus the bitstream container.
+//!
+//! These stand in for FLIF and HEVC in the paper's evaluation; see
+//! DESIGN.md §2 for the substitution rationale and E2/E4 for the benches
+//! that compare them.
+
+pub mod bitio;
+pub mod container;
+pub mod dct;
+pub mod lossy;
+pub mod png_like;
+pub mod rice;
+pub mod predict;
+pub mod rc;
+pub mod tlc;
+pub mod tlc_ic;
+pub mod zstd_raw;
+
+use anyhow::bail;
+
+/// Geometry a decoder needs (travels in the container header).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ImageMeta {
+    pub width: usize,
+    pub height: usize,
+    /// Sample bit depth (2..=16).
+    pub n: u8,
+}
+
+/// Registry of payload codecs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum CodecKind {
+    /// Tensor Lossless Codec — context-adaptive range coding (FLIF stand-in).
+    Tlc = 1,
+    /// Paeth + DEFLATE (PNG stand-in).
+    PngLike = 2,
+    /// Bit-packed zstd (generic-compressor baseline).
+    ZstdRaw = 3,
+    /// Mini Intra Codec — lossy DCT transform coding (HEVC-intra stand-in).
+    Mic = 4,
+    /// Inter-channel TLC — channel-predictive lossless coding (the [5]
+    /// "customized deep-feature lossless codec" analog). Codes the
+    /// channel-plane sequence directly (container skips tiling).
+    TlcIc = 5,
+}
+
+impl CodecKind {
+    pub fn from_u8(v: u8) -> anyhow::Result<Self> {
+        Ok(match v {
+            1 => CodecKind::Tlc,
+            2 => CodecKind::PngLike,
+            3 => CodecKind::ZstdRaw,
+            4 => CodecKind::Mic,
+            5 => CodecKind::TlcIc,
+            other => bail!("unknown codec id {other}"),
+        })
+    }
+
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        Ok(match name {
+            "tlc" => CodecKind::Tlc,
+            "png" | "png-like" => CodecKind::PngLike,
+            "zstd" => CodecKind::ZstdRaw,
+            "mic" | "lossy" => CodecKind::Mic,
+            "tlc-ic" | "tlcic" => CodecKind::TlcIc,
+            other => bail!("unknown codec '{other}' (tlc|tlc-ic|png|zstd|mic)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecKind::Tlc => "tlc",
+            CodecKind::PngLike => "png-like",
+            CodecKind::ZstdRaw => "zstd",
+            CodecKind::Mic => "mic",
+            CodecKind::TlcIc => "tlc-ic",
+        }
+    }
+
+    pub fn is_lossless(&self) -> bool {
+        !matches!(self, CodecKind::Mic)
+    }
+
+    /// Encode one plane. `qp` is only meaningful for lossy codecs.
+    pub fn encode_image(
+        &self,
+        samples: &[u16],
+        width: usize,
+        height: usize,
+        n: u8,
+        qp: u8,
+    ) -> Vec<u8> {
+        match self {
+            CodecKind::Tlc => tlc::encode(samples, width, height, n),
+            CodecKind::PngLike => png_like::encode(samples, width, height, n),
+            CodecKind::ZstdRaw => zstd_raw::encode(samples, width, height, n),
+            CodecKind::Mic => lossy::encode(samples, width, height, n, qp),
+            // single-plane fallback (the container codes planes directly)
+            CodecKind::TlcIc => tlc_ic::encode_planes(samples, 1, height, width, n),
+        }
+    }
+
+    /// Decode one plane.
+    pub fn decode_image(&self, bytes: &[u8], meta: &ImageMeta, qp: u8) -> Vec<u16> {
+        match self {
+            CodecKind::Tlc => tlc::decode(bytes, meta),
+            CodecKind::PngLike => png_like::decode(bytes, meta),
+            CodecKind::ZstdRaw => zstd_raw::decode(bytes, meta),
+            CodecKind::Mic => lossy::decode(bytes, meta, qp),
+            CodecKind::TlcIc => {
+                tlc_ic::decode_planes(bytes, 1, meta.height, meta.width, meta.n)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrips_through_ids_and_names() {
+        for k in [
+            CodecKind::Tlc,
+            CodecKind::PngLike,
+            CodecKind::ZstdRaw,
+            CodecKind::Mic,
+            CodecKind::TlcIc,
+        ] {
+            assert_eq!(CodecKind::from_u8(k as u8).unwrap(), k);
+            assert_eq!(CodecKind::from_name(k.name()).unwrap(), k);
+        }
+        assert!(CodecKind::from_u8(0).is_err());
+        assert!(CodecKind::from_name("hevc").is_err());
+    }
+
+    #[test]
+    fn lossless_flag() {
+        assert!(CodecKind::Tlc.is_lossless());
+        assert!(!CodecKind::Mic.is_lossless());
+    }
+}

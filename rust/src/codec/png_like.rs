@@ -1,0 +1,113 @@
+//! PNG-like baseline: per-row Paeth filtering + DEFLATE.
+//!
+//! Stands in for the paper's PNG reference point ([3] compresses 8-bit
+//! feature maps with PNG). Samples wider than 8 bits are split
+//! big-endian like PNG's 16-bit mode.
+
+use super::predict::paeth;
+use super::ImageMeta;
+use flate2::read::ZlibDecoder;
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+use std::io::{Read, Write};
+
+fn bytes_per_sample(n: u8) -> usize {
+    if n <= 8 {
+        1
+    } else {
+        2
+    }
+}
+
+/// Paeth-filter rows then DEFLATE.
+pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
+    let bps = bytes_per_sample(n);
+    let stride = width * bps;
+    let mut raw = vec![0u8; height * stride];
+    for y in 0..height {
+        for x in 0..width {
+            let v = samples[y * width + x];
+            let off = y * stride + x * bps;
+            if bps == 1 {
+                raw[off] = v as u8;
+            } else {
+                raw[off] = (v >> 8) as u8;
+                raw[off + 1] = v as u8;
+            }
+        }
+    }
+    // Paeth filter per byte-lane (PNG semantics: the "left" neighbour is
+    // bps bytes back)
+    let mut filtered = vec![0u8; raw.len()];
+    for y in 0..height {
+        for i in 0..stride {
+            let cur = raw[y * stride + i] as i32;
+            let a = if i >= bps { raw[y * stride + i - bps] as i32 } else { 0 };
+            let b = if y > 0 { raw[(y - 1) * stride + i] as i32 } else { 0 };
+            let c = if y > 0 && i >= bps { raw[(y - 1) * stride + i - bps] as i32 } else { 0 };
+            filtered[y * stride + i] = (cur - paeth(a, b, c)) as u8;
+        }
+    }
+    let mut enc = ZlibEncoder::new(Vec::new(), Compression::best());
+    enc.write_all(&filtered).expect("in-memory write");
+    enc.finish().expect("deflate finish")
+}
+
+/// Inverse of `encode`.
+pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Vec<u16> {
+    let (width, height, n) = (meta.width, meta.height, meta.n);
+    let bps = bytes_per_sample(n);
+    let stride = width * bps;
+    let mut filtered = Vec::with_capacity(height * stride);
+    ZlibDecoder::new(bytes).read_to_end(&mut filtered).expect("inflate");
+    assert_eq!(filtered.len(), height * stride, "corrupt png-like stream");
+    let mut raw = vec![0u8; filtered.len()];
+    for y in 0..height {
+        for i in 0..stride {
+            let a = if i >= bps { raw[y * stride + i - bps] as i32 } else { 0 };
+            let b = if y > 0 { raw[(y - 1) * stride + i] as i32 } else { 0 };
+            let c = if y > 0 && i >= bps { raw[(y - 1) * stride + i - bps] as i32 } else { 0 };
+            raw[y * stride + i] =
+                (filtered[y * stride + i] as i32 + paeth(a, b, c)) as u8;
+        }
+    }
+    let mut samples = vec![0u16; width * height];
+    for y in 0..height {
+        for x in 0..width {
+            let off = y * stride + x * bps;
+            samples[y * width + x] = if bps == 1 {
+                raw[off] as u16
+            } else {
+                ((raw[off] as u16) << 8) | raw[off + 1] as u16
+            };
+        }
+    }
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn roundtrip_8_and_16_bit() {
+        let mut r = SplitMix64::new(21);
+        for n in [4u8, 8, 12, 16] {
+            let mask = (1u32 << n) - 1;
+            let samples: Vec<u16> =
+                (0..40 * 30).map(|_| (r.next_u64() as u32 & mask) as u16).collect();
+            let bytes = encode(&samples, 40, 30, n);
+            let meta = ImageMeta { width: 40, height: 30, n };
+            assert_eq!(decode(&bytes, &meta), samples, "n={n}");
+        }
+    }
+
+    #[test]
+    fn smooth_content_compresses() {
+        let w = 64;
+        let samples: Vec<u16> = (0..w * w).map(|i| ((i % w) + i / w) as u16 / 2).collect();
+        let bytes = encode(&samples, w, w, 8);
+        assert!(bytes.len() < w * w / 4);
+    }
+}

@@ -1,0 +1,95 @@
+//! Spatial predictors for the lossless path.
+//!
+//! MED (LOCO-I/JPEG-LS median edge detector) is TLC's primary predictor —
+//! the same family FLIF's MANIAC contexts build on; Paeth is used by the
+//! PNG-like baseline.
+
+/// MED / LOCO-I prediction from left (a), top (b), top-left (c).
+#[inline]
+pub fn med(a: i32, b: i32, c: i32) -> i32 {
+    let (mn, mx) = if a < b { (a, b) } else { (b, a) };
+    if c >= mx {
+        mn
+    } else if c <= mn {
+        mx
+    } else {
+        a + b - c
+    }
+}
+
+/// Paeth predictor (PNG filter type 4).
+#[inline]
+pub fn paeth(a: i32, b: i32, c: i32) -> i32 {
+    let p = a + b - c;
+    let pa = (p - a).abs();
+    let pb = (p - b).abs();
+    let pc = (p - c).abs();
+    if pa <= pb && pa <= pc {
+        a
+    } else if pb <= pc {
+        b
+    } else {
+        c
+    }
+}
+
+/// Gradient-activity context bucket for TLC's residual models: quantizes
+/// the local texture |a-c| + |c-b| into one of `NUM_CONTEXTS` bins so
+/// flat and busy regions adapt separate probability models.
+pub const NUM_CONTEXTS: usize = 8;
+
+#[inline]
+pub fn activity_context(a: i32, b: i32, c: i32, n_bits: u8) -> usize {
+    // normalize activity to the 8-bit scale so context boundaries are
+    // comparable across bit depths
+    let act = ((a - c).abs() + (c - b).abs()) >> n_bits.saturating_sub(8);
+    match act {
+        0 => 0,
+        1 => 1,
+        2 => 2,
+        3..=4 => 3,
+        5..=8 => 4,
+        9..=16 => 5,
+        17..=32 => 6,
+        _ => 7,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn med_selects_edges() {
+        // vertical edge: c == b -> predict a? c >= max(a,b) when b==c>a -> min = a
+        assert_eq!(med(10, 50, 50), 10);
+        // horizontal edge
+        assert_eq!(med(50, 10, 50), 10);
+        // smooth gradient: planar prediction
+        assert_eq!(med(20, 30, 25), 25);
+        // c below both -> max
+        assert_eq!(med(20, 30, 10), 30);
+    }
+
+    #[test]
+    fn paeth_matches_png_spec_cases() {
+        assert_eq!(paeth(0, 0, 0), 0);
+        assert_eq!(paeth(10, 20, 10), 20); // p=20, pb=0
+        assert_eq!(paeth(20, 10, 10), 20); // p=20, pa=0
+        assert_eq!(paeth(5, 5, 9), 5); // ties prefer a
+    }
+
+    #[test]
+    fn contexts_cover_and_order() {
+        assert_eq!(activity_context(5, 5, 5, 8), 0);
+        assert!(activity_context(0, 255, 128, 8) >= 6);
+        let mut last = 0;
+        for act_pair in [(0, 0), (1, 0), (2, 0), (4, 0), (8, 0), (16, 0), (32, 0), (64, 0)] {
+            let ctx = activity_context(act_pair.0, 0, 0, 8);
+            assert!(ctx >= last, "activity must map monotonically");
+            last = ctx;
+        }
+        // higher bit depth shifts activity down
+        assert_eq!(activity_context(1024, 0, 0, 12), activity_context(64, 0, 0, 8));
+    }
+}

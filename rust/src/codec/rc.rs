@@ -1,0 +1,333 @@
+//! Adaptive binary range coder (LZMA-style carry-less renormalization).
+//!
+//! The workhorse of both the lossless (TLC) and lossy (MIC) codecs.
+//! Probabilities are 11-bit (0..2048) with shift-5 adaptation — the
+//! classic LC/LP-free LZMA bit model. `encode_direct` codes equiprobable
+//! bits without a model (used for residual mantissas and signs in flat
+//! contexts).
+
+pub const PROB_BITS: u32 = 11;
+pub const PROB_ONE: u16 = 1 << PROB_BITS; // 2048
+pub const PROB_INIT: u16 = PROB_ONE / 2;
+const ADAPT_SHIFT: u32 = 5;
+const TOP: u32 = 1 << 24;
+
+/// One adaptive binary probability (probability that the bit is 0).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BitModel(pub u16);
+
+impl Default for BitModel {
+    fn default() -> Self {
+        BitModel(PROB_INIT)
+    }
+}
+
+impl BitModel {
+    #[inline]
+    fn update(&mut self, bit: u32) {
+        if bit == 0 {
+            self.0 += (PROB_ONE - self.0) >> ADAPT_SHIFT;
+        } else {
+            self.0 -= self.0 >> ADAPT_SHIFT;
+        }
+    }
+}
+
+/// Range encoder writing to an internal buffer.
+#[derive(Debug)]
+pub struct Encoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl Default for Encoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self { low: 0, range: u32::MAX, cache: 0, cache_size: 1, out: Vec::new() }
+    }
+
+    #[inline]
+    fn shift_low(&mut self) {
+        if (self.low as u32) < 0xFF00_0000 || (self.low >> 32) != 0 {
+            let carry = (self.low >> 32) as u8;
+            let mut temp = self.cache;
+            loop {
+                self.out.push(temp.wrapping_add(carry));
+                temp = 0xFF;
+                self.cache_size -= 1;
+                if self.cache_size == 0 {
+                    break;
+                }
+            }
+            self.cache = (self.low >> 24) as u8;
+        }
+        self.cache_size += 1;
+        // truncate to 32 bits BEFORE shifting (LZMA: `Low = (UInt32)Low << 8`)
+        self.low = ((self.low as u32) << 8) as u64;
+    }
+
+    /// Encode one bit with an adaptive model.
+    #[inline]
+    pub fn encode(&mut self, model: &mut BitModel, bit: u32) {
+        let bound = (self.range >> PROB_BITS) * model.0 as u32;
+        if bit == 0 {
+            self.range = bound;
+        } else {
+            self.low += bound as u64;
+            self.range -= bound;
+        }
+        model.update(bit);
+        while self.range < TOP {
+            self.range <<= 8;
+            self.shift_low();
+        }
+    }
+
+    /// Encode `n` equiprobable bits of `v`, MSB first.
+    pub fn encode_direct(&mut self, v: u32, n: u32) {
+        for i in (0..n).rev() {
+            self.range >>= 1;
+            let bit = (v >> i) & 1;
+            if bit != 0 {
+                self.low += self.range as u64;
+            }
+            while self.range < TOP {
+                self.range <<= 8;
+                self.shift_low();
+            }
+        }
+    }
+
+    /// Flush and return the compressed bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+}
+
+/// Range decoder reading from a byte slice.
+#[derive(Debug)]
+pub struct Decoder<'a> {
+    code: u32,
+    range: u32,
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        let mut d = Self { code: 0, range: u32::MAX, buf, pos: 0 };
+        // the first of the 5 init bytes is the encoder's leading cache
+        // byte and shifts out of the 32-bit window
+        for _ in 0..5 {
+            d.code = (d.code << 8) | d.next_byte() as u32;
+        }
+        d
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> u8 {
+        let b = self.buf.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b
+    }
+
+    /// Decode one bit with an adaptive model.
+    #[inline]
+    pub fn decode(&mut self, model: &mut BitModel) -> u32 {
+        let bound = (self.range >> PROB_BITS) * model.0 as u32;
+        let bit = if self.code < bound {
+            self.range = bound;
+            0
+        } else {
+            self.code -= bound;
+            self.range -= bound;
+            1
+        };
+        model.update(bit);
+        while self.range < TOP {
+            self.range <<= 8;
+            self.code = (self.code << 8) | self.next_byte() as u32;
+        }
+        bit
+    }
+
+    /// Decode `n` equiprobable bits, MSB first.
+    pub fn decode_direct(&mut self, n: u32) -> u32 {
+        let mut v = 0;
+        for _ in 0..n {
+            self.range >>= 1;
+            let bit = if self.code >= self.range {
+                self.code -= self.range;
+                1
+            } else {
+                0
+            };
+            v = (v << 1) | bit;
+            while self.range < TOP {
+                self.range <<= 8;
+                self.code = (self.code << 8) | self.next_byte() as u32;
+            }
+        }
+        v
+    }
+}
+
+/// Adaptive coder for fixed-width symbols: a binary tree of bit models,
+/// MSB-first (the LZMA "bit tree"). Width up to 16.
+#[derive(Debug, Clone)]
+pub struct BitTree {
+    probs: Vec<BitModel>,
+    bits: u32,
+}
+
+impl BitTree {
+    pub fn new(bits: u32) -> Self {
+        assert!((1..=16).contains(&bits));
+        Self { probs: vec![BitModel::default(); 1 << bits], bits }
+    }
+
+    pub fn encode(&mut self, enc: &mut Encoder, symbol: u32) {
+        debug_assert!(symbol < (1 << self.bits));
+        let mut ctx = 1usize;
+        for i in (0..self.bits).rev() {
+            let bit = (symbol >> i) & 1;
+            enc.encode(&mut self.probs[ctx], bit);
+            ctx = (ctx << 1) | bit as usize;
+        }
+    }
+
+    pub fn decode(&mut self, dec: &mut Decoder) -> u32 {
+        let mut ctx = 1usize;
+        for _ in 0..self.bits {
+            let bit = dec.decode(&mut self.probs[ctx]);
+            ctx = (ctx << 1) | bit as usize;
+        }
+        (ctx as u32) - (1 << self.bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn biased_bits_roundtrip_and_compress() {
+        let mut r = SplitMix64::new(1);
+        let bits: Vec<u32> = (0..20_000).map(|_| (r.next_f32() < 0.05) as u32).collect();
+        let mut enc = Encoder::new();
+        let mut m = BitModel::default();
+        for &b in &bits {
+            enc.encode(&mut m, b);
+        }
+        let buf = enc.finish();
+        // ~0.29 bits/symbol entropy -> must be far below 1 bit/symbol
+        assert!(buf.len() < 20_000 / 8 / 2, "compressed to {} bytes", buf.len());
+        let mut dec = Decoder::new(&buf);
+        let mut m = BitModel::default();
+        for &b in &bits {
+            assert_eq!(dec.decode(&mut m), b);
+        }
+    }
+
+    #[test]
+    fn direct_bits_roundtrip() {
+        let mut r = SplitMix64::new(2);
+        let vals: Vec<(u32, u32)> = (0..5_000)
+            .map(|_| {
+                let n = r.next_u64() % 16 + 1;
+                ((r.next_u64() as u32) & ((1u32 << n) - 1), n as u32)
+            })
+            .collect();
+        let mut enc = Encoder::new();
+        for &(v, n) in &vals {
+            enc.encode_direct(v, n);
+        }
+        let buf = enc.finish();
+        let mut dec = Decoder::new(&buf);
+        for &(v, n) in &vals {
+            assert_eq!(dec.decode_direct(n), v);
+        }
+    }
+
+    #[test]
+    fn mixed_model_and_direct_roundtrip() {
+        let mut r = SplitMix64::new(3);
+        let mut enc = Encoder::new();
+        let mut m0 = BitModel::default();
+        let mut tree = BitTree::new(6);
+        let script: Vec<(u32, u32)> = (0..4_000)
+            .map(|_| (r.next_u64() as u32 % 3, r.next_u64() as u32 & 63))
+            .collect();
+        for &(kind, val) in &script {
+            match kind {
+                0 => enc.encode(&mut m0, val & 1),
+                1 => enc.encode_direct(val, 6),
+                _ => tree.encode(&mut enc, val),
+            }
+        }
+        let buf = enc.finish();
+        let mut dec = Decoder::new(&buf);
+        let mut m0 = BitModel::default();
+        let mut tree = BitTree::new(6);
+        for &(kind, val) in &script {
+            match kind {
+                0 => assert_eq!(dec.decode(&mut m0), val & 1),
+                1 => assert_eq!(dec.decode_direct(6), val),
+                _ => assert_eq!(tree.decode(&mut dec), val),
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_tree_beats_direct_rate() {
+        // symbols heavily concentrated on 0..4 of 64
+        let mut r = SplitMix64::new(4);
+        let syms: Vec<u32> = (0..30_000).map(|_| (r.next_f64() * r.next_f64() * 8.0) as u32 % 64).collect();
+        let mut enc = Encoder::new();
+        let mut tree = BitTree::new(6);
+        for &s in &syms {
+            tree.encode(&mut enc, s);
+        }
+        let adaptive = enc.finish().len();
+        let direct = 30_000 * 6 / 8;
+        assert!(adaptive * 10 < direct * 9, "adaptive {adaptive} vs direct {direct}");
+    }
+
+    #[test]
+    fn carry_propagation_stress() {
+        // Alternate extreme-probability patterns to exercise shift_low
+        // carry paths.
+        let mut enc = Encoder::new();
+        let mut m = BitModel(PROB_ONE - 31);
+        let pattern: Vec<u32> = (0..10_000).map(|i| (i % 97 == 0) as u32).collect();
+        for &b in &pattern {
+            enc.encode(&mut m, b);
+        }
+        let buf = enc.finish();
+        let mut dec = Decoder::new(&buf);
+        let mut m = BitModel(PROB_ONE - 31);
+        for &b in &pattern {
+            assert_eq!(dec.decode(&mut m), b);
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Golomb–Rice coding with adaptive parameter estimation.
+//!
+//! Used by TLC-IC's fast path for near-geometric residual distributions
+//! (and independently testable as a baseline entropy coder). Residuals
+//! are zigzag-mapped to unsigned, then coded as quotient (unary) +
+//! remainder (k raw bits); k tracks the running mean per context, the
+//! JPEG-LS style `A/N` estimator.
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Map a signed residual to unsigned (zigzag): 0,-1,1,-2,2 -> 0,1,2,3,4.
+#[inline]
+pub fn zigzag(v: i32) -> u32 {
+    ((v << 1) ^ (v >> 31)) as u32
+}
+
+/// Inverse zigzag.
+#[inline]
+pub fn unzigzag(u: u32) -> i32 {
+    ((u >> 1) as i32) ^ -((u & 1) as i32)
+}
+
+/// JPEG-LS style adaptive Rice parameter state for one context.
+#[derive(Debug, Clone)]
+pub struct RiceState {
+    /// Sum of coded magnitudes.
+    a: u64,
+    /// Number of coded symbols.
+    n: u64,
+}
+
+impl Default for RiceState {
+    fn default() -> Self {
+        // start at k ~ 2 to avoid pathological unary runs early on
+        RiceState { a: 4, n: 1 }
+    }
+}
+
+impl RiceState {
+    /// Current Rice parameter: smallest k with N << k >= A.
+    #[inline]
+    pub fn k(&self) -> u32 {
+        let mut k = 0;
+        while (self.n << k) < self.a && k < 24 {
+            k += 1;
+        }
+        k
+    }
+
+    #[inline]
+    fn update(&mut self, u: u32) {
+        self.a += u as u64;
+        self.n += 1;
+        // periodic halving keeps the estimator adaptive (JPEG-LS reset)
+        if self.n >= 64 {
+            self.a >>= 1;
+            self.n >>= 1;
+        }
+    }
+}
+
+/// Encode one value with the state's current k, then update the state.
+pub fn encode(w: &mut BitWriter, st: &mut RiceState, u: u32) {
+    let k = st.k();
+    let q = u >> k;
+    const ESCAPE: u32 = 24;
+    if q < ESCAPE {
+        for _ in 0..q {
+            w.put_bit(true);
+        }
+        w.put_bit(false);
+        if k > 0 {
+            w.put_bits(u & ((1 << k) - 1), k as u8);
+        }
+    } else {
+        // escape: 24 ones then the raw 32-bit value
+        for _ in 0..ESCAPE {
+            w.put_bit(true);
+        }
+        w.put_bit(false);
+        w.put_bits(u, 32);
+    }
+    st.update(u);
+}
+
+/// Decode one value and update the state (must mirror `encode`).
+pub fn decode(r: &mut BitReader, st: &mut RiceState) -> u32 {
+    let k = st.k();
+    const ESCAPE: u32 = 24;
+    let mut q = 0u32;
+    while r.get_bit() {
+        q += 1;
+        if q == ESCAPE {
+            break;
+        }
+    }
+    let u = if q == ESCAPE {
+        // consume the terminating 0 of the escape marker, then raw value
+        // (encode wrote ESCAPE ones + one zero + 32 bits)
+        let _ = r.get_bit();
+        r.get_bits(32)
+    } else if k > 0 {
+        (q << k) | r.get_bits(k as u8)
+    } else {
+        q
+    };
+    st.update(u);
+    u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn zigzag_bijection() {
+        for v in -1000..=1000 {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+    }
+
+    #[test]
+    fn roundtrip_geometric_residuals() {
+        let mut r = SplitMix64::new(11);
+        // geometric-ish: product of uniforms
+        let vals: Vec<u32> = (0..20_000)
+            .map(|_| (r.next_f64() * r.next_f64() * 60.0) as u32)
+            .collect();
+        let mut w = BitWriter::new();
+        let mut st = RiceState::default();
+        for &v in &vals {
+            encode(&mut w, &mut st, v);
+        }
+        let bytes = w.finish();
+        let mut rd = BitReader::new(&bytes);
+        let mut st = RiceState::default();
+        for &v in &vals {
+            assert_eq!(decode(&mut rd, &mut st), v);
+        }
+        // should beat raw 6-bit packing on this skewed source
+        assert!(bytes.len() * 8 < vals.len() * 6, "{} bits", bytes.len() * 8);
+    }
+
+    #[test]
+    fn escape_path_handles_outliers() {
+        let vals = [0u32, 1, 2, u32::MAX, 5, 1_000_000, 0];
+        let mut w = BitWriter::new();
+        let mut st = RiceState::default();
+        for &v in &vals {
+            encode(&mut w, &mut st, v);
+        }
+        let bytes = w.finish();
+        let mut rd = BitReader::new(&bytes);
+        let mut st = RiceState::default();
+        for &v in &vals {
+            assert_eq!(decode(&mut rd, &mut st), v);
+        }
+    }
+
+    #[test]
+    fn k_tracks_magnitude() {
+        let mut st = RiceState::default();
+        for _ in 0..100 {
+            st.update(1000);
+        }
+        assert!(st.k() >= 8, "k = {}", st.k());
+        let mut st2 = RiceState::default();
+        for _ in 0..100 {
+            st2.update(0);
+        }
+        assert_eq!(st2.k(), 0);
+    }
+}

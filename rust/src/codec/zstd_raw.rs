@@ -1,0 +1,51 @@
+//! zstd baseline: bit-pack the samples, then zstd. A general-purpose
+//! compressor reference point for the lossless comparison (E4) — the
+//! kind of "just gzip the tensor" baseline the lossless-coding paper [5]
+//! compares against.
+
+use super::bitio::{BitReader, BitWriter};
+use super::ImageMeta;
+
+/// Bit-pack to ceil(n) bits/sample, then zstd level 19.
+pub fn encode(samples: &[u16], _width: usize, _height: usize, n: u8) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    for &s in samples {
+        w.put_bits(s as u32, n);
+    }
+    zstd::bulk::compress(&w.finish(), 19).expect("zstd compress")
+}
+
+/// Inverse of `encode`.
+pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Vec<u16> {
+    let count = meta.width * meta.height;
+    let packed_len = (count * meta.n as usize).div_ceil(8);
+    let raw = zstd::bulk::decompress(bytes, packed_len).expect("zstd decompress");
+    let mut r = BitReader::new(&raw);
+    (0..count).map(|_| r.get_bits(meta.n) as u16).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn roundtrip_various_depths() {
+        let mut r = SplitMix64::new(31);
+        for n in [2u8, 5, 8, 11, 16] {
+            let mask = (1u32 << n) - 1;
+            let samples: Vec<u16> =
+                (0..50 * 20).map(|_| (r.next_u64() as u32 & mask) as u16).collect();
+            let bytes = encode(&samples, 50, 20, n);
+            let meta = ImageMeta { width: 50, height: 20, n };
+            assert_eq!(decode(&bytes, &meta), samples, "n={n}");
+        }
+    }
+
+    #[test]
+    fn repetitive_data_compresses() {
+        let samples: Vec<u16> = (0..64 * 64).map(|i| (i % 7) as u16).collect();
+        let bytes = encode(&samples, 64, 64, 8);
+        assert!(bytes.len() < 300);
+    }
+}

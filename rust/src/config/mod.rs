@@ -1,0 +1,182 @@
+//! Typed run configuration, loadable from JSON (`configs/*.json`) with
+//! CLI overrides layered on top (see `cli`).
+
+use crate::codec::CodecKind;
+use crate::json::{self, Value};
+use crate::selection::Policy;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Configuration of the compression pipeline (one (C, n, codec) operating
+/// point of the paper's system).
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Artifact directory (HLO + manifest + stats).
+    pub artifact_dir: PathBuf,
+    /// Number of transmitted channels C (must have a trained BaF model).
+    pub c: usize,
+    /// Quantizer bit depth n.
+    pub n: u8,
+    /// Payload codec for the tiled image.
+    pub codec: CodecKind,
+    /// QP for lossy codecs (ignored by lossless ones).
+    pub qp: u8,
+    /// Channel-selection policy (paper = Correlation).
+    pub policy: Policy,
+    /// Apply Eq. 6 consolidation (paper = true; ablation E6 flips it).
+    pub consolidate: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            artifact_dir: crate::runtime::default_artifact_dir(),
+            c: 16,
+            n: 8,
+            codec: CodecKind::Tlc,
+            qp: 0,
+            policy: Policy::Correlation,
+            consolidate: true,
+        }
+    }
+}
+
+/// Configuration of the serving demo / E5 bench.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Dynamic batcher: max requests per batch (1 disables batching).
+    pub batch_cap: usize,
+    /// Dynamic batcher: max wait for a batch to fill, microseconds.
+    pub batch_deadline_us: u64,
+    /// Poisson arrival rate, requests/second.
+    pub arrival_rate: f64,
+    /// Total requests to serve.
+    pub num_requests: usize,
+    /// Cloud-side decode worker threads (entropy decode + dequant).
+    pub decode_workers: usize,
+    /// Bounded queue depth between stages (backpressure).
+    pub queue_depth: usize,
+    /// Arrival process: interleaves ON periods at `burst_factor` x rate
+    /// with OFF periods so the mean rate stays `arrival_rate` (a simple
+    /// MMPP-2). 1.0 = plain Poisson.
+    pub burst_factor: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batch_cap: 8,
+            batch_deadline_us: 2000,
+            arrival_rate: 200.0,
+            num_requests: 512,
+            decode_workers: 2,
+            queue_depth: 64,
+            burst_factor: 1.0,
+        }
+    }
+}
+
+fn set_if<T>(slot: &mut T, v: Option<T>) {
+    if let Some(v) = v {
+        *slot = v;
+    }
+}
+
+impl PipelineConfig {
+    /// Overlay fields present in a JSON object onto `self`.
+    pub fn apply(&mut self, v: &Value) -> Result<()> {
+        if let Some(s) = v.get("artifact_dir").and_then(Value::as_str) {
+            self.artifact_dir = PathBuf::from(s);
+        }
+        set_if(&mut self.c, v.get("c").and_then(Value::as_usize));
+        set_if(&mut self.n, v.get("n").and_then(Value::as_i64).map(|x| x as u8));
+        if let Some(s) = v.get("codec").and_then(Value::as_str) {
+            self.codec = CodecKind::from_name(s)?;
+        }
+        set_if(&mut self.qp, v.get("qp").and_then(Value::as_i64).map(|x| x as u8));
+        if let Some(s) = v.get("policy").and_then(Value::as_str) {
+            self.policy = Policy::parse(s)?;
+        }
+        set_if(&mut self.consolidate, v.get("consolidate").and_then(Value::as_bool));
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut cfg = Self::default();
+        let v = json::from_file(path)?;
+        cfg.apply(&v)?;
+        if let Some(server) = v.get("server") {
+            // tolerated here so one file can hold both sections
+            let _ = server;
+        }
+        Ok(cfg)
+    }
+}
+
+impl ServerConfig {
+    pub fn apply(&mut self, v: &Value) {
+        set_if(&mut self.batch_cap, v.get("batch_cap").and_then(Value::as_usize));
+        set_if(
+            &mut self.batch_deadline_us,
+            v.get("batch_deadline_us").and_then(Value::as_i64).map(|x| x as u64),
+        );
+        set_if(&mut self.arrival_rate, v.get("arrival_rate").and_then(Value::as_f64));
+        set_if(&mut self.num_requests, v.get("num_requests").and_then(Value::as_usize));
+        set_if(
+            &mut self.decode_workers,
+            v.get("decode_workers").and_then(Value::as_usize),
+        );
+        set_if(&mut self.queue_depth, v.get("queue_depth").and_then(Value::as_usize));
+        set_if(&mut self.burst_factor, v.get("burst_factor").and_then(Value::as_f64));
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut cfg = Self::default();
+        let v = json::from_file(path)?;
+        cfg.apply(v.get("server").unwrap_or(&v));
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    #[test]
+    fn pipeline_overlay() {
+        let mut cfg = PipelineConfig::default();
+        let v = parse(r#"{"c": 32, "n": 6, "codec": "mic", "qp": 20, "policy": "variance", "consolidate": false}"#).unwrap();
+        cfg.apply(&v).unwrap();
+        assert_eq!(cfg.c, 32);
+        assert_eq!(cfg.n, 6);
+        assert_eq!(cfg.codec, CodecKind::Mic);
+        assert_eq!(cfg.qp, 20);
+        assert_eq!(cfg.policy, Policy::Variance);
+        assert!(!cfg.consolidate);
+    }
+
+    #[test]
+    fn partial_overlay_keeps_defaults() {
+        let mut cfg = PipelineConfig::default();
+        cfg.apply(&parse(r#"{"c": 8}"#).unwrap()).unwrap();
+        assert_eq!(cfg.c, 8);
+        assert_eq!(cfg.n, 8);
+        assert_eq!(cfg.codec, CodecKind::Tlc);
+    }
+
+    #[test]
+    fn bad_codec_name_errors() {
+        let mut cfg = PipelineConfig::default();
+        assert!(cfg.apply(&parse(r#"{"codec": "h264"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn server_overlay() {
+        let mut cfg = ServerConfig::default();
+        cfg.apply(&parse(r#"{"batch_cap": 4, "arrival_rate": 50.5}"#).unwrap());
+        assert_eq!(cfg.batch_cap, 4);
+        assert_eq!(cfg.arrival_rate, 50.5);
+        assert_eq!(cfg.num_requests, 512);
+    }
+}

@@ -1,0 +1,132 @@
+//! The dynamic batcher: deadline + capacity batching of queued work.
+//!
+//! Policy (the same one vLLM-style servers use for request batching): the
+//! first item of a batch opens a window of `deadline`; the batch closes
+//! when either `cap` items have arrived or the window expires. A closed
+//! batch is returned immediately; an idle batcher blocks on the first
+//! item (with an overall `recv_timeout` so servers can drain and stop).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Outcome of one `next_batch` call.
+#[derive(Debug, PartialEq, Eq)]
+pub enum BatchOutcome<T> {
+    /// A non-empty batch (1..=cap items).
+    Batch(Vec<T>),
+    /// Channel closed and drained — the server should shut down.
+    Closed,
+    /// No traffic within the idle timeout (caller may loop again).
+    Idle,
+}
+
+/// Pull the next dynamic batch from a channel.
+pub fn next_batch<T>(
+    rx: &Receiver<T>,
+    cap: usize,
+    deadline: Duration,
+    idle_timeout: Duration,
+) -> BatchOutcome<T> {
+    debug_assert!(cap >= 1);
+    // wait for the first item
+    let first = match rx.recv_timeout(idle_timeout) {
+        Ok(item) => item,
+        Err(RecvTimeoutError::Timeout) => return BatchOutcome::Idle,
+        Err(RecvTimeoutError::Disconnected) => return BatchOutcome::Closed,
+    };
+    let mut batch = Vec::with_capacity(cap);
+    batch.push(first);
+    let close_at = Instant::now() + deadline;
+    while batch.len() < cap {
+        let now = Instant::now();
+        if now >= close_at {
+            break;
+        }
+        match rx.recv_timeout(close_at - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break, // ship what we have
+        }
+    }
+    BatchOutcome::Batch(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+
+    #[test]
+    fn fills_to_cap_when_queue_is_hot() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        match next_batch(&rx, 4, Duration::from_millis(50), Duration::from_millis(50)) {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![0, 1, 2, 3]),
+            other => panic!("{other:?}"),
+        }
+        match next_batch(&rx, 4, Duration::from_millis(50), Duration::from_millis(50)) {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![4, 5, 6, 7]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn closes_at_deadline_with_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let t0 = Instant::now();
+        match next_batch(&rx, 8, Duration::from_millis(20), Duration::from_millis(500)) {
+            BatchOutcome::Batch(b) => {
+                assert_eq!(b, vec![1]);
+                assert!(t0.elapsed() >= Duration::from_millis(18));
+                assert!(t0.elapsed() < Duration::from_millis(200));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn reports_idle_then_closed() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        assert_eq!(
+            next_batch(&rx, 4, Duration::from_millis(5), Duration::from_millis(10)),
+            BatchOutcome::Idle
+        );
+        drop(tx);
+        assert_eq!(
+            next_batch(&rx, 4, Duration::from_millis(5), Duration::from_millis(10)),
+            BatchOutcome::Closed
+        );
+    }
+
+    #[test]
+    fn late_arrivals_join_open_window() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(0).unwrap();
+        let sender = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(5));
+            tx.send(1).unwrap();
+            thread::sleep(Duration::from_millis(5));
+            tx.send(2).unwrap();
+        });
+        match next_batch(&rx, 8, Duration::from_millis(60), Duration::from_millis(60)) {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![0, 1, 2]),
+            other => panic!("{other:?}"),
+        }
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn cap_one_disables_batching() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        match next_batch(&rx, 1, Duration::from_millis(50), Duration::from_millis(50)) {
+            BatchOutcome::Batch(b) => assert_eq!(b, vec![7]),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! The cloud node: everything after the bitstream arrives (Fig. 1, right).
+//!
+//! frame -> entropy-decode + untile + inverse-quantize (Eq. 5)
+//!       -> BaF prediction (artifact: inverse-BN -> deconv-net -> frozen
+//!          layer-l conv+BN, producing all P channels of Z-tilde)
+//!       -> Eq. 6 consolidation of the C transmitted channels
+//!       -> activation + remaining layers (tail artifact) -> boxes
+
+use crate::codec::container;
+use crate::config::PipelineConfig;
+use crate::eval::{postprocess, Box2D};
+use crate::quant::{self, QuantizedTensor};
+use crate::runtime::{Engine, Executable, Manifest};
+use crate::tensor::{
+    chw_to_hwc, gather_channels_hwc_to_chw, scatter_channels_chw_into_hwc, Tensor,
+};
+use crate::util::StageClock;
+use anyhow::{Context, Result};
+use std::rc::Rc;
+
+/// Cloud-side stage outputs.
+#[derive(Debug, Clone)]
+pub struct CloudTrace {
+    /// Reconstructed full tensor (H, W, P) after consolidation, pre-sigma.
+    pub z_tilde: Tensor,
+    /// Fraction of transmitted elements Eq. 6 had to clamp.
+    pub consolidation_rate: f64,
+    pub stages: Vec<(&'static str, f64)>,
+}
+
+/// The cloud node. Thread-confined (owns PJRT state via `Engine`).
+pub struct CloudNode {
+    engine: Rc<Engine>,
+    baf: Rc<Executable>,
+    tail: Rc<Executable>,
+    pub sel: Vec<usize>,
+    pub cfg: PipelineConfig,
+}
+
+impl CloudNode {
+    pub fn new(engine: Rc<Engine>, sel: Vec<usize>, cfg: PipelineConfig) -> Result<Self> {
+        let baf_name = Manifest::baf_name(cfg.c, cfg.n, 1);
+        let baf = engine.load(&baf_name).with_context(|| {
+            format!("no BaF model for C={}, n={} (artifact '{baf_name}')", cfg.c, cfg.n)
+        })?;
+        // Guard against stale artifact directories: the channel selection
+        // baked into the BaF graph at export time must match the one the
+        // edge will use, or reconstruction silently degrades.
+        if let Some(baked) = &baf.spec.sel {
+            anyhow::ensure!(
+                *baked == sel,
+                "artifact '{baf_name}' was exported with selection {:?} but \
+                 channel_stats.json now yields {:?} — rebuild artifacts \
+                 (`make artifacts`)",
+                baked,
+                sel
+            );
+        }
+        let tail = engine.load("tail_b1")?;
+        Ok(CloudNode { engine, baf, tail, sel, cfg })
+    }
+
+    pub fn engine(&self) -> &Rc<Engine> {
+        &self.engine
+    }
+
+    /// Decode a frame into the dequantized subset tensor (1, H, W, C) and
+    /// the quantized form (for consolidation).
+    pub fn decode_frame(&self, frame: &[u8]) -> Result<(Tensor, QuantizedTensor)> {
+        let parsed = container::parse(frame)?;
+        anyhow::ensure!(
+            parsed.channels == self.cfg.c,
+            "frame C={} but pipeline C={}",
+            parsed.channels,
+            self.cfg.c
+        );
+        let q = container::unpack(&parsed);
+        let zhat_chw = quant::dequantize(&q);
+        let zhat = chw_to_hwc(&zhat_chw);
+        let (h, w, c) = (q.h, q.w, q.c);
+        Ok((zhat.reshape(&[1, h, w, c]), q))
+    }
+
+    /// BaF-predict, consolidate, and run the tail for one decoded frame.
+    pub fn infer(&self, zhat_b1: &Tensor, q: &QuantizedTensor) -> Result<(Vec<Box2D>, CloudTrace)> {
+        let mut clock = StageClock::new();
+        let m = self.engine.manifest();
+        let z_tilde = self
+            .baf
+            .run(&[zhat_b1])?
+            .reshape(&[m.z_shape.0, m.z_shape.1, m.z_shape.2]);
+        clock.lap("cloud_baf");
+
+        let (z_final, cons_rate) = self.consolidate(z_tilde, q);
+        clock.lap("cloud_consolidate");
+
+        let head = self
+            .tail
+            .run(&[&z_final.clone().reshape(&[1, m.z_shape.0, m.z_shape.1, m.z_shape.2])])?
+            .reshape(&[m.grid, m.grid, m.head_channels]);
+        clock.lap("cloud_tail");
+
+        let boxes = postprocess(&head, m);
+        clock.lap("cloud_post");
+
+        Ok((
+            boxes,
+            CloudTrace {
+                z_tilde: z_final,
+                consolidation_rate: cons_rate,
+                stages: clock.stages().to_vec(),
+            },
+        ))
+    }
+
+    /// Full cloud pipeline: frame bytes -> detections.
+    pub fn process(&self, frame: &[u8]) -> Result<(Vec<Box2D>, CloudTrace)> {
+        let (zhat, q) = self.decode_frame(frame)?;
+        self.infer(&zhat, &q)
+    }
+
+    /// Eq. 6 on the transmitted channels; returns (tensor, changed rate).
+    fn consolidate(&self, mut z_tilde: Tensor, q: &QuantizedTensor) -> (Tensor, f64) {
+        if !self.cfg.consolidate {
+            return (z_tilde, 0.0);
+        }
+        let predicted = gather_channels_hwc_to_chw(&z_tilde, &self.sel);
+        let cons = quant::consolidate(&predicted, q);
+        let changed = cons
+            .data()
+            .iter()
+            .zip(predicted.data())
+            .filter(|(a, b)| a != b)
+            .count() as f64
+            / cons.len() as f64;
+        scatter_channels_chw_into_hwc(&cons, &self.sel, &mut z_tilde);
+        (z_tilde, changed)
+    }
+}

@@ -1,0 +1,75 @@
+//! The edge (mobile) node: everything that runs on-device (Fig. 1, left).
+//!
+//! image -> layers 1..l (frontend artifact, conv+BN, *pre*-activation Z)
+//!       -> select C channels (static Eq. 2–3 table)
+//!       -> n-bit per-channel quantization (Eq. 4)
+//!       -> tile + entropy-code + frame (container)
+
+use crate::codec::container;
+use crate::config::PipelineConfig;
+use crate::quant;
+use crate::runtime::{Engine, Executable};
+use crate::selection::ChannelStats;
+use crate::tensor::{gather_channels_hwc_to_chw, Tensor};
+use crate::util::StageClock;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// Edge-side stage outputs (for diagnostics and tests).
+#[derive(Debug, Clone)]
+pub struct EdgeTrace {
+    /// Split-layer BN output, (H, W, P), pre-activation.
+    pub z: Tensor,
+    /// Compressed frame size in bytes (the quantity Fig. 4 plots).
+    pub frame_bytes: usize,
+    /// Per-stage latency, microseconds.
+    pub stages: Vec<(&'static str, f64)>,
+}
+
+/// The edge node. Thread-confined (owns PJRT state via `Engine`).
+pub struct EdgeNode {
+    engine: Rc<Engine>,
+    frontend: Rc<Executable>,
+    pub sel: Vec<usize>,
+    pub cfg: PipelineConfig,
+}
+
+impl EdgeNode {
+    pub fn new(engine: Rc<Engine>, stats: &ChannelStats, cfg: PipelineConfig) -> Result<Self> {
+        let frontend = engine.load("frontend_b1")?;
+        let sel = stats.select(cfg.policy, cfg.c);
+        Ok(EdgeNode { engine, frontend, sel, cfg })
+    }
+
+    pub fn engine(&self) -> &Rc<Engine> {
+        &self.engine
+    }
+
+    /// Run the full edge pipeline on one image (H, W, 3).
+    pub fn process(&self, image: &Tensor) -> Result<(Vec<u8>, EdgeTrace)> {
+        let mut clock = StageClock::new();
+        let m = self.engine.manifest();
+        let img_b1 = image.clone().reshape(&[1, m.image_size, m.image_size, 3]);
+        let z = self
+            .frontend
+            .run(&[&img_b1])?
+            .reshape(&[m.z_shape.0, m.z_shape.1, m.z_shape.2]);
+        clock.lap("edge_infer");
+
+        let planes = gather_channels_hwc_to_chw(&z, &self.sel);
+        clock.lap("edge_select");
+
+        let q = quant::quantize(&planes, self.cfg.n);
+        clock.lap("edge_quant");
+
+        let frame = container::pack(&q, self.cfg.codec, self.cfg.qp);
+        clock.lap("edge_encode");
+
+        let trace = EdgeTrace {
+            z,
+            frame_bytes: frame.len(),
+            stages: clock.stages().to_vec(),
+        };
+        Ok((frame, trace))
+    }
+}

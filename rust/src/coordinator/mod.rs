@@ -1,0 +1,19 @@
+//! L3 coordinator: the collaborative-intelligence runtime.
+//!
+//! * `edge` / `cloud` — the two halves of the split pipeline (Fig. 1).
+//! * `pipeline` — single-threaded composition for accuracy experiments,
+//!   plus the cloud-only baseline.
+//! * `batcher` — deadline+capacity dynamic batching.
+//! * `server` — the pipelined multi-threaded serving demo with Poisson
+//!   arrivals, decode workers, batched cloud inference and backpressure.
+
+pub mod batcher;
+pub mod cloud;
+pub mod edge;
+pub mod pipeline;
+pub mod server;
+
+pub use cloud::{CloudNode, CloudTrace};
+pub use edge::{EdgeNode, EdgeTrace};
+pub use pipeline::{CloudOnly, Pipeline, PipelineOutput};
+pub use server::{run_server, ServerReport};

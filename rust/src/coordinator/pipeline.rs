@@ -1,0 +1,127 @@
+//! Single-threaded composition of edge + cloud for the accuracy/rate
+//! experiments (E1/E2/E6), plus the cloud-only baseline the paper
+//! compares against.
+
+use super::cloud::CloudNode;
+use super::edge::EdgeNode;
+use crate::config::PipelineConfig;
+use crate::data::Sample;
+use crate::eval::{evaluate, postprocess, Box2D, ImageEval, MapResult};
+use crate::runtime::Engine;
+use crate::selection::ChannelStats;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// Result of one image through the full system.
+#[derive(Debug, Clone)]
+pub struct PipelineOutput {
+    pub boxes: Vec<Box2D>,
+    pub frame_bytes: usize,
+    pub consolidation_rate: f64,
+    /// (stage, microseconds) across both nodes in order.
+    pub stages: Vec<(&'static str, f64)>,
+}
+
+/// Edge + cloud sharing one engine (single accelerator context) —
+/// the configuration every accuracy experiment uses.
+pub struct Pipeline {
+    pub edge: EdgeNode,
+    pub cloud: CloudNode,
+}
+
+impl Pipeline {
+    pub fn new(engine: Rc<Engine>, cfg: PipelineConfig) -> Result<Self> {
+        let stats = ChannelStats::load(&cfg.artifact_dir)?;
+        let m = engine.manifest();
+        stats.validate(m.p_channels, m.q_channels)?;
+        let edge = EdgeNode::new(Rc::clone(&engine), &stats, cfg.clone())?;
+        let sel = edge.sel.clone();
+        let cloud = CloudNode::new(engine, sel, cfg)?;
+        Ok(Pipeline { edge, cloud })
+    }
+
+    /// Convenience constructor that builds the engine too.
+    pub fn open(cfg: PipelineConfig) -> Result<Self> {
+        let engine = Rc::new(Engine::new(&cfg.artifact_dir)?);
+        Self::new(engine, cfg)
+    }
+
+    pub fn process(&self, image: &Tensor) -> Result<PipelineOutput> {
+        let (frame, et) = self.edge.process(image)?;
+        let (boxes, ct) = self.cloud.process(&frame)?;
+        let mut stages = et.stages;
+        stages.extend(ct.stages);
+        Ok(PipelineOutput {
+            boxes,
+            frame_bytes: frame.len(),
+            consolidation_rate: ct.consolidation_rate,
+            stages,
+        })
+    }
+
+    /// Evaluate mAP + mean rate over a set of samples.
+    pub fn evaluate_set(&self, samples: &[Sample]) -> Result<(MapResult, f64)> {
+        let mut evals = Vec::with_capacity(samples.len());
+        let mut total_bytes = 0usize;
+        for s in samples {
+            let out = self.process(&s.image)?;
+            total_bytes += out.frame_bytes;
+            evals.push(ImageEval {
+                detections: out.boxes,
+                ground_truth: s.boxes.iter().map(|&b| b.into()).collect(),
+            });
+        }
+        let m = self.cloud.engine().manifest();
+        Ok((
+            evaluate(&evals, m.num_classes),
+            total_bytes as f64 / samples.len() as f64,
+        ))
+    }
+}
+
+/// The cloud-only baseline: the unmodified detector run end to end
+/// (monolith artifact). Its mAP is the paper's benchmark line in Fig. 3,
+/// and its *input image* compressed size is the rate reference in Fig. 4.
+pub struct CloudOnly {
+    engine: Rc<Engine>,
+}
+
+impl CloudOnly {
+    pub fn new(engine: Rc<Engine>) -> Self {
+        CloudOnly { engine }
+    }
+
+    pub fn process(&self, image: &Tensor) -> Result<Vec<Box2D>> {
+        let m = self.engine.manifest();
+        let img = image.clone().reshape(&[1, m.image_size, m.image_size, 3]);
+        let head = self
+            .engine
+            .run("monolith_b1", &[&img])?
+            .reshape(&[m.grid, m.grid, m.head_channels]);
+        Ok(postprocess(&head, m))
+    }
+
+    pub fn evaluate_set(&self, samples: &[Sample]) -> Result<MapResult> {
+        let mut evals = Vec::with_capacity(samples.len());
+        for s in samples {
+            evals.push(ImageEval {
+                detections: self.process(&s.image)?,
+                ground_truth: s.boxes.iter().map(|&b| b.into()).collect(),
+            });
+        }
+        Ok(evaluate(&evals, self.engine.manifest().num_classes))
+    }
+
+    /// Rate reference for Fig. 4: the input image itself, 8-bit
+    /// quantized per channel and losslessly coded with the same codec
+    /// machinery (the "compressed image input to an unmodified network").
+    pub fn image_bytes(&self, image: &Tensor) -> usize {
+        use crate::codec::container;
+        use crate::quant::quantize;
+        use crate::tensor::hwc_to_chw;
+        let chw = hwc_to_chw(image);
+        let q = quantize(&chw, 8);
+        container::pack(&q, crate::codec::CodecKind::Tlc, 0).len()
+    }
+}

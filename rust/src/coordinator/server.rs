@@ -1,0 +1,316 @@
+//! The pipelined serving demo (E5): Poisson arrivals -> edge thread ->
+//! decode workers -> dynamic batcher -> cloud inference -> metrics.
+//!
+//! Thread topology (PJRT engines are thread-confined, so each inference
+//! stage owns its own `Engine`, mirroring one accelerator context per
+//! process):
+//!
+//! ```text
+//!  [arrival gen + edge node]            (1 thread, Engine #1)
+//!        | bounded channel (backpressure)
+//!  [decode workers: parse/entropy/dequant]  (N threads, no engine)
+//!        | bounded channel
+//!  [dynamic batcher + cloud infer + post]   (1 thread, Engine #2)
+//!        | channel
+//!  [collector: latency accounting]          (main thread)
+//! ```
+
+use super::batcher::{next_batch, BatchOutcome};
+use crate::config::{PipelineConfig, ServerConfig};
+use crate::coordinator::cloud::CloudNode;
+use crate::coordinator::edge::EdgeNode;
+use crate::data;
+use crate::json::Value;
+use crate::metrics::Registry;
+use crate::quant::QuantizedTensor;
+use crate::runtime::{Engine, Manifest};
+use crate::selection::ChannelStats;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A request travelling through the pipeline.
+struct FrameMsg {
+    id: usize,
+    frame: Vec<u8>,
+    t_arrival: Instant,
+    #[allow(dead_code)]
+    t_edge_done: Instant,
+}
+
+struct DecodedMsg {
+    id: usize,
+    /// (1, H, W, C) dequantized subset.
+    zhat: Tensor,
+    q: QuantizedTensor,
+    t_arrival: Instant,
+    t_decoded: Instant,
+}
+
+/// Summary of one serving run.
+#[derive(Debug)]
+pub struct ServerReport {
+    pub requests: usize,
+    pub wall_seconds: f64,
+    pub throughput_rps: f64,
+    pub mean_batch_size: f64,
+    pub metrics: Value,
+    pub table: String,
+}
+
+/// Run the serving pipeline to completion.
+pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerReport> {
+    let stats = ChannelStats::load(&pcfg.artifact_dir)?;
+    let sel = stats.select(pcfg.policy, pcfg.c);
+    let registry = Arc::new(Registry::default());
+
+    // Pre-generate the request images (cycled from the eval split).
+    let pool = data::eval_set(64.min(scfg.num_requests.max(1)));
+    let images: Vec<Tensor> = pool.iter().map(|s| s.image.clone()).collect();
+
+    let (frame_tx, frame_rx) = mpsc::sync_channel::<FrameMsg>(scfg.queue_depth);
+    let (dec_tx, dec_rx) = mpsc::sync_channel::<DecodedMsg>(scfg.queue_depth);
+    let (done_tx, done_rx) = mpsc::channel::<(usize, Instant, Instant, usize)>();
+
+    let t_start = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        // ---- edge thread: arrivals + frontend + encode ----
+        {
+            let pcfg = pcfg.clone();
+            let scfg = scfg.clone();
+            let stats = &stats;
+            let registry = Arc::clone(&registry);
+            scope.spawn(move || {
+                let run = || -> Result<()> {
+                    let engine =
+                        std::rc::Rc::new(Engine::new(&pcfg.artifact_dir)?);
+                    let edge = EdgeNode::new(engine, stats, pcfg.clone())?;
+                    let mut rng = crate::util::SplitMix64::new(0xA221);
+                    let edge_h = registry.histogram("1_edge_total");
+                    let mut next_arrival = Instant::now();
+                    // MMPP-2: alternate ON (burst_factor x rate) and OFF
+                    // phases every ~16 requests so the mean stays near
+                    // arrival_rate; burst_factor 1.0 degenerates to Poisson.
+                    let bf = scfg.burst_factor.max(1.0);
+                    for id in 0..scfg.num_requests {
+                        let on_phase = (id / 16) % 2 == 0;
+                        let rate = if bf <= 1.0 {
+                            scfg.arrival_rate
+                        } else if on_phase {
+                            scfg.arrival_rate * bf
+                        } else {
+                            // harmonic mean of the two phase rates = mean rate
+                            scfg.arrival_rate * bf / (2.0 * bf - 1.0)
+                        };
+                        next_arrival += Duration::from_secs_f64(rng.next_exp(rate));
+                        let now = Instant::now();
+                        if next_arrival > now {
+                            std::thread::sleep(next_arrival - now);
+                        }
+                        let t_arrival = Instant::now();
+                        let img = &images[id % images.len()];
+                        let (frame, _trace) = edge.process(img)?;
+                        let t_edge_done = Instant::now();
+                        edge_h.record_us(
+                            (t_edge_done - t_arrival).as_secs_f64() * 1e6,
+                        );
+                        // sync_channel send == backpressure on the edge
+                        frame_tx
+                            .send(FrameMsg { id, frame, t_arrival, t_edge_done })
+                            .ok();
+                    }
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    log::error!("edge thread failed: {e:#}");
+                }
+                // frame_tx dropped here -> decode workers drain and stop
+            });
+        }
+
+        // ---- decode workers ----
+        let frame_rx = Arc::new(std::sync::Mutex::new(frame_rx));
+        for wid in 0..scfg.decode_workers.max(1) {
+            let frame_rx = Arc::clone(&frame_rx);
+            let dec_tx = dec_tx.clone();
+            let registry = Arc::clone(&registry);
+            let pcfg = pcfg.clone();
+            scope.spawn(move || {
+                let h = registry.histogram("2_decode");
+                loop {
+                    let msg = match frame_rx.lock().unwrap().recv() {
+                        Ok(m) => m,
+                        Err(_) => break,
+                    };
+                    let t0 = Instant::now();
+                    let parsed = match crate::codec::container::parse(&msg.frame) {
+                        Ok(p) => p,
+                        Err(e) => {
+                            log::error!("decode worker {wid}: bad frame: {e:#}");
+                            continue;
+                        }
+                    };
+                    let q = crate::codec::container::unpack(&parsed);
+                    let zhat_chw = crate::quant::dequantize(&q);
+                    let zhat = crate::tensor::chw_to_hwc(&zhat_chw)
+                        .reshape(&[1, q.h, q.w, pcfg.c]);
+                    h.record_us(t0.elapsed().as_secs_f64() * 1e6);
+                    dec_tx
+                        .send(DecodedMsg {
+                            id: msg.id,
+                            zhat,
+                            q,
+                            t_arrival: msg.t_arrival,
+                            t_decoded: Instant::now(),
+                        })
+                        .ok();
+                }
+            });
+        }
+        drop(dec_tx);
+
+        // ---- cloud inference thread: batcher + BaF + tail ----
+        {
+            let pcfg = pcfg.clone();
+            let scfg = scfg.clone();
+            let sel = sel.clone();
+            let registry = Arc::clone(&registry);
+            let done_tx = done_tx.clone();
+            scope.spawn(move || {
+                let run = || -> Result<()> {
+                    let engine = std::rc::Rc::new(Engine::new(&pcfg.artifact_dir)?);
+                    let cloud =
+                        CloudNode::new(std::rc::Rc::clone(&engine), sel.clone(), pcfg.clone())?;
+                    // batch executables when available for this (C, n)
+                    let baf8 = engine
+                        .load(&Manifest::baf_name(pcfg.c, pcfg.n, 8))
+                        .ok();
+                    let tail8 = engine.load("tail_b8").ok();
+                    let infer_h = registry.histogram("4_cloud_infer");
+                    let queue_h = registry.histogram("3_batch_wait");
+                    let batch_c = registry.counter("batches");
+                    let item_c = registry.counter("batched_items");
+                    let m = engine.manifest().clone();
+                    let (zh, zw, zc) = m.z_shape;
+                    loop {
+                        let outcome = next_batch(
+                            &dec_rx,
+                            scfg.batch_cap.max(1),
+                            Duration::from_micros(scfg.batch_deadline_us),
+                            Duration::from_millis(200),
+                        );
+                        let batch = match outcome {
+                            BatchOutcome::Batch(b) => b,
+                            BatchOutcome::Idle => continue,
+                            BatchOutcome::Closed => break,
+                        };
+                        batch_c.inc();
+                        item_c.add(batch.len() as u64);
+                        let t0 = Instant::now();
+                        for msg in &batch {
+                            queue_h.record_us(
+                                (t0 - msg.t_decoded).as_secs_f64() * 1e6,
+                            );
+                        }
+                        let use_batch8 = batch.len() > 1
+                            && baf8.is_some()
+                            && tail8.is_some();
+                        if use_batch8 {
+                            // pad to batch 8, one PJRT call for BaF, one
+                            // for the tail; consolidation per item.
+                            let baf8 = baf8.as_ref().unwrap();
+                            let tail8 = tail8.as_ref().unwrap();
+                            let cin = pcfg.c;
+                            let mut zin = Tensor::zeros(&[8, zh, zw, cin]);
+                            for (k, msg) in batch.iter().enumerate() {
+                                let src = msg.zhat.data();
+                                let stride = zh * zw * cin;
+                                zin.data_mut()[k * stride..(k + 1) * stride]
+                                    .copy_from_slice(src);
+                            }
+                            let zt8 = baf8.run(&[&zin])?;
+                            let stride = zh * zw * zc;
+                            let mut zt_final = Tensor::zeros(&[8, zh, zw, zc]);
+                            let mut cons_planes = Vec::with_capacity(batch.len());
+                            for (k, msg) in batch.iter().enumerate() {
+                                let mut zt = Tensor::from_vec(
+                                    &[zh, zw, zc],
+                                    zt8.data()[k * stride..(k + 1) * stride].to_vec(),
+                                );
+                                if pcfg.consolidate {
+                                    let pred = crate::tensor::gather_channels_hwc_to_chw(
+                                        &zt, &sel,
+                                    );
+                                    let cons = crate::quant::consolidate(&pred, &msg.q);
+                                    crate::tensor::scatter_channels_chw_into_hwc(
+                                        &cons, &sel, &mut zt,
+                                    );
+                                }
+                                cons_planes.push(zt.data().to_vec());
+                                zt_final.data_mut()[k * stride..(k + 1) * stride]
+                                    .copy_from_slice(cons_planes[k].as_slice());
+                            }
+                            let heads = tail8.run(&[&zt_final])?;
+                            let hstride = m.grid * m.grid * m.head_channels;
+                            for (k, msg) in batch.iter().enumerate() {
+                                let head = Tensor::from_vec(
+                                    &[m.grid, m.grid, m.head_channels],
+                                    heads.data()[k * hstride..(k + 1) * hstride].to_vec(),
+                                );
+                                let boxes = crate::eval::postprocess(&head, &m);
+                                done_tx
+                                    .send((msg.id, msg.t_arrival, Instant::now(), boxes.len()))
+                                    .ok();
+                            }
+                        } else {
+                            for msg in &batch {
+                                let (boxes, _trace) = cloud.infer(&msg.zhat, &msg.q)?;
+                                done_tx
+                                    .send((msg.id, msg.t_arrival, Instant::now(), boxes.len()))
+                                    .ok();
+                            }
+                        }
+                        infer_h.record_us(t0.elapsed().as_secs_f64() * 1e6);
+                    }
+                    Ok(())
+                };
+                if let Err(e) = run() {
+                    log::error!("cloud thread failed: {e:#}");
+                }
+            });
+        }
+        drop(done_tx);
+
+        // ---- collector (this thread) ----
+        let e2e = registry.histogram("5_e2e");
+        let mut completed = 0usize;
+        while let Ok((_id, t_arrival, t_done, _nboxes)) = done_rx.recv() {
+            e2e.record_us((t_done - t_arrival).as_secs_f64() * 1e6);
+            completed += 1;
+            if completed == scfg.num_requests {
+                break;
+            }
+        }
+        anyhow::ensure!(
+            completed == scfg.num_requests,
+            "served {completed} of {} requests",
+            scfg.num_requests
+        );
+        Ok(())
+    })
+    .context("server run")?;
+
+    let wall = t_start.elapsed().as_secs_f64();
+    let batches = registry.counter("batches").get().max(1);
+    let items = registry.counter("batched_items").get();
+    Ok(ServerReport {
+        requests: scfg.num_requests,
+        wall_seconds: wall,
+        throughput_rps: scfg.num_requests as f64 / wall,
+        mean_batch_size: items as f64 / batches as f64,
+        metrics: registry.export(),
+        table: registry.table(),
+    })
+}

@@ -1,0 +1,94 @@
+//! Debug rendering: write ShapeWorld images (with boxes) as binary PPM.
+//!
+//! Pure diagnostics — lets a human eyeball what the detector sees and
+//! what it predicts (`baf render`), with detections drawn over ground
+//! truth. PPM (P6) needs no image library.
+
+use crate::eval::Box2D;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// Convert an (H, W, 3) f32 [0,1] tensor to 8-bit RGB.
+fn to_rgb8(img: &Tensor) -> (usize, usize, Vec<u8>) {
+    let s = img.shape();
+    assert_eq!(s.len(), 3);
+    assert_eq!(s[2], 3);
+    let (h, w) = (s[0], s[1]);
+    let data = img
+        .data()
+        .iter()
+        .map(|&v| (v.clamp(0.0, 1.0) * 255.0).round() as u8)
+        .collect();
+    (h, w, data)
+}
+
+fn draw_rect(buf: &mut [u8], w: usize, h: usize, bx: &Box2D, color: [u8; 3]) {
+    let x0 = bx.x0.max(0.0) as usize;
+    let y0 = bx.y0.max(0.0) as usize;
+    let x1 = (bx.x1.min(w as f32 - 1.0)) as usize;
+    let y1 = (bx.y1.min(h as f32 - 1.0)) as usize;
+    let mut put = |x: usize, y: usize| {
+        if x < w && y < h {
+            let off = (y * w + x) * 3;
+            buf[off..off + 3].copy_from_slice(&color);
+        }
+    };
+    for x in x0..=x1 {
+        put(x, y0);
+        put(x, y1);
+    }
+    for y in y0..=y1 {
+        put(x0, y);
+        put(x1, y);
+    }
+}
+
+/// Write image + ground truth (white) + detections (per-class colors).
+pub fn write_ppm(
+    path: &Path,
+    img: &Tensor,
+    ground_truth: &[Box2D],
+    detections: &[Box2D],
+) -> Result<()> {
+    const CLASS_COLORS: [[u8; 3]; 4] =
+        [[255, 64, 64], [64, 255, 64], [64, 64, 255], [255, 255, 64]];
+    let (h, w, mut rgb) = to_rgb8(img);
+    for g in ground_truth {
+        draw_rect(&mut rgb, w, h, g, [255, 255, 255]);
+    }
+    for d in detections {
+        draw_rect(&mut rgb, w, h, d, CLASS_COLORS[d.class % 4]);
+    }
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P6\n{w} {h}\n255\n")?;
+    f.write_all(&rgb)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppm_has_correct_size_and_header() {
+        let dir = std::env::temp_dir().join("baf_render_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ppm");
+        let img = Tensor::zeros(&[8, 16, 3]);
+        let gt = Box2D { x0: 1.0, y0: 1.0, x1: 5.0, y1: 5.0, score: 1.0, class: 0 };
+        write_ppm(&path, &img, &[gt], &[]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P6\n16 8\n255\n"));
+        assert_eq!(bytes.len(), 12 + 16 * 8 * 3);
+        // the GT outline is white
+        let header = 12;
+        let px = |x: usize, y: usize| {
+            let off = header + (y * 16 + x) * 3;
+            [bytes[off], bytes[off + 1], bytes[off + 2]]
+        };
+        assert_eq!(px(1, 1), [255, 255, 255]);
+        assert_eq!(px(7, 7), [0, 0, 0]);
+    }
+}

@@ -1,0 +1,171 @@
+//! BD-Bitrate over mAP (the "BD-Bitrate-mAP" metric of [4], used in the
+//! paper's §4 to report >90% savings vs HEVC-all-channels) plus the
+//! "bit savings at a given accuracy-loss budget" headline numbers.
+//!
+//! Classic Bjøntegaard delta computation: fit cubic polynomials of
+//! log-rate as a function of quality over the overlapping quality range
+//! of two RD curves, integrate, report the average rate difference in %.
+
+/// One rate-distortion point: bits per image (or KB — any consistent
+/// unit) and mAP in [0, 1].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RdPoint {
+    pub rate: f64,
+    pub map: f64,
+}
+
+/// Fit a cubic through (x, y) pairs via least squares (n >= 4 exact for 4).
+fn polyfit3(xs: &[f64], ys: &[f64]) -> [f64; 4] {
+    // normal equations for degree-3 LS fit
+    let n = xs.len();
+    assert!(n >= 4, "BD-rate needs at least 4 RD points");
+    let mut ata = [[0f64; 4]; 4];
+    let mut atb = [0f64; 4];
+    for i in 0..n {
+        let powers = [1.0, xs[i], xs[i] * xs[i], xs[i] * xs[i] * xs[i]];
+        for r in 0..4 {
+            atb[r] += powers[r] * ys[i];
+            for c in 0..4 {
+                ata[r][c] += powers[r] * powers[c];
+            }
+        }
+    }
+    // gaussian elimination with partial pivoting
+    let mut a = ata;
+    let mut b = atb;
+    for col in 0..4 {
+        let mut piv = col;
+        for r in col + 1..4 {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        assert!(d.abs() > 1e-12, "singular BD-rate fit");
+        for r in col + 1..4 {
+            let f = a[r][col] / d;
+            for c in col..4 {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = [0f64; 4];
+    for r in (0..4).rev() {
+        let mut acc = b[r];
+        for c in r + 1..4 {
+            acc -= a[r][c] * x[c];
+        }
+        x[r] = acc / a[r][r];
+    }
+    x
+}
+
+fn poly_integral(coef: &[f64; 4], lo: f64, hi: f64) -> f64 {
+    let eval = |x: f64| {
+        coef[0] * x + coef[1] * x * x / 2.0 + coef[2] * x * x * x / 3.0
+            + coef[3] * x * x * x * x / 4.0
+    };
+    eval(hi) - eval(lo)
+}
+
+/// BD-rate of `test` vs `anchor` in percent (negative = test saves bits
+/// at equal quality). Both curves need >= 4 points and overlapping mAP
+/// ranges.
+pub fn bd_rate(anchor: &[RdPoint], test: &[RdPoint]) -> Option<f64> {
+    if anchor.len() < 4 || test.len() < 4 {
+        return None;
+    }
+    let prep = |pts: &[RdPoint]| -> (Vec<f64>, Vec<f64>) {
+        let mut p: Vec<RdPoint> = pts.to_vec();
+        p.sort_by(|a, b| a.map.total_cmp(&b.map));
+        (p.iter().map(|q| q.map).collect(), p.iter().map(|q| q.rate.ln()).collect())
+    };
+    let (aq, ar) = prep(anchor);
+    let (tq, tr) = prep(test);
+    let lo = aq.first()?.max(*tq.first()?);
+    let hi = aq.last()?.min(*tq.last()?);
+    if hi <= lo {
+        return None; // no quality overlap
+    }
+    let ca = polyfit3(&aq, &ar);
+    let ct = polyfit3(&tq, &tr);
+    let avg_diff = (poly_integral(&ct, lo, hi) - poly_integral(&ca, lo, hi)) / (hi - lo);
+    Some((avg_diff.exp() - 1.0) * 100.0)
+}
+
+/// Bit savings (in %) of `test` vs the `reference_rate` at the smallest
+/// rate whose mAP is within `max_loss` of `reference_map`. This is the
+/// paper's headline statement ("62%/75% reduction with <1%/<2% loss").
+pub fn savings_at_loss(
+    test: &[RdPoint],
+    reference_map: f64,
+    reference_rate: f64,
+    max_loss: f64,
+) -> Option<(f64, RdPoint)> {
+    let ok: Vec<&RdPoint> = test
+        .iter()
+        .filter(|p| reference_map - p.map <= max_loss)
+        .collect();
+    let best = ok.into_iter().min_by(|a, b| a.rate.total_cmp(&b.rate))?;
+    Some(((1.0 - best.rate / reference_rate) * 100.0, *best))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(scale: f64) -> Vec<RdPoint> {
+        // a plausible RD curve: map rises with log rate
+        [1.0, 2.0, 4.0, 8.0, 16.0]
+            .iter()
+            .map(|&r| RdPoint { rate: r * scale, map: 0.3 + 0.1 * (r as f64).ln() })
+            .collect()
+    }
+
+    #[test]
+    fn identical_curves_have_zero_bd_rate() {
+        let a = curve(1.0);
+        let d = bd_rate(&a, &a).unwrap();
+        assert!(d.abs() < 1e-6, "{d}");
+    }
+
+    #[test]
+    fn half_rate_curve_reports_minus_fifty() {
+        let a = curve(1.0);
+        let t = curve(0.5); // same quality at half the bits
+        let d = bd_rate(&a, &t).unwrap();
+        assert!((d + 50.0).abs() < 1.0, "{d}");
+        // symmetric: anchor at half rate -> +100%
+        let d2 = bd_rate(&t, &a).unwrap();
+        assert!((d2 - 100.0).abs() < 2.0, "{d2}");
+    }
+
+    #[test]
+    fn disjoint_quality_ranges_yield_none() {
+        let a: Vec<RdPoint> =
+            (1..5).map(|i| RdPoint { rate: i as f64, map: 0.1 + 0.01 * i as f64 }).collect();
+        let b: Vec<RdPoint> =
+            (1..5).map(|i| RdPoint { rate: i as f64, map: 0.8 + 0.01 * i as f64 }).collect();
+        assert!(bd_rate(&a, &b).is_none());
+    }
+
+    #[test]
+    fn savings_at_loss_picks_cheapest_admissible() {
+        let pts = vec![
+            RdPoint { rate: 100.0, map: 0.50 },
+            RdPoint { rate: 60.0, map: 0.495 },
+            RdPoint { rate: 30.0, map: 0.47 },
+            RdPoint { rate: 10.0, map: 0.40 },
+        ];
+        let (sav, p) = savings_at_loss(&pts, 0.50, 100.0, 0.01).unwrap();
+        assert_eq!(p.rate, 60.0);
+        assert!((sav - 40.0).abs() < 1e-9);
+        let (sav2, p2) = savings_at_loss(&pts, 0.50, 100.0, 0.04).unwrap();
+        assert_eq!(p2.rate, 30.0);
+        assert!((sav2 - 70.0).abs() < 1e-9);
+        assert!(savings_at_loss(&pts, 0.9, 100.0, 0.01).is_none());
+    }
+}

@@ -1,0 +1,74 @@
+//! Detection boxes and IoU.
+
+/// A detection or ground-truth box; corner format, x1/y1 exclusive.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Box2D {
+    pub x0: f32,
+    pub y0: f32,
+    pub x1: f32,
+    pub y1: f32,
+    pub score: f32,
+    pub class: usize,
+}
+
+impl Box2D {
+    pub fn area(&self) -> f32 {
+        (self.x1 - self.x0).max(0.0) * (self.y1 - self.y0).max(0.0)
+    }
+
+    /// Intersection-over-union with another box.
+    pub fn iou(&self, other: &Box2D) -> f32 {
+        let ix0 = self.x0.max(other.x0);
+        let iy0 = self.y0.max(other.y0);
+        let ix1 = self.x1.min(other.x1);
+        let iy1 = self.y1.min(other.y1);
+        let inter = (ix1 - ix0).max(0.0) * (iy1 - iy0).max(0.0);
+        let union = self.area() + other.area() - inter;
+        if union <= 0.0 {
+            0.0
+        } else {
+            inter / union
+        }
+    }
+}
+
+impl From<crate::data::GtBox> for Box2D {
+    fn from(g: crate::data::GtBox) -> Self {
+        Box2D { x0: g.x0, y0: g.y0, x1: g.x1, y1: g.y1, score: 1.0, class: g.class }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(x0: f32, y0: f32, x1: f32, y1: f32) -> Box2D {
+        Box2D { x0, y0, x1, y1, score: 1.0, class: 0 }
+    }
+
+    #[test]
+    fn iou_identity_is_one() {
+        let b = mk(2.0, 3.0, 10.0, 12.0);
+        assert!((b.iou(&b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        assert_eq!(mk(0.0, 0.0, 4.0, 4.0).iou(&mk(5.0, 5.0, 9.0, 9.0)), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        // boxes of area 4 overlapping in area 2 -> IoU = 2/6
+        let a = mk(0.0, 0.0, 2.0, 2.0);
+        let b = mk(1.0, 0.0, 3.0, 2.0);
+        assert!((a.iou(&b) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_boxes_are_safe() {
+        let z = mk(1.0, 1.0, 1.0, 1.0);
+        assert_eq!(z.area(), 0.0);
+        assert_eq!(z.iou(&mk(0.0, 0.0, 4.0, 4.0)), 0.0);
+    }
+}

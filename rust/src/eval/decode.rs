@@ -1,0 +1,124 @@
+//! Decode the detector's raw head output into scored boxes, plus NMS.
+//!
+//! YOLO-v3 parameterization (must mirror `detector.decode_head` in
+//! Python): sigmoid cell offsets, exponential anchor scaling, objectness
+//! times max class probability as the score.
+
+use super::boxes::Box2D;
+use crate::runtime::Manifest;
+use crate::tensor::Tensor;
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Decode one image's head map (grid, grid, A*(5+K)) into boxes with
+/// score >= `score_thresh`.
+pub fn decode_head(head: &Tensor, m: &Manifest, score_thresh: f32) -> Vec<Box2D> {
+    let g = m.grid;
+    let a = m.anchors.len();
+    let k = m.num_classes;
+    let stride = 5 + k;
+    assert_eq!(head.shape(), &[g, g, a * stride], "head shape mismatch");
+    let cell = m.cell as f32;
+    let mut out = Vec::new();
+    for gy in 0..g {
+        for gx in 0..g {
+            for ai in 0..a {
+                let off = (gy * g + gx) * a * stride + ai * stride;
+                let d = &head.data()[off..off + stride];
+                let obj = sigmoid(d[4]);
+                // softmax over class logits
+                let max_logit = d[5..].iter().fold(f32::NEG_INFINITY, |acc, &v| acc.max(v));
+                let mut denom = 0.0;
+                for &l in &d[5..] {
+                    denom += (l - max_logit).exp();
+                }
+                let (mut best_c, mut best_p) = (0usize, 0.0f32);
+                for (ci, &l) in d[5..].iter().enumerate() {
+                    let p = (l - max_logit).exp() / denom;
+                    if p > best_p {
+                        best_p = p;
+                        best_c = ci;
+                    }
+                }
+                let score = obj * best_p;
+                if score < score_thresh {
+                    continue;
+                }
+                let cx = (gx as f32 + sigmoid(d[0])) * cell;
+                let cy = (gy as f32 + sigmoid(d[1])) * cell;
+                let (aw, ah) = m.anchors[ai];
+                let bw = aw * d[2].clamp(-6.0, 6.0).exp();
+                let bh = ah * d[3].clamp(-6.0, 6.0).exp();
+                out.push(Box2D {
+                    x0: cx - bw / 2.0,
+                    y0: cy - bh / 2.0,
+                    x1: cx + bw / 2.0,
+                    y1: cy + bh / 2.0,
+                    score,
+                    class: best_c,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Greedy per-class non-maximum suppression.
+pub fn nms(mut boxes: Vec<Box2D>, iou_thresh: f32) -> Vec<Box2D> {
+    boxes.sort_by(|a, b| b.score.total_cmp(&a.score));
+    let mut keep: Vec<Box2D> = Vec::with_capacity(boxes.len());
+    'outer: for b in boxes {
+        for k in &keep {
+            if k.class == b.class && k.iou(&b) > iou_thresh {
+                continue 'outer;
+            }
+        }
+        keep.push(b);
+    }
+    keep
+}
+
+/// Standard post-processing: decode, NMS, cap detections per image.
+pub fn postprocess(head: &Tensor, m: &Manifest) -> Vec<Box2D> {
+    let mut boxes = nms(decode_head(head, m, 0.05), 0.45);
+    boxes.truncate(50);
+    boxes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nms_suppresses_same_class_overlaps_only() {
+        let a = Box2D { x0: 0.0, y0: 0.0, x1: 10.0, y1: 10.0, score: 0.9, class: 0 };
+        let b = Box2D { x0: 1.0, y0: 1.0, x1: 11.0, y1: 11.0, score: 0.8, class: 0 };
+        let c = Box2D { x0: 1.0, y0: 1.0, x1: 11.0, y1: 11.0, score: 0.7, class: 1 };
+        let d = Box2D { x0: 40.0, y0: 40.0, x1: 50.0, y1: 50.0, score: 0.6, class: 0 };
+        let kept = nms(vec![a, b, c, d], 0.5);
+        assert_eq!(kept.len(), 3);
+        assert!(kept.iter().any(|k| k.class == 1));
+        assert!(kept.iter().any(|k| (k.x0 - 40.0).abs() < 1e-6));
+        // the survivor of the (a, b) pair is the higher-scoring one
+        assert!(kept.iter().any(|k| (k.score - 0.9).abs() < 1e-6));
+        assert!(!kept.iter().any(|k| (k.score - 0.8).abs() < 1e-6));
+    }
+
+    #[test]
+    fn nms_keeps_order_by_score() {
+        let mk = |s: f32, x: f32| Box2D {
+            x0: x,
+            y0: 0.0,
+            x1: x + 5.0,
+            y1: 5.0,
+            score: s,
+            class: 0,
+        };
+        let kept = nms(vec![mk(0.3, 0.0), mk(0.9, 20.0), mk(0.5, 40.0)], 0.5);
+        assert_eq!(kept.len(), 3);
+        assert!(kept[0].score >= kept[1].score && kept[1].score >= kept[2].score);
+    }
+}

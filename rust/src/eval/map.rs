@@ -1,0 +1,206 @@
+//! Mean Average Precision — the paper's accuracy metric.
+//!
+//! COCO-style evaluation: per class, detections over the whole set are
+//! sorted by score and greedily matched to ground truth at an IoU
+//! threshold (each GT matches at most once); AP is the 101-point
+//! interpolated area under the precision-recall curve. `map_50` is the
+//! headline metric (the paper's YOLO numbers are mAP@0.5-style);
+//! `map_50_95` averages thresholds .50:.05:.95 like COCO.
+
+use super::boxes::Box2D;
+
+/// Detections + ground truth for one image.
+#[derive(Debug, Clone, Default)]
+pub struct ImageEval {
+    pub detections: Vec<Box2D>,
+    pub ground_truth: Vec<Box2D>,
+}
+
+/// Result of a mAP evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MapResult {
+    /// mAP at IoU 0.5 (the headline number).
+    pub map_50: f64,
+    /// COCO-style mAP averaged over IoU .50:.05:.95.
+    pub map_50_95: f64,
+}
+
+/// Average precision for one class at one IoU threshold.
+fn average_precision(images: &[ImageEval], class: usize, iou_thresh: f32) -> Option<f64> {
+    // collect (score, image, box) detections of this class
+    let mut dets: Vec<(f32, usize, Box2D)> = Vec::new();
+    let mut total_gt = 0usize;
+    for (i, img) in images.iter().enumerate() {
+        total_gt += img.ground_truth.iter().filter(|g| g.class == class).count();
+        for d in img.detections.iter().filter(|d| d.class == class) {
+            dets.push((d.score, i, *d));
+        }
+    }
+    if total_gt == 0 {
+        return None; // class absent from the split -> excluded from the mean
+    }
+    dets.sort_by(|a, b| b.0.total_cmp(&a.0));
+
+    let mut matched: Vec<Vec<bool>> = images
+        .iter()
+        .map(|img| vec![false; img.ground_truth.len()])
+        .collect();
+    let mut tp = vec![false; dets.len()];
+    for (di, (_score, img_i, d)) in dets.iter().enumerate() {
+        let gts = &images[*img_i].ground_truth;
+        let mut best = -1isize;
+        let mut best_iou = iou_thresh;
+        for (gi, g) in gts.iter().enumerate() {
+            if g.class != class || matched[*img_i][gi] {
+                continue;
+            }
+            let iou = d.iou(g);
+            if iou >= best_iou {
+                best_iou = iou;
+                best = gi as isize;
+            }
+        }
+        if best >= 0 {
+            matched[*img_i][best as usize] = true;
+            tp[di] = true;
+        }
+    }
+
+    // precision/recall curve
+    let mut cum_tp = 0usize;
+    let mut curve: Vec<(f64, f64)> = Vec::with_capacity(dets.len()); // (recall, precision)
+    for (i, &is_tp) in tp.iter().enumerate() {
+        if is_tp {
+            cum_tp += 1;
+        }
+        let precision = cum_tp as f64 / (i + 1) as f64;
+        let recall = cum_tp as f64 / total_gt as f64;
+        curve.push((recall, precision));
+    }
+    // 101-point interpolation with monotone precision envelope
+    let mut ap = 0.0;
+    for r in 0..=100 {
+        let r = r as f64 / 100.0;
+        let p = curve
+            .iter()
+            .filter(|(rec, _)| *rec >= r)
+            .map(|(_, prec)| *prec)
+            .fold(0.0f64, f64::max);
+        ap += p;
+    }
+    Some(ap / 101.0)
+}
+
+/// mAP at one threshold: mean over classes present in the ground truth.
+pub fn map_at(images: &[ImageEval], num_classes: usize, iou_thresh: f32) -> f64 {
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for c in 0..num_classes {
+        if let Some(ap) = average_precision(images, c, iou_thresh) {
+            sum += ap;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        0.0
+    } else {
+        sum / count as f64
+    }
+}
+
+/// Full evaluation: mAP@0.5 and mAP@[.5:.95].
+pub fn evaluate(images: &[ImageEval], num_classes: usize) -> MapResult {
+    let map_50 = map_at(images, num_classes, 0.5);
+    let mut acc = 0.0;
+    let mut thresh = 0.50;
+    let mut n = 0;
+    while thresh < 0.96 {
+        acc += map_at(images, num_classes, thresh as f32);
+        thresh += 0.05;
+        n += 1;
+    }
+    MapResult { map_50, map_50_95: acc / n as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gt(x: f32, class: usize) -> Box2D {
+        Box2D { x0: x, y0: 0.0, x1: x + 10.0, y1: 10.0, score: 1.0, class }
+    }
+
+    fn det(x: f32, score: f32, class: usize) -> Box2D {
+        Box2D { x0: x, y0: 0.0, x1: x + 10.0, y1: 10.0, score, class }
+    }
+
+    #[test]
+    fn perfect_detections_give_map_one() {
+        let images = vec![ImageEval {
+            detections: vec![det(0.0, 0.9, 0), det(20.0, 0.8, 1)],
+            ground_truth: vec![gt(0.0, 0), gt(20.0, 1)],
+        }];
+        let r = evaluate(&images, 4);
+        assert!((r.map_50 - 1.0).abs() < 1e-9, "{r:?}");
+        assert!((r.map_50_95 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn misses_reduce_map() {
+        let images = vec![ImageEval {
+            detections: vec![det(0.0, 0.9, 0)],
+            ground_truth: vec![gt(0.0, 0), gt(30.0, 0)],
+        }];
+        let r = evaluate(&images, 4);
+        // recall caps at 0.5 -> AP roughly (51/101)
+        assert!(r.map_50 < 0.6 && r.map_50 > 0.4, "{r:?}");
+    }
+
+    #[test]
+    fn false_positives_reduce_precision() {
+        let clean = vec![ImageEval {
+            detections: vec![det(0.0, 0.9, 0)],
+            ground_truth: vec![gt(0.0, 0)],
+        }];
+        let noisy = vec![ImageEval {
+            detections: vec![det(0.0, 0.9, 0), det(40.0, 0.95, 0)],
+            ground_truth: vec![gt(0.0, 0)],
+        }];
+        assert!(map_at(&noisy, 4, 0.5) < map_at(&clean, 4, 0.5));
+    }
+
+    #[test]
+    fn localization_quality_affects_high_thresholds_only() {
+        // detection shifted by 2px of 10 -> IoU ~ 0.667
+        let images = vec![ImageEval {
+            detections: vec![det(2.0, 0.9, 0)],
+            ground_truth: vec![gt(0.0, 0)],
+        }];
+        assert!(map_at(&images, 4, 0.5) > 0.99);
+        assert!(map_at(&images, 4, 0.7) < 0.01);
+        let r = evaluate(&images, 4);
+        assert!(r.map_50_95 < r.map_50);
+    }
+
+    #[test]
+    fn duplicate_detections_count_once() {
+        let images = vec![ImageEval {
+            detections: vec![det(0.0, 0.9, 0), det(0.5, 0.8, 0)],
+            ground_truth: vec![gt(0.0, 0)],
+        }];
+        // second detection is a FP (GT already matched): precision at
+        // rank 2 drops, but AP@0.5 stays 1.0 because recall 1.0 is hit at
+        // rank 1 with precision 1.0.
+        assert!((map_at(&images, 4, 0.5) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absent_classes_are_excluded() {
+        let images = vec![ImageEval {
+            detections: vec![det(0.0, 0.9, 0)],
+            ground_truth: vec![gt(0.0, 0)],
+        }];
+        // class 1..3 never appear -> mAP over class 0 only
+        assert!((map_at(&images, 4, 0.5) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Detection evaluation: box decoding, NMS, mAP, BD-rate metrics.
+
+pub mod bdrate;
+pub mod boxes;
+pub mod decode;
+pub mod map;
+pub mod report;
+
+pub use bdrate::{bd_rate, savings_at_loss, RdPoint};
+pub use boxes::Box2D;
+pub use decode::{decode_head, nms, postprocess};
+pub use map::{evaluate, map_at, ImageEval, MapResult};
+pub use report::{per_class, ClassReport};

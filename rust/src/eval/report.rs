@@ -1,0 +1,185 @@
+//! Per-class AP breakdown and precision–recall curve export.
+
+use super::boxes::Box2D;
+use super::map::ImageEval;
+use crate::json::Value;
+
+/// One class's evaluation detail at a fixed IoU threshold.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub class: usize,
+    pub ap: f64,
+    pub num_gt: usize,
+    pub num_det: usize,
+    pub tp: usize,
+    pub fp: usize,
+    /// (recall, precision) points, in detection-rank order.
+    pub pr_curve: Vec<(f64, f64)>,
+}
+
+/// Compute the per-class report at `iou_thresh`.
+pub fn per_class(images: &[ImageEval], num_classes: usize, iou_thresh: f32) -> Vec<ClassReport> {
+    let mut out = Vec::new();
+    for class in 0..num_classes {
+        let mut dets: Vec<(f32, usize, Box2D)> = Vec::new();
+        let mut total_gt = 0usize;
+        for (i, img) in images.iter().enumerate() {
+            total_gt += img.ground_truth.iter().filter(|g| g.class == class).count();
+            for d in img.detections.iter().filter(|d| d.class == class) {
+                dets.push((d.score, i, *d));
+            }
+        }
+        dets.sort_by(|a, b| b.0.total_cmp(&a.0));
+        let mut matched: Vec<Vec<bool>> = images
+            .iter()
+            .map(|img| vec![false; img.ground_truth.len()])
+            .collect();
+        let mut tp_flags = vec![false; dets.len()];
+        for (di, (_s, img_i, d)) in dets.iter().enumerate() {
+            let gts = &images[*img_i].ground_truth;
+            let mut best = -1isize;
+            let mut best_iou = iou_thresh;
+            for (gi, g) in gts.iter().enumerate() {
+                if g.class != class || matched[*img_i][gi] {
+                    continue;
+                }
+                let iou = d.iou(g);
+                if iou >= best_iou {
+                    best_iou = iou;
+                    best = gi as isize;
+                }
+            }
+            if best >= 0 {
+                matched[*img_i][best as usize] = true;
+                tp_flags[di] = true;
+            }
+        }
+        let mut cum_tp = 0usize;
+        let mut curve = Vec::with_capacity(dets.len());
+        for (i, &t) in tp_flags.iter().enumerate() {
+            if t {
+                cum_tp += 1;
+            }
+            if total_gt > 0 {
+                curve.push((
+                    cum_tp as f64 / total_gt as f64,
+                    cum_tp as f64 / (i + 1) as f64,
+                ));
+            }
+        }
+        // 101-point AP from the curve
+        let ap = if total_gt == 0 {
+            0.0
+        } else {
+            let mut acc = 0.0;
+            for r in 0..=100 {
+                let r = r as f64 / 100.0;
+                let p = curve
+                    .iter()
+                    .filter(|(rec, _)| *rec >= r)
+                    .map(|(_, prec)| *prec)
+                    .fold(0.0f64, f64::max);
+                acc += p;
+            }
+            acc / 101.0
+        };
+        let tp = cum_tp;
+        out.push(ClassReport {
+            class,
+            ap,
+            num_gt: total_gt,
+            num_det: dets.len(),
+            tp,
+            fp: dets.len() - tp,
+            pr_curve: curve,
+        });
+    }
+    out
+}
+
+/// Markdown table of the per-class report.
+pub fn table(reports: &[ClassReport], names: &[&str]) -> String {
+    let mut out = String::from("| class | AP@0.5 | GT | det | TP | FP |\n|---|---|---|---|---|---|\n");
+    for r in reports {
+        let name = names.get(r.class).copied().unwrap_or("?");
+        out.push_str(&format!(
+            "| {name} | {:.4} | {} | {} | {} | {} |\n",
+            r.ap, r.num_gt, r.num_det, r.tp, r.fp
+        ));
+    }
+    out
+}
+
+/// JSON export of PR curves (decimated to <= 64 points per class).
+pub fn pr_json(reports: &[ClassReport]) -> Value {
+    let mut v = Value::obj();
+    for r in reports {
+        let step = (r.pr_curve.len() / 64).max(1);
+        let pts: Vec<Value> = r
+            .pr_curve
+            .iter()
+            .step_by(step)
+            .map(|(rec, prec)| {
+                let mut p = Value::obj();
+                p.set("r", *rec).set("p", *prec);
+                p
+            })
+            .collect();
+        let mut c = Value::obj();
+        c.set("ap", r.ap).set("points", Value::Arr(pts));
+        v.set(&format!("class_{}", r.class), c);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b(x: f32, score: f32, class: usize) -> Box2D {
+        Box2D { x0: x, y0: 0.0, x1: x + 10.0, y1: 10.0, score, class }
+    }
+
+    #[test]
+    fn per_class_counts_tp_fp() {
+        let images = vec![ImageEval {
+            detections: vec![b(0.0, 0.9, 0), b(50.0, 0.8, 0), b(0.0, 0.7, 1)],
+            ground_truth: vec![b(0.0, 1.0, 0), b(0.0, 1.0, 1)],
+        }];
+        let reps = per_class(&images, 2, 0.5);
+        assert_eq!(reps[0].tp, 1);
+        assert_eq!(reps[0].fp, 1);
+        assert_eq!(reps[1].tp, 1);
+        assert_eq!(reps[1].fp, 0);
+        // class 0 reaches recall 1.0 at rank 1 with precision 1.0, so its
+        // interpolated AP is also 1.0 despite the trailing FP
+        assert!(reps[1].ap >= reps[0].ap);
+        assert!((reps[0].pr_curve.last().unwrap().1 - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consistency_with_map() {
+        let images = vec![ImageEval {
+            detections: vec![b(0.0, 0.9, 0)],
+            ground_truth: vec![b(0.0, 1.0, 0)],
+        }];
+        let reps = per_class(&images, 4, 0.5);
+        let mean: f64 = reps.iter().filter(|r| r.num_gt > 0).map(|r| r.ap).sum::<f64>()
+            / reps.iter().filter(|r| r.num_gt > 0).count() as f64;
+        let map = super::super::map::map_at(&images, 4, 0.5);
+        assert!((mean - map).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_and_json_render() {
+        let images = vec![ImageEval {
+            detections: vec![b(0.0, 0.9, 0)],
+            ground_truth: vec![b(0.0, 1.0, 0)],
+        }];
+        let reps = per_class(&images, 2, 0.5);
+        let t = table(&reps, &["circle", "square"]);
+        assert!(t.contains("circle"));
+        let j = pr_json(&reps);
+        assert!(j.get("class_0").unwrap().get("ap").is_some());
+    }
+}

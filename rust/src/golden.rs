@@ -1,0 +1,252 @@
+//! Cross-language golden verification: every contract between the Python
+//! build path and the Rust runtime is pinned by files under
+//! `artifacts/golden/` and re-checked here (CLI `baf golden` and the
+//! integration test `tests/golden.rs`).
+//!
+//! Layers checked, lowest to highest:
+//!   1. SplitMix64 PRNG draws (u64 / f32 / ranged)
+//!   2. ShapeWorld image + box generation (bit-exact f32)
+//!   3. quantize / dequantize / consolidate vs the jnp oracles
+//!   4. the full pipeline tensors: frontend Z, BaF Z-tilde, consolidated
+//!      Z-final, head — Rust runtime (PJRT) vs Python (jax) on image 0.
+
+use crate::data;
+use crate::json::{self};
+use crate::quant::{self, ChannelRange, QuantizedTensor};
+use crate::tensor::Tensor;
+use crate::tio;
+use crate::util::SplitMix64;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+fn load_f32(dir: &Path, name: &str) -> Result<Tensor> {
+    tio::read(&dir.join(name))?.into_tensor().context(name.to_string())
+}
+
+fn assert_close(name: &str, a: &Tensor, b: &Tensor, tol: f32) -> Result<()> {
+    if a.shape() != b.shape() {
+        bail!("{name}: shape {:?} vs {:?}", a.shape(), b.shape());
+    }
+    let d = a.max_abs_diff(b);
+    if d > tol {
+        bail!("{name}: max abs diff {d} > tol {tol}");
+    }
+    log::debug!("golden {name}: max abs diff {d:.3e} (tol {tol:.1e})");
+    Ok(())
+}
+
+/// 1. PRNG goldens.
+pub fn verify_prng(dir: &Path) -> Result<()> {
+    let v = json::from_file(&dir.join("prng.json"))?;
+    for case in v.req("cases")?.as_arr().unwrap_or(&[]) {
+        let seed: u64 = case
+            .req("seed")?
+            .as_str()
+            .context("seed")?
+            .parse()
+            .context("seed parse")?;
+        let mut r = SplitMix64::new(seed);
+        for (i, want) in case.req("u64")?.as_arr().unwrap_or(&[]).iter().enumerate() {
+            let want: u64 = want.as_str().context("u64")?.parse()?;
+            let got = r.next_u64();
+            if got != want {
+                bail!("prng seed {seed} draw {i}: {got} != {want}");
+            }
+        }
+        let mut r = SplitMix64::new(seed);
+        for (i, want) in case.req("f32")?.as_arr().unwrap_or(&[]).iter().enumerate() {
+            let want = want.as_f64().context("f32")? as f32;
+            let got = r.next_f32();
+            if got != want {
+                bail!("prng seed {seed} f32 draw {i}: {got} != {want}");
+            }
+        }
+        let mut r = SplitMix64::new(seed);
+        for (i, want) in
+            case.req("range_10_29")?.as_arr().unwrap_or(&[]).iter().enumerate()
+        {
+            let want = want.as_i64().context("range")?;
+            let got = r.next_range(10, 29);
+            if got != want {
+                bail!("prng seed {seed} range draw {i}: {got} != {want}");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// 2. ShapeWorld goldens (bit-exact images + boxes).
+pub fn verify_dataset(dir: &Path) -> Result<()> {
+    let v = json::from_file(&dir.join("dataset.json"))?;
+    let seed = v.req("dataset_seed")?.as_i64().context("seed")? as u64;
+    for case in v.req("cases")?.as_arr().unwrap_or(&[]) {
+        let idx = case.req("index")?.as_usize().context("index")?;
+        let s = data::generate(seed, idx);
+        let want_sum = case.req("sum")?.as_f64().context("sum")?;
+        let got_sum: f64 = s.image.data().iter().map(|&x| x as f64).sum();
+        if (got_sum - want_sum).abs() > 1e-3 {
+            bail!("dataset image {idx}: sum {got_sum} != {want_sum}");
+        }
+        let want_boxes = case.req("boxes")?.as_arr().context("boxes")?;
+        if want_boxes.len() != s.boxes.len() {
+            bail!("dataset image {idx}: {} boxes != {}", s.boxes.len(), want_boxes.len());
+        }
+        for (b, w) in s.boxes.iter().zip(want_boxes) {
+            let w = w.as_f64_vec().context("box")?;
+            let got = [b.x0, b.y0, b.x1, b.y1, b.class as f32];
+            for (g, ww) in got.iter().zip(&w) {
+                if (*g as f64 - ww).abs() > 1e-6 {
+                    bail!("dataset image {idx}: box {got:?} != {w:?}");
+                }
+            }
+        }
+    }
+    // bit-exact pixel check on image 0
+    let want = load_f32(dir, "dataset_img0.npy")?;
+    let got = data::generate(seed, 0).image;
+    assert_close("dataset_img0", &got, &want, 0.0)?;
+    Ok(())
+}
+
+/// 3. Quantizer / consolidation goldens vs the jnp oracles.
+pub fn verify_quant(dir: &Path) -> Result<()> {
+    let z = load_f32(dir, "quant_z.npy")?;
+    for n in [2u8, 4, 8] {
+        let q = quant::quantize(&z, n);
+        let (shape, want_bins) = tio::read(&dir.join(format!("quant_n{n}_q.npy")))?
+            .into_i32()
+            .context("bins")?;
+        if shape != z.shape() {
+            bail!("quant n={n}: bin shape {:?}", shape);
+        }
+        for (i, (&g, &w)) in q.bins.iter().zip(&want_bins).enumerate() {
+            if g as i32 != w {
+                bail!("quant n={n} bin {i}: {g} != {w}");
+            }
+        }
+        let want_mm = load_f32(dir, &format!("quant_n{n}_mm.npy"))?;
+        for (ch, r) in q.ranges.iter().enumerate() {
+            let wm = want_mm.data()[ch * 2];
+            let wx = want_mm.data()[ch * 2 + 1];
+            if r.min != wm || r.max != wx {
+                bail!("quant n={n} ch {ch}: range ({}, {}) != ({wm}, {wx})", r.min, r.max);
+            }
+        }
+        let deq = quant::dequantize(&q);
+        assert_close(
+            &format!("dequant n={n}"),
+            &deq,
+            &load_f32(dir, &format!("quant_n{n}_deq.npy"))?,
+            1e-5,
+        )?;
+        if n == 4 {
+            let zt = load_f32(dir, "quant_zt.npy")?;
+            let cons = quant::consolidate(&zt, &q);
+            assert_close(
+                "consolidate n=4",
+                &cons,
+                &load_f32(dir, "quant_n4_cons.npy")?,
+                1e-5,
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// 4. Full-pipeline goldens through the PJRT runtime.
+pub fn verify_pipeline(artifact_dir: &Path) -> Result<()> {
+    use crate::runtime::{Engine, Manifest};
+    let dir = artifact_dir.join("golden");
+    let meta = json::from_file(&dir.join("pipe_meta.json"))?;
+    let c = meta.req("c")?.as_usize().context("c")?;
+    let n = meta.req("n")?.as_i64().context("n")? as u8;
+    let sel = meta.req("sel")?.as_usize_vec().context("sel")?;
+
+    let engine = Engine::new(artifact_dir)?;
+    let m = engine.manifest().clone();
+
+    // frontend
+    let img = load_f32(&dir, "pipe_img.npy")?;
+    let z = engine
+        .run(
+            "frontend_b1",
+            &[&img.clone().reshape(&[1, m.image_size, m.image_size, 3])],
+        )?
+        .reshape(&[m.z_shape.0, m.z_shape.1, m.z_shape.2]);
+    let z_want = load_f32(&dir, "pipe_z.npy")?;
+    // PJRT CPU vs jax CPU: same HLO, minor scheduling differences
+    assert_close("pipe_z (frontend)", &z, &z_want, 2e-4)?;
+
+    // quantization of the selected channels
+    let planes = crate::tensor::gather_channels_hwc_to_chw(&z_want, &sel);
+    let q = quant::quantize(&planes, n);
+    let (_, want_bins) = tio::read(&dir.join("pipe_q.npy"))?.into_i32()?;
+    let mism = q
+        .bins
+        .iter()
+        .zip(&want_bins)
+        .filter(|(&g, &w)| g as i32 != w)
+        .count();
+    if mism > 0 {
+        bail!("pipe quant: {mism} of {} bins differ", q.bins.len());
+    }
+
+    // BaF prediction from the python-dequantized input
+    let zhat = load_f32(&dir, "pipe_zhat.npy")?;
+    let z_tilde = engine
+        .run(
+            &Manifest::baf_name(c, n, 1),
+            &[&zhat.clone().reshape(&[1, m.z_shape.0, m.z_shape.1, c])],
+        )?
+        .reshape(&[m.z_shape.0, m.z_shape.1, m.z_shape.2]);
+    let zt_want = load_f32(&dir, "pipe_ztilde.npy")?;
+    assert_close("pipe_ztilde (BaF)", &z_tilde, &zt_want, 5e-4)?;
+
+    // consolidation + scatter
+    let mm = load_f32(&dir, "pipe_mm.npy")?;
+    let ranges: Vec<ChannelRange> = (0..c)
+        .map(|ch| ChannelRange { min: mm.data()[ch * 2], max: mm.data()[ch * 2 + 1] })
+        .collect();
+    let qt = QuantizedTensor {
+        bins: want_bins.iter().map(|&v| v as u16).collect(),
+        c,
+        h: m.z_shape.0,
+        w: m.z_shape.1,
+        n,
+        ranges,
+    };
+    let mut z_final = zt_want.clone();
+    let pred = crate::tensor::gather_channels_hwc_to_chw(&zt_want, &sel);
+    let cons = quant::consolidate(&pred, &qt);
+    crate::tensor::scatter_channels_chw_into_hwc(&cons, &sel, &mut z_final);
+    assert_close("pipe_zfinal (Eq.6)", &z_final, &load_f32(&dir, "pipe_zfinal.npy")?, 5e-4)?;
+
+    // tail + monolith
+    let head = engine
+        .run(
+            "tail_b1",
+            &[&load_f32(&dir, "pipe_zfinal.npy")?
+                .reshape(&[1, m.z_shape.0, m.z_shape.1, m.z_shape.2])],
+        )?
+        .reshape(&[m.grid, m.grid, m.head_channels]);
+    assert_close("pipe_head (tail)", &head, &load_f32(&dir, "pipe_head.npy")?, 1e-3)?;
+
+    let mono = engine
+        .run(
+            "monolith_b1",
+            &[&img.reshape(&[1, m.image_size, m.image_size, 3])],
+        )?
+        .reshape(&[m.grid, m.grid, m.head_channels]);
+    assert_close("pipe_mono_head", &mono, &load_f32(&dir, "pipe_mono_head.npy")?, 1e-3)?;
+    Ok(())
+}
+
+/// Run every golden check (CLI `baf golden`).
+pub fn verify_all(artifact_dir: &Path) -> Result<()> {
+    let dir = artifact_dir.join("golden");
+    verify_prng(&dir).context("prng goldens")?;
+    verify_dataset(&dir).context("dataset goldens")?;
+    verify_quant(&dir).context("quant goldens")?;
+    verify_pipeline(artifact_dir).context("pipeline goldens")?;
+    Ok(())
+}

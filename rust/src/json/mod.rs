@@ -1,0 +1,26 @@
+//! Minimal JSON: value model, recursive-descent parser, serializer.
+//!
+//! serde is unavailable offline, and the needs here are small and fixed:
+//! read `artifacts/manifest.json`, `channel_stats.json` and the golden
+//! files, and write bench/metrics reports. The parser accepts the full
+//! JSON grammar (RFC 8259) with the usual numeric caveat that all numbers
+//! are f64 (the goldens therefore encode u64s as strings).
+
+mod parse;
+mod value;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;
+
+/// Parse a JSON file from disk.
+pub fn from_file(path: &std::path::Path) -> anyhow::Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+}
+
+/// Serialize a value to a file with 1-space indentation.
+pub fn to_file(path: &std::path::Path, v: &Value) -> anyhow::Result<()> {
+    std::fs::write(path, v.pretty(1))?;
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! # BaF — Back-and-Forth prediction for deep tensor compression
+//!
+//! A full-system reproduction of Choi, Cohen & Bajić, *"Back-and-Forth
+//! prediction for deep tensor compression"* (ICASSP 2020), built as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the collaborative-intelligence runtime: edge
+//!   node (frontend inference, channel selection, quantization, tiling,
+//!   entropy coding), cloud node (decoding, BaF prediction, Eq. 6
+//!   consolidation, detector tail), a dynamic batcher and a pipelined
+//!   server, plus every substrate the paper depends on (lossless + lossy
+//!   image codecs, mAP evaluation, BD-rate metrics, a procedural
+//!   detection dataset).
+//! * **L2 (python/compile, build time only)** — the YOLO-Lite detector
+//!   and BaF predictor in JAX, AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the hot spots
+//!   (quantize, consolidate, correlation, split-layer conv+BN) that lower
+//!   into the same artifacts.
+//!
+//! Python never runs on the request path: the `runtime` module loads the
+//! HLO artifacts through the PJRT C API (`xla` crate) once and executes
+//! them natively thereafter.
+//!
+//! See DESIGN.md for the architecture and experiment index, and
+//! EXPERIMENTS.md for reproduction results.
+
+pub mod bench;
+pub mod cli;
+pub mod codec;
+pub mod config;
+pub mod experiments;
+pub mod golden;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod json;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod selection;
+pub mod tensor;
+pub mod tile;
+pub mod tio;
+pub mod util;

@@ -1,0 +1,386 @@
+//! `baf` — the leader binary: run the split pipeline, the experiments,
+//! the serving demo, and codec tools from one CLI.
+
+use anyhow::Result;
+use baf::cli::Args;
+use baf::codec::CodecKind;
+use baf::config::{PipelineConfig, ServerConfig};
+use baf::coordinator::{run_server, CloudOnly, Pipeline};
+use baf::experiments::{self, Context, DEFAULT_EVAL_IMAGES};
+use baf::runtime::{default_artifact_dir, Engine};
+use baf::selection::Policy;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+const HELP: &str = "\
+baf — Back-and-Forth prediction for deep tensor compression (ICASSP'20 repro)
+
+USAGE: baf <command> [options]
+
+COMMANDS
+  run        run the split pipeline over the eval set; report mAP + rate
+             --c N --n BITS --codec tlc|png|zstd|mic --qp QP
+             --policy corr|variance|first|random:SEED --no-consolidate
+             --images N
+  baseline   cloud-only (unmodified detector) mAP over the eval set
+  channels   E1 / Fig.3: mAP vs C sweep             [--images N]
+  sweep      E2/E3 / Fig.4: rate–mAP curves + headline savings
+             [--c N] [--images N]
+  codecs     E4: lossless codec comparison          [--images N]
+  ablate     E6: consolidation + selection-policy ablations
+  serve      E5: pipelined serving demo with Poisson arrivals
+             --rate RPS --requests N --batch-cap B --deadline-us US
+             --decode-workers N
+  encode     compress a CHW f32 .npy tensor into a .baf frame
+             <in.npy> <out.baf> [--n BITS] [--codec NAME] [--qp QP]
+  decode     decompress a .baf frame back to a CHW f32 .npy
+             <in.baf> <out.npy>
+  report     per-class AP breakdown + PR-curve JSON   [--images N] [--out F]
+  render     write eval images as PPM with GT + detections drawn
+             [--count N] [--out-dir D]
+  inspect    print the artifact manifest and channel statistics
+  golden     verify Rust implementations against python goldens
+
+COMMON OPTIONS
+  --artifacts DIR   artifact directory (default: ./artifacts or $BAF_ARTIFACTS)
+";
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    args.opt("artifacts").map(PathBuf::from).unwrap_or_else(default_artifact_dir)
+}
+
+fn pipeline_cfg(args: &Args) -> Result<PipelineConfig> {
+    let mut cfg = PipelineConfig {
+        artifact_dir: artifact_dir(args),
+        ..Default::default()
+    };
+    if let Some(c) = args.opt_parse::<usize>("c")? {
+        cfg.c = c;
+    }
+    if let Some(n) = args.opt_parse::<u8>("n")? {
+        cfg.n = n;
+    }
+    if let Some(codec) = args.opt("codec") {
+        cfg.codec = CodecKind::from_name(codec)?;
+    }
+    if let Some(qp) = args.opt_parse::<u8>("qp")? {
+        cfg.qp = qp;
+    }
+    if let Some(p) = args.opt("policy") {
+        cfg.policy = Policy::parse(p)?;
+    }
+    if args.has_flag("no-consolidate") {
+        cfg.consolidate = false;
+    }
+    Ok(cfg)
+}
+
+fn images(args: &Args) -> Result<usize> {
+    Ok(args.opt_parse::<usize>("images")?.unwrap_or(DEFAULT_EVAL_IMAGES))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "artifacts", "c", "n", "codec", "qp", "policy", "no-consolidate", "images",
+    ])?;
+    let cfg = pipeline_cfg(args)?;
+    let n_img = images(args)?;
+    println!(
+        "pipeline: C={} n={} codec={} qp={} policy={} consolidate={}",
+        cfg.c,
+        cfg.n,
+        cfg.codec.name(),
+        cfg.qp,
+        cfg.policy.name(),
+        cfg.consolidate
+    );
+    let pipe = Pipeline::open(cfg)?;
+    let samples = baf::data::eval_set(n_img);
+    let (map, bytes) = pipe.evaluate_set(&samples)?;
+    println!("eval images: {n_img}");
+    println!("mAP@0.5     = {:.4}", map.map_50);
+    println!("mAP@[.5:.95]= {:.4}", map.map_50_95);
+    println!("mean rate   = {bytes:.0} bytes/image");
+    // stage latency of a single request
+    let out = pipe.process(&samples[0].image)?;
+    println!("\nper-stage latency (single request):");
+    for (name, us) in &out.stages {
+        println!("  {name:<18} {us:>9.1} us");
+    }
+    println!("  consolidation clamp rate: {:.4}", out.consolidation_rate);
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "images"])?;
+    let engine = Rc::new(Engine::new(&artifact_dir(args))?);
+    let co = CloudOnly::new(engine);
+    let samples = baf::data::eval_set(images(args)?);
+    let map = co.evaluate_set(&samples)?;
+    println!("cloud-only mAP@0.5 = {:.4}", map.map_50);
+    println!("cloud-only mAP@[.5:.95] = {:.4}", map.map_50_95);
+    Ok(())
+}
+
+fn cmd_channels(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "images"])?;
+    let ctx = Context::open(&artifact_dir(args), images(args)?)?;
+    let (cloud_map, rows) = experiments::fig3(&ctx, &[4, 8, 16, 32, 64])?;
+    print!("{}", experiments::fig3_table(cloud_map, &rows));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "images", "c"])?;
+    let c = args.opt_parse::<usize>("c")?.unwrap_or(16);
+    let ctx = Context::open(&artifact_dir(args), images(args)?)?;
+    let r = experiments::fig4(&ctx, c)?;
+    print!("{}", experiments::fig4_table(&r, c));
+    Ok(())
+}
+
+fn cmd_codecs(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "images"])?;
+    let ctx = Context::open(&artifact_dir(args), images(args)?.min(32))?;
+    let rows = experiments::codec_table(&ctx, &[8, 16, 32], &[2, 4, 6, 8])?;
+    print!("{}", experiments::codec_table_fmt(&rows));
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts", "images"])?;
+    let ctx = Context::open(&artifact_dir(args), images(args)?)?;
+    println!("E6 — ablations (C=16, n=8 unless noted)\n");
+    println!("selection policy (beta-fill reconstruction, no BaF):");
+    println!("| policy | mAP@0.5 | bytes/img |");
+    println!("|---|---|---|");
+    for p in [Policy::Correlation, Policy::Variance, Policy::FirstC, Policy::Random(1)] {
+        let (map, bytes) = ctx.beta_fill(p, 16, 8)?;
+        println!("| {} | {:.4} | {:.0} |", p.name(), map, bytes);
+    }
+    let (baf_map, _) = ctx.point(16, 8, CodecKind::Tlc, 0)?;
+    println!("| correlation + BaF | {baf_map:.4} | (same rate) |");
+    println!("\nEq.6 consolidation:");
+    println!("| n | mAP on | mAP off | clamp rate |");
+    println!("|---|---|---|---|");
+    for n in [4u8, 6, 8] {
+        let (on, off, rate) = ctx.consolidation_ablation(16, n)?;
+        println!("| {n} | {on:.4} | {off:.4} | {rate:.4} |");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "artifacts", "c", "n", "codec", "qp", "policy", "no-consolidate", "rate",
+        "requests", "batch-cap", "deadline-us", "decode-workers", "burst",
+    ])?;
+    let pcfg = pipeline_cfg(args)?;
+    let mut scfg = ServerConfig::default();
+    if let Some(v) = args.opt_parse::<f64>("rate")? {
+        scfg.arrival_rate = v;
+    }
+    if let Some(v) = args.opt_parse::<usize>("requests")? {
+        scfg.num_requests = v;
+    }
+    if let Some(v) = args.opt_parse::<usize>("batch-cap")? {
+        scfg.batch_cap = v;
+    }
+    if let Some(v) = args.opt_parse::<u64>("deadline-us")? {
+        scfg.batch_deadline_us = v;
+    }
+    if let Some(v) = args.opt_parse::<usize>("decode-workers")? {
+        scfg.decode_workers = v;
+    }
+    if let Some(v) = args.opt_parse::<f64>("burst")? {
+        scfg.burst_factor = v;
+    }
+    println!(
+        "serving: {} requests @ {}/s, batch cap {}, deadline {} us, {} decode workers",
+        scfg.num_requests,
+        scfg.arrival_rate,
+        scfg.batch_cap,
+        scfg.batch_deadline_us,
+        scfg.decode_workers
+    );
+    let report = run_server(&pcfg, &scfg)?;
+    println!(
+        "\nserved {} requests in {:.2}s -> {:.1} req/s (mean batch {:.2})",
+        report.requests, report.wall_seconds, report.throughput_rps, report.mean_batch_size
+    );
+    println!("\n{}", report.table);
+    Ok(())
+}
+
+fn cmd_encode(args: &Args) -> Result<()> {
+    args.expect_known(&["n", "codec", "qp"])?;
+    let [input, output] = args.positional.as_slice() else {
+        anyhow::bail!("usage: baf encode <in.npy> <out.baf> [--n BITS] [--codec NAME]");
+    };
+    let t = baf::tio::read(std::path::Path::new(input))?.into_tensor()?;
+    anyhow::ensure!(t.shape().len() == 3, "expected CHW rank-3 tensor");
+    let n = args.opt_parse::<u8>("n")?.unwrap_or(8);
+    let codec = CodecKind::from_name(args.opt("codec").unwrap_or("tlc"))?;
+    let qp = args.opt_parse::<u8>("qp")?.unwrap_or(0);
+    let q = baf::quant::quantize(&t, n);
+    let frame = baf::codec::container::pack(&q, codec, qp);
+    let raw = t.len() * 4;
+    std::fs::write(output, &frame)?;
+    println!(
+        "{input} ({raw} B raw f32) -> {output} ({} B, {:.2}x, codec {}, n={n})",
+        frame.len(),
+        raw as f64 / frame.len() as f64,
+        codec.name()
+    );
+    Ok(())
+}
+
+fn cmd_decode(args: &Args) -> Result<()> {
+    args.expect_known(&[])?;
+    let [input, output] = args.positional.as_slice() else {
+        anyhow::bail!("usage: baf decode <in.baf> <out.npy>");
+    };
+    let bytes = std::fs::read(input)?;
+    let frame = baf::codec::container::parse(&bytes)?;
+    let q = baf::codec::container::unpack(&frame);
+    let t = baf::quant::dequantize(&q);
+    baf::tio::write_f32(std::path::Path::new(output), &t)?;
+    println!(
+        "{input} -> {output} (C={} {}x{}, n={}, codec {})",
+        q.c,
+        q.h,
+        q.w,
+        q.n,
+        frame.codec.name()
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "artifacts", "c", "n", "codec", "qp", "policy", "no-consolidate", "images",
+        "out",
+    ])?;
+    let cfg = pipeline_cfg(args)?;
+    let pipe = Pipeline::open(cfg)?;
+    let samples = baf::data::eval_set(images(args)?);
+    let mut evals = Vec::new();
+    for s in &samples {
+        let out = pipe.process(&s.image)?;
+        evals.push(baf::eval::ImageEval {
+            detections: out.boxes,
+            ground_truth: s.boxes.iter().map(|&b| b.into()).collect(),
+        });
+    }
+    let reps = baf::eval::per_class(&evals, baf::data::NUM_CLASSES, 0.5);
+    print!("{}", baf::eval::report::table(&reps, &baf::data::CLASS_NAMES));
+    if let Some(out) = args.opt("out") {
+        baf::json::to_file(
+            std::path::Path::new(out),
+            &baf::eval::report::pr_json(&reps),
+        )?;
+        println!("PR curves written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_render(args: &Args) -> Result<()> {
+    args.expect_known(&[
+        "artifacts", "c", "n", "codec", "qp", "policy", "no-consolidate", "count",
+        "out-dir",
+    ])?;
+    let cfg = pipeline_cfg(args)?;
+    let pipe = Pipeline::open(cfg)?;
+    let count = args.opt_parse::<usize>("count")?.unwrap_or(8);
+    let out_dir = std::path::PathBuf::from(args.opt("out-dir").unwrap_or("renders"));
+    std::fs::create_dir_all(&out_dir)?;
+    for (i, s) in baf::data::eval_set(count).iter().enumerate() {
+        let out = pipe.process(&s.image)?;
+        let dets: Vec<_> = out.boxes.into_iter().filter(|b| b.score > 0.3).collect();
+        let gt: Vec<baf::eval::Box2D> = s.boxes.iter().map(|&b| b.into()).collect();
+        let path = out_dir.join(format!("eval_{i:03}.ppm"));
+        baf::data::render::write_ppm(&path, &s.image, &gt, &dets)?;
+        println!("{} ({} GT, {} detections)", path.display(), gt.len(), dets.len());
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts"])?;
+    let dir = artifact_dir(args);
+    let engine = Engine::new(&dir)?;
+    let m = engine.manifest();
+    println!("artifact dir : {}", dir.display());
+    println!(
+        "model        : {}x{} input, grid {}, {} anchors, {} classes",
+        m.image_size,
+        m.image_size,
+        m.grid,
+        m.anchors.len(),
+        m.num_classes
+    );
+    println!(
+        "split tensor : Z = {}x{}x{} (P={}), X has Q={} channels",
+        m.z_shape.0, m.z_shape.1, m.z_shape.2, m.p_channels, m.q_channels
+    );
+    println!("artifacts    : {}", m.artifacts.len());
+    for (name, spec) in &m.artifacts {
+        println!(
+            "  {name:<22} {:>9} KiB  in={:?} out={:?}",
+            std::fs::metadata(&spec.file).map(|md| md.len() / 1024).unwrap_or(0),
+            spec.inputs,
+            spec.output
+        );
+    }
+    let stats = baf::selection::ChannelStats::load(&dir)?;
+    println!("\nchannel order (first 16): {:?}", &stats.order[..16.min(stats.order.len())]);
+    println!("BaF variants: {:?}", m.baf_variants());
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<()> {
+    args.expect_known(&["artifacts"])?;
+    let dir = artifact_dir(args);
+    baf::golden::verify_all(&dir)?;
+    println!("all goldens OK");
+    Ok(())
+}
+
+fn main() {
+    baf::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "baseline" => cmd_baseline(&args),
+        "channels" => cmd_channels(&args),
+        "sweep" => cmd_sweep(&args),
+        "codecs" => cmd_codecs(&args),
+        "ablate" => cmd_ablate(&args),
+        "serve" => cmd_serve(&args),
+        "encode" => cmd_encode(&args),
+        "decode" => cmd_decode(&args),
+        "report" => cmd_report(&args),
+        "render" => cmd_render(&args),
+        "inspect" => cmd_inspect(&args),
+        "golden" => cmd_golden(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => {
+            print!("{HELP}");
+            Err(anyhow::anyhow!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,228 @@
+//! Serving metrics: counters + streaming histograms with percentile
+//! queries, exported as JSON or a human table. Used by the coordinator's
+//! server loop and the E5 bench.
+
+use crate::json::Value;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A monotonically increasing counter (lock-free).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram (microseconds), p50/p95/p99 queries.
+///
+/// Buckets grow geometrically (~8% per bucket) covering 1us .. ~70s with
+/// 256 buckets; recording is lock-free.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const NUM_BUCKETS: usize = 256;
+const GROWTH: f64 = 1.08;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: f64) -> usize {
+        if us <= 1.0 {
+            return 0;
+        }
+        let b = us.ln() / GROWTH.ln();
+        (b as usize).min(NUM_BUCKETS - 1)
+    }
+
+    fn bucket_upper(i: usize) -> f64 {
+        GROWTH.powi(i as i32 + 1)
+    }
+
+    pub fn record_us(&self, us: f64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        self.max_us.fetch_max(us as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64
+    }
+
+    /// Approximate quantile (upper bound of the containing bucket).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(NUM_BUCKETS - 1)
+    }
+
+    pub fn summary(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("count", self.count())
+            .set("mean_us", self.mean_us())
+            .set("p50_us", self.quantile_us(0.50))
+            .set("p95_us", self.quantile_us(0.95))
+            .set("p99_us", self.quantile_us(0.99))
+            .set("max_us", self.max_us());
+        v
+    }
+}
+
+/// A named registry of counters and histograms.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        let mut m = self.histograms.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// Export everything as a JSON object.
+    pub fn export(&self) -> Value {
+        let mut v = Value::obj();
+        let mut counters = Value::obj();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            counters.set(k, c.get());
+        }
+        let mut hists = Value::obj();
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            hists.set(k, h.summary());
+        }
+        v.set("counters", counters).set("latencies", hists);
+        v
+    }
+
+    /// Human-readable latency table (fixed-width markdown).
+    pub fn table(&self) -> String {
+        let mut out = String::from(
+            "| stage | count | mean(us) | p50(us) | p95(us) | p99(us) | max(us) |\n|---|---|---|---|---|---|---|\n",
+        );
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "| {k} | {} | {:.0} | {:.0} | {:.0} | {:.0} | {:.0} |\n",
+                h.count(),
+                h.mean_us(),
+                h.quantile_us(0.5),
+                h.quantile_us(0.95),
+                h.quantile_us(0.99),
+                h.max_us()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent_increments() {
+        let c = std::sync::Arc::new(Counter::default());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_ordered_and_close() {
+        let h = Histogram::new();
+        for i in 1..=10_000u32 {
+            h.record_us(i as f64);
+        }
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // log buckets are ~8% wide; allow 10% slack
+        assert!((p50 - 5000.0).abs() / 5000.0 < 0.10, "p50={p50}");
+        assert!((p95 - 9500.0).abs() / 9500.0 < 0.10, "p95={p95}");
+        assert!(h.max_us() >= 10_000.0);
+    }
+
+    #[test]
+    fn registry_exports_json() {
+        let r = Registry::default();
+        r.counter("requests").add(3);
+        r.histogram("e2e").record_us(1234.0);
+        let v = r.export();
+        assert_eq!(
+            v.get("counters").unwrap().get("requests").unwrap().as_f64(),
+            Some(3.0)
+        );
+        assert!(v.get("latencies").unwrap().get("e2e").is_some());
+        assert!(r.table().contains("e2e"));
+    }
+}

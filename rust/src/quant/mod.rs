@@ -1,0 +1,257 @@
+//! Quantization (Eq. 4–5) and consolidation (Eq. 6) — Rust hot path.
+//!
+//! Semantics are pinned to the Python oracles in
+//! `python/compile/kernels/ref.py` (checked via the kernel goldens): the
+//! per-channel min/max side info is rounded to f16 *before* quantization,
+//! round-half-away-from-zero matches `jnp.round`'s behaviour on the
+//! non-negative normalized values used here, and constant channels
+//! quantize to all-zeros.
+
+use crate::tensor::Tensor;
+use crate::util::f16::saturate_to_f16;
+
+/// Per-channel quantizer parameters (the bitstream side info, C*32 bits).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChannelRange {
+    /// f16-rounded channel minimum (m_p in the paper).
+    pub min: f32,
+    /// f16-rounded channel maximum (M_p).
+    pub max: f32,
+}
+
+impl ChannelRange {
+    #[inline]
+    pub fn span(&self) -> f32 {
+        self.max - self.min
+    }
+}
+
+/// Quantized channel planes: values in [0, 2^n - 1], channel-major.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    /// Bin indices, shape (C, H, W), each < 2^n.
+    pub bins: Vec<u16>,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Bit depth n (2..=16 supported end to end).
+    pub n: u8,
+    pub ranges: Vec<ChannelRange>,
+}
+
+impl QuantizedTensor {
+    #[inline]
+    pub fn levels(&self) -> u32 {
+        (1u32 << self.n) - 1
+    }
+
+    pub fn plane(&self, ch: usize) -> &[u16] {
+        &self.bins[ch * self.h * self.w..(ch + 1) * self.h * self.w]
+    }
+}
+
+/// `jnp.round` rounds half to even; on the normalized value grid produced
+/// by Eq. 4 the inputs virtually never land exactly on .5, but we match
+/// the semantics anyway so goldens are bit-exact.
+#[inline]
+fn round_half_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 && (r as i64) % 2 != 0 {
+        r - (r - x).signum()
+    } else {
+        r
+    }
+}
+
+/// Eq. 4: quantize a channel-major (C, H, W) tensor to n bits per channel.
+pub fn quantize(z: &Tensor, n: u8) -> QuantizedTensor {
+    assert!((2..=16).contains(&n), "n out of range: {n}");
+    let s = z.shape();
+    assert_eq!(s.len(), 3);
+    let (c, h, w) = (s[0], s[1], s[2]);
+    let levels = ((1u32 << n) - 1) as f32;
+    let mut bins = vec![0u16; c * h * w];
+    let mut ranges = Vec::with_capacity(c);
+    for ch in 0..c {
+        let plane = &z.data()[ch * h * w..(ch + 1) * h * w];
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in plane {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        let mn = saturate_to_f16(mn);
+        let mx = saturate_to_f16(mx);
+        let span = mx - mn;
+        let range = ChannelRange { min: mn, max: mx };
+        let out = &mut bins[ch * h * w..(ch + 1) * h * w];
+        if span > 0.0 {
+            let scale = levels / span;
+            for (o, &v) in out.iter_mut().zip(plane) {
+                let q = round_half_even((v - mn) * scale).clamp(0.0, levels);
+                *o = q as u16;
+            }
+        } // else: all zeros (constant channel)
+        ranges.push(range);
+    }
+    QuantizedTensor { bins, c, h, w, n, ranges }
+}
+
+/// Eq. 5: inverse quantization back to a channel-major f32 tensor.
+pub fn dequantize(q: &QuantizedTensor) -> Tensor {
+    let levels = q.levels() as f32;
+    let mut out = vec![0f32; q.bins.len()];
+    for ch in 0..q.c {
+        let r = q.ranges[ch];
+        let span = r.span();
+        let plane = q.plane(ch);
+        let dst = &mut out[ch * q.h * q.w..(ch + 1) * q.h * q.w];
+        for (d, &b) in dst.iter_mut().zip(plane) {
+            *d = b as f32 / levels * span + r.min;
+        }
+    }
+    Tensor::from_vec(&[q.c, q.h, q.w], out)
+}
+
+/// Eq. 6: consolidate BaF predictions of the transmitted channels.
+///
+/// `z_tilde` is the BaF prediction of the same C channels, channel-major
+/// (C, H, W); the result keeps z-tilde where it falls inside the decoded
+/// bin and clamps it to the nearest bin boundary otherwise — i.e. an
+/// elementwise clip to `[m + (q-0.5)*step, m + (q+0.5)*step]`. Constant
+/// channels are pinned to their (single) transmitted value.
+pub fn consolidate(z_tilde: &Tensor, q: &QuantizedTensor) -> Tensor {
+    let s = z_tilde.shape();
+    assert_eq!(s, &[q.c, q.h, q.w], "consolidate shape mismatch");
+    let levels = q.levels() as f32;
+    let mut out = vec![0f32; z_tilde.len()];
+    for ch in 0..q.c {
+        let r = q.ranges[ch];
+        let span = r.span();
+        let plane = q.plane(ch);
+        let src = &z_tilde.data()[ch * q.h * q.w..(ch + 1) * q.h * q.w];
+        let dst = &mut out[ch * q.h * q.w..(ch + 1) * q.h * q.w];
+        if span > 0.0 {
+            let step = span / levels;
+            for ((d, &zt), &b) in dst.iter_mut().zip(src).zip(plane) {
+                let lo = r.min + (b as f32 - 0.5) * step;
+                let hi = r.min + (b as f32 + 0.5) * step;
+                *d = zt.clamp(lo, hi);
+            }
+        } else {
+            dst.fill(r.min);
+        }
+    }
+    Tensor::from_vec(&[q.c, q.h, q.w], out)
+}
+
+/// Fraction of elements the consolidation actually changed — a useful
+/// diagnostic: high values mean the BaF net disagrees with the decoded
+/// bins a lot (low n or undertrained model).
+pub fn consolidation_rate(z_tilde: &Tensor, q: &QuantizedTensor) -> f64 {
+    let cons = consolidate(z_tilde, q);
+    let changed = cons
+        .data()
+        .iter()
+        .zip(z_tilde.data())
+        .filter(|(a, b)| a != b)
+        .count();
+    changed as f64 / cons.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn random_chw(c: usize, h: usize, w: usize, seed: u64) -> Tensor {
+        let mut r = SplitMix64::new(seed);
+        Tensor::from_vec(
+            &[c, h, w],
+            (0..c * h * w).map(|_| r.next_f32() * 6.0 - 3.0).collect(),
+        )
+    }
+
+    #[test]
+    fn quantize_dequantize_error_bounded_by_half_step() {
+        for n in [2u8, 4, 8, 12] {
+            let z = random_chw(4, 8, 8, n as u64);
+            let q = quantize(&z, n);
+            let zh = dequantize(&q);
+            for ch in 0..4 {
+                let r = q.ranges[ch];
+                let step = r.span() / q.levels() as f32;
+                for y in 0..8 {
+                    for x in 0..8 {
+                        let err = (z.at3(ch, y, x) - zh.at3(ch, y, x)).abs();
+                        // f16 rounding of min/max can cost at most ~half a
+                        // step extra at the edges.
+                        assert!(
+                            err <= step * 1.01 + 1e-4,
+                            "n={n} err={err} step={step}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bins_cover_full_range() {
+        let z = random_chw(2, 16, 16, 9);
+        let q = quantize(&z, 4);
+        let mx = q.bins.iter().max().copied().unwrap();
+        let mn = q.bins.iter().min().copied().unwrap();
+        assert_eq!(mx, 15);
+        assert_eq!(mn, 0);
+    }
+
+    #[test]
+    fn constant_channel_roundtrips_exactly() {
+        let z = Tensor::from_vec(&[1, 2, 2], vec![0.75; 4]);
+        let q = quantize(&z, 8);
+        assert!(q.bins.iter().all(|&b| b == 0));
+        let zh = dequantize(&q);
+        for v in zh.data() {
+            assert!((v - 0.75).abs() < 1e-3); // f16 rounding of 0.75 is exact
+        }
+        let zt = Tensor::from_vec(&[1, 2, 2], vec![0.9, 0.7, 0.75, -1.0]);
+        let cons = consolidate(&zt, &q);
+        assert!(cons.data().iter().all(|&v| (v - zh.data()[0]).abs() < 1e-6));
+    }
+
+    #[test]
+    fn consolidate_is_identity_inside_bins() {
+        let z = random_chw(3, 8, 8, 4);
+        let q = quantize(&z, 8);
+        let zh = dequantize(&q);
+        // the dequantized values are bin centers -> consolidation keeps them
+        let cons = consolidate(&zh, &q);
+        assert_eq!(cons, zh);
+    }
+
+    #[test]
+    fn consolidate_clamps_outside_bins() {
+        let z = Tensor::from_vec(&[1, 1, 2], vec![0.0, 1.0]);
+        let q = quantize(&z, 2); // levels = 3, step = 1/3
+        // push predictions far out of their bins
+        let zt = Tensor::from_vec(&[1, 1, 2], vec![0.9, 0.1]);
+        let cons = consolidate(&zt, &q);
+        let step = 1.0 / 3.0;
+        assert!((cons.data()[0] - 0.5 * step).abs() < 1e-4); // clamp to hi of bin 0
+        assert!((cons.data()[1] - (1.0 - 0.5 * step)).abs() < 1e-4); // lo of bin 3
+    }
+
+    #[test]
+    fn consolidation_rate_behaves() {
+        let z = random_chw(2, 8, 8, 5);
+        let q = quantize(&z, 6);
+        let zh = dequantize(&q);
+        assert_eq!(consolidation_rate(&zh, &q), 0.0);
+        let mut far = zh.clone();
+        for v in far.data_mut() {
+            *v += 100.0;
+        }
+        assert_eq!(consolidation_rate(&far, &q), 1.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Artifact manifest: what `python -m compile.aot` exported.
+
+use crate::json::{self, Value};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One exported HLO computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    /// Input shapes in declaration order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shape.
+    pub output: Vec<usize>,
+    /// Stage kind: frontend | tail | monolith | baf | fused.
+    pub stage: String,
+    /// Number of transmitted channels (baf/fused only).
+    pub c: Option<usize>,
+    /// Quantizer depth the model was trained for (baf/fused only).
+    pub n: Option<u8>,
+    pub batch: usize,
+    /// Static channel selection baked into the graph (baf/fused only).
+    pub sel: Option<Vec<usize>>,
+}
+
+/// The full artifact manifest plus model geometry.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub image_size: usize,
+    pub grid: usize,
+    pub cell: usize,
+    pub anchors: Vec<(f32, f32)>,
+    pub num_classes: usize,
+    pub head_channels: usize,
+    pub p_channels: usize,
+    pub q_channels: usize,
+    pub z_shape: (usize, usize, usize),
+    pub leaky_slope: f32,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let v = json::from_file(&dir.join("manifest.json"))
+            .context("loading artifact manifest (run `make artifacts` first?)")?;
+        let usize_of = |key: &str| -> Result<usize> {
+            v.req(key)?.as_usize().ok_or_else(|| anyhow!("bad {key}"))
+        };
+        let anchors = v
+            .req("anchors")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("bad anchors"))?
+            .iter()
+            .map(|a| {
+                let p = a.as_f64_vec().ok_or_else(|| anyhow!("bad anchor"))?;
+                Ok((p[0] as f32, p[1] as f32))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let z = v
+            .req("z_shape")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("bad z_shape"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in
+            v.req("artifacts")?.as_obj().ok_or_else(|| anyhow!("bad artifacts"))?
+        {
+            artifacts.insert(name.clone(), parse_spec(dir, name, spec)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            image_size: usize_of("image_size")?,
+            grid: usize_of("grid")?,
+            cell: usize_of("cell")?,
+            anchors,
+            num_classes: usize_of("num_classes")?,
+            head_channels: usize_of("head_channels")?,
+            p_channels: usize_of("p_channels")?,
+            q_channels: usize_of("q_channels")?,
+            z_shape: (z[0], z[1], z[2]),
+            leaky_slope: v.req("leaky_slope")?.as_f64().unwrap_or(0.1) as f32,
+            artifacts,
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// The BaF artifact name for a (C, n, batch) triple.
+    pub fn baf_name(c: usize, n: u8, batch: usize) -> String {
+        format!("baf_c{c}_n{n}_b{batch}")
+    }
+
+    /// All (C, n) pairs with an exported batch-1 BaF model.
+    pub fn baf_variants(&self) -> Vec<(usize, u8)> {
+        let mut out: Vec<(usize, u8)> = self
+            .artifacts
+            .values()
+            .filter(|s| s.stage == "baf" && s.batch == 1)
+            .filter_map(|s| Some((s.c?, s.n?)))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+fn parse_spec(dir: &Path, name: &str, v: &Value) -> Result<ArtifactSpec> {
+    let file = v.req("file")?.as_str().ok_or_else(|| anyhow!("bad file"))?;
+    let inputs = v
+        .req("inputs")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("bad inputs"))?
+        .iter()
+        .map(|s| s.as_usize_vec().ok_or_else(|| anyhow!("bad input shape")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ArtifactSpec {
+        name: name.to_string(),
+        file: dir.join(file),
+        inputs,
+        output: v
+            .req("output")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow!("bad output shape"))?,
+        stage: v.req("stage")?.as_str().unwrap_or("").to_string(),
+        c: v.get("c").and_then(Value::as_usize),
+        n: v.get("n").and_then(Value::as_i64).map(|x| x as u8),
+        batch: v.get("batch").and_then(Value::as_usize).unwrap_or(1),
+        sel: v.get("sel").and_then(Value::as_usize_vec),
+    })
+}

@@ -1,0 +1,132 @@
+//! The PJRT execution engine: load HLO text -> compile once -> execute.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs: HLO *text* is the
+//! interchange format (the bundled xla_extension 0.5.1 rejects jax>=0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids).
+//!
+//! Threading: the `xla` crate wrappers hold raw pointers and are !Send,
+//! so an `Engine` is thread-confined by construction. The coordinator
+//! gives each stage thread its own `Engine` (edge / cloud-infer), which
+//! also models the deployment reality of one accelerator context per
+//! process. Executables are compiled lazily and cached by artifact name.
+
+use super::artifact::{ArtifactSpec, Manifest};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 tensors; shapes must match the spec exactly.
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Tensor> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, want) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape() != want.as_slice() {
+                bail!(
+                    "{}: input shape {:?} != expected {:?}",
+                    self.spec.name,
+                    t.shape(),
+                    want
+                );
+            }
+            // §Perf: single-copy literal creation (vec1 + reshape would
+            // materialize the buffer twice per input)
+            let bytes = unsafe {
+                std::slice::from_raw_parts(
+                    t.data().as_ptr() as *const u8,
+                    t.data().len() * std::mem::size_of::<f32>(),
+                )
+            };
+            literals.push(xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                want,
+                bytes,
+            )?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        Ok(Tensor::from_vec(&self.spec.output, values))
+    }
+}
+
+/// A PJRT CPU client plus a lazy cache of compiled artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over the artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log::debug!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let spec = self.manifest.spec(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {:?}", spec.file))?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        log::info!(
+            "compiled '{name}' in {:.1} ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        let executable = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&executable));
+        Ok(executable)
+    }
+
+    /// Convenience: load + run in one call.
+    pub fn run(&self, name: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+        self.load(name)?.run(inputs)
+    }
+
+    /// Number of compiled artifacts currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: artifact manifest + lazy-compiling execution engine.
+//!
+//! This is the only module that touches the `xla` crate; everything above
+//! it works in plain `Tensor`s. Python never runs here — artifacts were
+//! AOT-lowered at build time by `python/compile/aot.py`.
+
+mod artifact;
+mod engine;
+
+pub use artifact::{ArtifactSpec, Manifest};
+pub use engine::{Engine, Executable};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$BAF_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("BAF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,220 @@
+//! Channel selection (paper §3.1): load the offline Eq. 2–3 ordering and
+//! expose the selection policies used by the E6 ablation.
+//!
+//! The correlation-greedy order is computed at build time in Python (on
+//! the L1 Pallas corr kernel) and shipped via `channel_stats.json`;
+//! selection at serving time is a static table lookup — zero request-path
+//! cost, exactly as the paper argues.
+
+use crate::json::{self, Value};
+use crate::util::SplitMix64;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Selection policies (E6 ablation: corr vs variance vs random).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's Eq. 2–3 correlation-greedy ordering.
+    Correlation,
+    /// Highest-variance channels first.
+    Variance,
+    /// Uniform random subset (seeded, for reproducibility).
+    Random(u64),
+    /// First C channels in index order (the trivial baseline).
+    FirstC,
+}
+
+impl Policy {
+    pub fn parse(name: &str) -> Result<Policy> {
+        Ok(match name {
+            "corr" | "correlation" => Policy::Correlation,
+            "var" | "variance" => Policy::Variance,
+            "first" => Policy::FirstC,
+            s if s.starts_with("random") => {
+                let seed = s.strip_prefix("random:").and_then(|v| v.parse().ok());
+                Policy::Random(seed.unwrap_or(1))
+            }
+            other => anyhow::bail!("unknown selection policy '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Correlation => "correlation".into(),
+            Policy::Variance => "variance".into(),
+            Policy::Random(s) => format!("random:{s}"),
+            Policy::FirstC => "first".into(),
+        }
+    }
+}
+
+/// Split-layer BN parameters (needed by diagnostics/tools; the inverse-BN
+/// itself is baked into the BaF artifacts).
+#[derive(Debug, Clone)]
+pub struct BnParams {
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+/// The offline channel statistics produced by `python/compile/stats.py`.
+#[derive(Debug, Clone)]
+pub struct ChannelStats {
+    pub p_channels: usize,
+    pub q_channels: usize,
+    /// Correlation-greedy order (take the first C).
+    pub order: Vec<usize>,
+    /// Per-channel total correlation scores (Eq. 3 objective).
+    pub rho_total: Vec<f64>,
+    /// Variance-descending order (ablation).
+    pub variance_order: Vec<usize>,
+    pub variance: Vec<f64>,
+    pub bn: BnParams,
+    pub z_min: f32,
+    pub z_max: f32,
+}
+
+impl ChannelStats {
+    /// Load `<dir>/channel_stats.json`.
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let v = json::from_file(&artifact_dir.join("channel_stats.json"))
+            .context("loading channel stats")?;
+        let vecf = |val: &Value, key: &str| -> Result<Vec<f64>> {
+            val.req(key)?.as_f64_vec().ok_or_else(|| anyhow!("bad {key}"))
+        };
+        let bn_obj = v.req("bn")?;
+        let bn_vec = |key: &str| -> Result<Vec<f32>> {
+            Ok(vecf(bn_obj, key)?.into_iter().map(|x| x as f32).collect())
+        };
+        Ok(ChannelStats {
+            p_channels: v.req("p_channels")?.as_usize().unwrap_or(0),
+            q_channels: v.req("q_channels")?.as_usize().unwrap_or(0),
+            order: v
+                .req("order")?
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("bad order"))?,
+            rho_total: vecf(&v, "rho_total")?,
+            variance_order: v
+                .req("variance_order")?
+                .as_usize_vec()
+                .ok_or_else(|| anyhow!("bad variance_order"))?,
+            variance: vecf(&v, "variance")?,
+            bn: BnParams {
+                gamma: bn_vec("gamma")?,
+                beta: bn_vec("beta")?,
+                mean: bn_vec("mean")?,
+                var: bn_vec("var")?,
+            },
+            z_min: v.req("z_min")?.as_f64().unwrap_or(0.0) as f32,
+            z_max: v.req("z_max")?.as_f64().unwrap_or(0.0) as f32,
+        })
+    }
+
+    /// The first C channels under a policy.
+    pub fn select(&self, policy: Policy, c: usize) -> Vec<usize> {
+        assert!(c <= self.p_channels, "C={c} > P={}", self.p_channels);
+        match policy {
+            Policy::Correlation => self.order[..c].to_vec(),
+            Policy::Variance => self.variance_order[..c].to_vec(),
+            Policy::FirstC => (0..c).collect(),
+            Policy::Random(seed) => {
+                let mut idx: Vec<usize> = (0..self.p_channels).collect();
+                let mut rng = SplitMix64::new(seed);
+                rng.shuffle(&mut idx);
+                idx.truncate(c);
+                idx
+            }
+        }
+    }
+
+    /// Sanity validation against a manifest's geometry.
+    pub fn validate(&self, p_channels: usize, q_channels: usize) -> Result<()> {
+        if self.p_channels != p_channels || self.q_channels != q_channels {
+            anyhow::bail!(
+                "channel stats geometry ({}, {}) != manifest ({}, {})",
+                self.p_channels,
+                self.q_channels,
+                p_channels,
+                q_channels
+            );
+        }
+        let mut seen = vec![false; self.p_channels];
+        for &ch in &self.order {
+            if ch >= self.p_channels || seen[ch] {
+                anyhow::bail!("order is not a permutation");
+            }
+            seen[ch] = true;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_stats() -> ChannelStats {
+        ChannelStats {
+            p_channels: 8,
+            q_channels: 4,
+            order: vec![3, 1, 7, 0, 2, 6, 5, 4],
+            rho_total: vec![0.5; 8],
+            variance_order: vec![0, 1, 2, 3, 4, 5, 6, 7],
+            variance: vec![1.0; 8],
+            bn: BnParams {
+                gamma: vec![1.0; 8],
+                beta: vec![0.0; 8],
+                mean: vec![0.0; 8],
+                var: vec![1.0; 8],
+            },
+            z_min: -1.0,
+            z_max: 1.0,
+        }
+    }
+
+    #[test]
+    fn policies_select_c_distinct_channels() {
+        let st = fake_stats();
+        for p in [
+            Policy::Correlation,
+            Policy::Variance,
+            Policy::FirstC,
+            Policy::Random(9),
+        ] {
+            let sel = st.select(p, 4);
+            assert_eq!(sel.len(), 4);
+            let mut s = sel.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 4, "{p:?} returned duplicates");
+        }
+        assert_eq!(st.select(Policy::Correlation, 3), vec![3, 1, 7]);
+        assert_eq!(st.select(Policy::FirstC, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn random_policy_is_seed_stable() {
+        let st = fake_stats();
+        assert_eq!(st.select(Policy::Random(5), 4), st.select(Policy::Random(5), 4));
+        assert_ne!(st.select(Policy::Random(5), 8), st.select(Policy::Random(6), 8));
+    }
+
+    #[test]
+    fn validate_checks_permutation() {
+        let mut st = fake_stats();
+        assert!(st.validate(8, 4).is_ok());
+        assert!(st.validate(16, 4).is_err());
+        st.order[0] = 1; // duplicate
+        assert!(st.validate(8, 4).is_err());
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for name in ["corr", "variance", "first", "random:7"] {
+            let p = Policy::parse(name).unwrap();
+            assert_eq!(Policy::parse(&p.name()).unwrap(), p);
+        }
+        assert!(Policy::parse("pca").is_err());
+    }
+}

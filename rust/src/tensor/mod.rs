@@ -1,0 +1,142 @@
+//! A small dense f32 tensor with the two layouts the pipeline uses.
+//!
+//! The runtime moves feature maps around in NHWC (what the JAX artifacts
+//! consume/produce) and the codec/quantizer work channel-major (CHW — one
+//! quantizer and one tile per channel, paper §3.2). This module owns the
+//! representation plus the handful of operations the hot path needs:
+//! channel gather/scatter, layout conversion, and per-channel statistics.
+
+mod ops;
+
+pub use ops::*;
+
+/// Dense row-major f32 tensor of arbitrary rank (rank <= 4 in practice).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Default for Tensor {
+    /// An empty rank-1 tensor (useful as a placeholder in parallel_map).
+    fn default() -> Self {
+        Tensor { shape: vec![0], data: Vec::new() }
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {:?} != data len {}", shape, data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {:?}", self.shape, shape);
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row-major linear index for a 3-D tensor.
+    #[inline]
+    pub fn idx3(&self, a: usize, b: usize, c: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 3);
+        (a * self.shape[1] + b) * self.shape[2] + c
+    }
+
+    #[inline]
+    pub fn at3(&self, a: usize, b: usize, c: usize) -> f32 {
+        self.data[self.idx3(a, b, c)]
+    }
+
+    /// Maximum absolute difference against another tensor of equal shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Mean squared error against another tensor of equal shape.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let s: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum();
+        s / self.data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let t = Tensor::from_vec(&[2, 3, 4], (0..24).map(|i| i as f32).collect());
+        assert_eq!(t.at3(1, 2, 3), 23.0);
+        assert_eq!(t.at3(0, 0, 0), 0.0);
+        assert_eq!(t.at3(1, 0, 0), 12.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor::from_vec(&[4], vec![0.0, 1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[4], vec![0.0, 1.5, 2.0, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+        assert!((a.mse(&b) - (0.25 + 1.0) / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[6], (0..6).map(|i| i as f32).collect());
+        let r = t.clone().reshape(&[2, 3]);
+        assert_eq!(r.shape(), &[2, 3]);
+        assert_eq!(r.data(), t.data());
+    }
+}

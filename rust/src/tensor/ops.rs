@@ -1,0 +1,187 @@
+//! Layout conversion, channel gather/scatter, per-channel statistics.
+
+use super::Tensor;
+
+/// HWC -> CHW (channel-major) conversion for one feature map.
+pub fn hwc_to_chw(t: &Tensor) -> Tensor {
+    let (h, w, c) = dims3(t);
+    let src = t.data();
+    let mut out = vec![0.0f32; src.len()];
+    for ch in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                out[(ch * h + y) * w + x] = src[(y * w + x) * c + ch];
+            }
+        }
+    }
+    Tensor::from_vec(&[c, h, w], out)
+}
+
+/// CHW -> HWC conversion.
+pub fn chw_to_hwc(t: &Tensor) -> Tensor {
+    let (c, h, w) = dims3(t);
+    let src = t.data();
+    let mut out = vec![0.0f32; src.len()];
+    for ch in 0..c {
+        for y in 0..h {
+            for x in 0..w {
+                out[(y * w + x) * c + ch] = src[(ch * h + y) * w + x];
+            }
+        }
+    }
+    Tensor::from_vec(&[h, w, c], out)
+}
+
+/// Gather a channel subset from an HWC map into CHW order.
+///
+/// This is the edge-side "select C of P channels" step (§3.1): output
+/// channel k is input channel `sel[k]`, laid out channel-major, ready for
+/// per-channel quantization and tiling.
+pub fn gather_channels_hwc_to_chw(t: &Tensor, sel: &[usize]) -> Tensor {
+    let (h, w, c) = dims3(t);
+    let src = t.data();
+    let mut out = vec![0.0f32; sel.len() * h * w];
+    for (k, &ch) in sel.iter().enumerate() {
+        assert!(ch < c, "channel {ch} out of range (C={c})");
+        let plane = &mut out[k * h * w..(k + 1) * h * w];
+        for y in 0..h {
+            for x in 0..w {
+                plane[y * w + x] = src[(y * w + x) * c + ch];
+            }
+        }
+    }
+    Tensor::from_vec(&[sel.len(), h, w], out)
+}
+
+/// Scatter CHW channel planes back into an HWC map at positions `sel`.
+///
+/// Cloud-side inverse of `gather_channels_hwc_to_chw`: used to overwrite
+/// the BaF-predicted transmitted channels with their consolidated values
+/// (Eq. 6) inside the full Z-tilde tensor.
+pub fn scatter_channels_chw_into_hwc(planes: &Tensor, sel: &[usize], dst: &mut Tensor) {
+    let (cs, h, w) = dims3(planes);
+    assert_eq!(cs, sel.len());
+    let (dh, dw, dc) = dims3(dst);
+    assert_eq!((dh, dw), (h, w), "spatial dims must match");
+    let src = planes.data();
+    let out = dst.data_mut();
+    for (k, &ch) in sel.iter().enumerate() {
+        assert!(ch < dc);
+        let plane = &src[k * h * w..(k + 1) * h * w];
+        for y in 0..h {
+            for x in 0..w {
+                out[(y * w + x) * dc + ch] = plane[y * w + x];
+            }
+        }
+    }
+}
+
+/// Per-channel (min, max) over a CHW tensor.
+pub fn channel_min_max(t: &Tensor) -> Vec<(f32, f32)> {
+    let (c, h, w) = dims3(t);
+    let mut out = Vec::with_capacity(c);
+    for ch in 0..c {
+        let plane = &t.data()[ch * h * w..(ch + 1) * h * w];
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in plane {
+            mn = mn.min(v);
+            mx = mx.max(v);
+        }
+        out.push((mn, mx));
+    }
+    out
+}
+
+/// Per-channel variance over a CHW tensor (selection ablation).
+pub fn channel_variance(t: &Tensor) -> Vec<f64> {
+    let (c, h, w) = dims3(t);
+    let n = (h * w) as f64;
+    (0..c)
+        .map(|ch| {
+            let plane = &t.data()[ch * h * w..(ch + 1) * h * w];
+            let mean: f64 = plane.iter().map(|&v| v as f64).sum::<f64>() / n;
+            plane.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n
+        })
+        .collect()
+}
+
+/// LeakyReLU with the detector's slope (sigma(.) of the paper).
+pub fn leaky_relu_inplace(t: &mut Tensor, slope: f32) {
+    for v in t.data_mut() {
+        if *v < 0.0 {
+            *v *= slope;
+        }
+    }
+}
+
+fn dims3(t: &Tensor) -> (usize, usize, usize) {
+    let s = t.shape();
+    assert_eq!(s.len(), 3, "expected rank-3 tensor, got {:?}", s);
+    (s[0], s[1], s[2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn random_hwc(h: usize, w: usize, c: usize, seed: u64) -> Tensor {
+        let mut r = SplitMix64::new(seed);
+        Tensor::from_vec(
+            &[h, w, c],
+            (0..h * w * c).map(|_| r.next_f32() * 4.0 - 2.0).collect(),
+        )
+    }
+
+    #[test]
+    fn layout_roundtrip() {
+        let t = random_hwc(5, 7, 3, 1);
+        let back = chw_to_hwc(&hwc_to_chw(&t));
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let t = random_hwc(4, 4, 8, 2);
+        let sel = vec![6, 1, 3];
+        let planes = gather_channels_hwc_to_chw(&t, &sel);
+        assert_eq!(planes.shape(), &[3, 4, 4]);
+        // gathered plane k equals channel sel[k]
+        for (k, &ch) in sel.iter().enumerate() {
+            for y in 0..4 {
+                for x in 0..4 {
+                    assert_eq!(planes.at3(k, y, x), t.at3(y, x, ch));
+                }
+            }
+        }
+        let mut dst = Tensor::zeros(&[4, 4, 8]);
+        scatter_channels_chw_into_hwc(&planes, &sel, &mut dst);
+        for &ch in &sel {
+            for y in 0..4 {
+                for x in 0..4 {
+                    assert_eq!(dst.at3(y, x, ch), t.at3(y, x, ch));
+                }
+            }
+        }
+        // untouched channels remain zero
+        assert_eq!(dst.at3(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn minmax_and_variance() {
+        let t = Tensor::from_vec(&[2, 1, 3], vec![1.0, 2.0, 3.0, -4.0, 0.0, 4.0]);
+        let mm = channel_min_max(&t);
+        assert_eq!(mm[0], (1.0, 3.0));
+        assert_eq!(mm[1], (-4.0, 4.0));
+        let var = channel_variance(&t);
+        assert!(var[1] > var[0]);
+    }
+
+    #[test]
+    fn leaky_relu_matches_definition() {
+        let mut t = Tensor::from_vec(&[1, 1, 4], vec![-2.0, -0.5, 0.0, 3.0]);
+        leaky_relu_inplace(&mut t, 0.1);
+        assert_eq!(t.data(), &[-0.2, -0.05, 0.0, 3.0]);
+    }
+}

@@ -1,0 +1,142 @@
+//! Channel tiling (paper §3.2): arrange C quantized channel planes into
+//! one rectangular "image" for compression by an image codec.
+//!
+//! With C a power of two, the tiled layout is
+//! `cols = 2^ceil(log2(C)/2)` channels across and `rows = 2^floor(...)`
+//! down (e.g. C=64 -> 8x8, C=32 -> 8x4, C=8 -> 4x2); channel k lands at
+//! tile (k / cols, k % cols), row-major. Non-power-of-two C is supported
+//! by padding with zero tiles (the paper always picks powers of two; we
+//! keep the general case for the ablation benches).
+
+use crate::quant::QuantizedTensor;
+
+/// A tiled single-plane image of u16 samples (bit depth <= 16).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TiledImage {
+    pub width: usize,
+    pub height: usize,
+    /// Samples, row-major, each < 2^n.
+    pub samples: Vec<u16>,
+    /// Bit depth of the samples.
+    pub n: u8,
+    /// Tile geometry (cols, rows) and per-tile size (w, h).
+    pub cols: usize,
+    pub rows: usize,
+    pub tile_w: usize,
+    pub tile_h: usize,
+    /// Number of real (non-padding) channels.
+    pub channels: usize,
+}
+
+/// Tile geometry per §3.2: cols = 2^ceil(log2 C / 2), rows = 2^floor(...).
+pub fn grid_for(c: usize) -> (usize, usize) {
+    assert!(c > 0);
+    let lg = (c as f64).log2().ceil() as u32; // exact for powers of two
+    let cols = 1usize << lg.div_ceil(2);
+    let rows = 1usize << (lg / 2);
+    debug_assert!(cols * rows >= c);
+    (cols, rows)
+}
+
+/// Arrange quantized channel planes into the tiled image.
+pub fn tile(q: &QuantizedTensor) -> TiledImage {
+    let (cols, rows) = grid_for(q.c);
+    let (tw, th) = (q.w, q.h);
+    let mut samples = vec![0u16; cols * tw * rows * th];
+    let width = cols * tw;
+    for ch in 0..q.c {
+        let (ty, tx) = (ch / cols, ch % cols);
+        let plane = q.plane(ch);
+        for y in 0..th {
+            let dst_row = (ty * th + y) * width + tx * tw;
+            samples[dst_row..dst_row + tw].copy_from_slice(&plane[y * tw..(y + 1) * tw]);
+        }
+    }
+    TiledImage {
+        width,
+        height: rows * th,
+        samples,
+        n: q.n,
+        cols,
+        rows,
+        tile_w: tw,
+        tile_h: th,
+        channels: q.c,
+    }
+}
+
+/// Inverse of `tile`: recover the C channel planes (bins only — ranges
+/// travel separately as container side info).
+pub fn untile(img: &TiledImage) -> Vec<u16> {
+    let mut bins = vec![0u16; img.channels * img.tile_h * img.tile_w];
+    for ch in 0..img.channels {
+        let (ty, tx) = (ch / img.cols, ch % img.cols);
+        for y in 0..img.tile_h {
+            let src_row = (ty * img.tile_h + y) * img.width + tx * img.tile_w;
+            let dst = ch * img.tile_h * img.tile_w + y * img.tile_w;
+            bins[dst..dst + img.tile_w]
+                .copy_from_slice(&img.samples[src_row..src_row + img.tile_w]);
+        }
+    }
+    bins
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, QuantizedTensor};
+    use crate::tensor::Tensor;
+    use crate::util::SplitMix64;
+
+    fn random_quant(c: usize, h: usize, w: usize, n: u8, seed: u64) -> QuantizedTensor {
+        let mut r = SplitMix64::new(seed);
+        let z = Tensor::from_vec(
+            &[c, h, w],
+            (0..c * h * w).map(|_| r.next_f32() * 4.0 - 2.0).collect(),
+        );
+        quantize(&z, n)
+    }
+
+    #[test]
+    fn grid_matches_paper_formula() {
+        assert_eq!(grid_for(8), (4, 2));
+        assert_eq!(grid_for(16), (4, 4));
+        assert_eq!(grid_for(32), (8, 4));
+        assert_eq!(grid_for(64), (8, 8));
+        assert_eq!(grid_for(128), (16, 8));
+        assert_eq!(grid_for(4), (2, 2));
+        assert_eq!(grid_for(1), (1, 1));
+    }
+
+    #[test]
+    fn tile_untile_roundtrip() {
+        for &c in &[4usize, 8, 16, 32, 64] {
+            let q = random_quant(c, 16, 16, 8, c as u64);
+            let img = tile(&q);
+            assert_eq!(img.width * img.height, (img.cols * img.rows) * 256);
+            assert_eq!(untile(&img), q.bins, "C={c}");
+        }
+    }
+
+    #[test]
+    fn tile_places_channel_zero_top_left() {
+        let q = random_quant(8, 4, 4, 6, 3);
+        let img = tile(&q);
+        for y in 0..4 {
+            for x in 0..4 {
+                assert_eq!(img.samples[y * img.width + x], q.plane(0)[y * 4 + x]);
+            }
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_pads_with_zeros() {
+        let q = random_quant(5, 4, 4, 4, 8);
+        let img = tile(&q);
+        assert_eq!((img.cols, img.rows), (4, 2));
+        assert_eq!(untile(&img).len(), 5 * 16);
+        // padding tiles are zero
+        let last = img.samples[(img.height - 1) * img.width + img.width - 1];
+        assert_eq!(last, 0);
+    }
+}

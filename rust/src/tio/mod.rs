@@ -1,0 +1,206 @@
+//! `.npy` (NumPy v1.0) reader/writer — the python⇄rust tensor interchange.
+//!
+//! Only what the golden files and tools need: little-endian `<f4` / `<i4`
+//! / `<i8`, C-order. Anything else is rejected loudly.
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Typed payload of an `.npy` file.
+#[derive(Debug, Clone)]
+pub enum Npy {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    I64 { shape: Vec<usize>, data: Vec<i64> },
+}
+
+impl Npy {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Npy::F32 { shape, .. } | Npy::I32 { shape, .. } | Npy::I64 { shape, .. } => shape,
+        }
+    }
+
+    pub fn into_tensor(self) -> Result<Tensor> {
+        match self {
+            Npy::F32 { shape, data } => Ok(Tensor::from_vec(&shape, data)),
+            _ => bail!("expected f32 npy"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<(Vec<usize>, Vec<i32>)> {
+        match self {
+            Npy::I32 { shape, data } => Ok((shape, data)),
+            _ => bail!("expected i32 npy"),
+        }
+    }
+}
+
+/// Read an `.npy` file.
+pub fn read(path: &Path) -> Result<Npy> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic[..6] != MAGIC {
+        bail!("{}: not an npy file", path.display());
+    }
+    let (major, _minor) = (magic[6], magic[7]);
+    let header_len = if major == 1 {
+        let mut b = [0u8; 2];
+        f.read_exact(&mut b)?;
+        u16::from_le_bytes(b) as usize
+    } else {
+        let mut b = [0u8; 4];
+        f.read_exact(&mut b)?;
+        u32::from_le_bytes(b) as usize
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8(header)?;
+
+    let descr = extract(&header, "'descr':")?;
+    let fortran = extract(&header, "'fortran_order':")?;
+    if fortran.trim_start().starts_with("True") {
+        bail!("{}: fortran order unsupported", path.display());
+    }
+    let shape = parse_shape(&header)?;
+    let count: usize = shape.iter().product();
+
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+
+    let descr = descr.trim().trim_matches(|c| c == '\'' || c == '"');
+    match descr {
+        "<f4" => {
+            ensure_len(&payload, count * 4, path)?;
+            let data = payload
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            Ok(Npy::F32 { shape, data })
+        }
+        "<i4" => {
+            ensure_len(&payload, count * 4, path)?;
+            let data = payload
+                .chunks_exact(4)
+                .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            Ok(Npy::I32 { shape, data })
+        }
+        "<i8" => {
+            ensure_len(&payload, count * 8, path)?;
+            let data = payload
+                .chunks_exact(8)
+                .map(|b| i64::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            Ok(Npy::I64 { shape, data })
+        }
+        other => bail!("{}: unsupported dtype {other}", path.display()),
+    }
+}
+
+/// Write an f32 tensor as `.npy` v1.0.
+pub fn write_f32(path: &Path, t: &Tensor) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let shape_str = match t.shape().len() {
+        1 => format!("({},)", t.shape()[0]),
+        _ => format!(
+            "({})",
+            t.shape().iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad so that magic(8) + len(2) + header is a multiple of 64
+    let unpadded = 8 + 2 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    f.write_all(MAGIC)?;
+    f.write_all(&[1, 0])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for v in t.data() {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn ensure_len(payload: &[u8], want: usize, path: &Path) -> Result<()> {
+    if payload.len() < want {
+        bail!("{}: truncated payload ({} < {want})", path.display(), payload.len());
+    }
+    Ok(())
+}
+
+fn extract<'a>(header: &'a str, key: &str) -> Result<&'a str> {
+    let start = header
+        .find(key)
+        .ok_or_else(|| anyhow!("npy header missing {key}"))?
+        + key.len();
+    let rest = &header[start..];
+    let end = rest.find(',').unwrap_or(rest.len());
+    Ok(&rest[..end])
+}
+
+fn parse_shape(header: &str) -> Result<Vec<usize>> {
+    let raw = header
+        .find("'shape':")
+        .ok_or_else(|| anyhow!("npy header missing shape"))?;
+    let rest = &header[raw + 8..];
+    let open = rest.find('(').ok_or_else(|| anyhow!("bad shape"))?;
+    let close = rest.find(')').ok_or_else(|| anyhow!("bad shape"))?;
+    let inner = &rest[open + 1..close];
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        out.push(p.parse::<usize>().map_err(|_| anyhow!("bad shape dim '{p}'"))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let dir = std::env::temp_dir().join("baf_tio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.npy");
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, -2.5, 3.0, 0.0, 1e-7, 6.0]);
+        write_f32(&path, &t).unwrap();
+        let back = read(&path).unwrap().into_tensor().unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_rank1_roundtrip() {
+        let dir = std::env::temp_dir().join("baf_tio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r1.npy");
+        let t = Tensor::from_vec(&[4], vec![9.0, 8.0, 7.0, 6.0]);
+        write_f32(&path, &t).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.shape(), &[4]);
+    }
+
+    #[test]
+    fn rejects_non_npy() {
+        let dir = std::env::temp_dir().join("baf_tio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.npy");
+        std::fs::write(&path, b"not numpy at all").unwrap();
+        assert!(read(&path).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! IEEE 754 binary16 conversion (the `half` crate is unavailable offline).
+//!
+//! Only what the pipeline needs: f32 -> f16 bits (round-to-nearest-even)
+//! and back. The quantizer side info (per-channel min/max, §3.2 of the
+//! paper) is transmitted as f16, so encoder and decoder must round
+//! identically — these routines match the hardware/numpy semantics, which
+//! is checked against numpy-produced goldens in `tests/golden.rs`.
+
+/// Convert f32 to IEEE binary16 bits with round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32;
+    let mut man = bits & 0x007f_ffff;
+
+    if exp == 255 {
+        // Inf / NaN
+        return if man == 0 {
+            sign | 0x7c00
+        } else {
+            sign | 0x7e00 // quiet NaN
+        };
+    }
+
+    exp -= 127; // unbias
+    if exp > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp >= -14 {
+        // normal f16
+        let mut m = man >> 13; // keep 10 bits
+        let rem = man & 0x1fff;
+        // round to nearest even
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut e = (exp + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            e += 1;
+            if e >= 31 {
+                return sign | 0x7c00;
+            }
+        }
+        return sign | ((e as u16) << 10) | m as u16;
+    }
+    // subnormal f16 (or underflow to zero)
+    if exp < -25 {
+        return sign; // too small -> +-0
+    }
+    man |= 0x0080_0000; // implicit leading 1
+    let shift = (-14 - exp) as u32 + 13;
+    let m = man >> shift;
+    let rem = man & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let mut m16 = m as u16;
+    if rem > half || (rem == half && (m16 & 1) == 1) {
+        m16 += 1; // may carry into the exponent — that is correct
+    }
+    sign | m16
+}
+
+/// Convert IEEE binary16 bits to f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // +-0
+        } else {
+            // subnormal: value = man * 2^-24; normalize so the implicit
+            // bit lands at 0x400 after k shifts -> biased f32 exp = 113-k
+            let mut m = man;
+            let mut k = 0u32;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                k += 1;
+            }
+            m &= 0x3ff;
+            sign | ((113 - k) << 23) | (m << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13) // inf / nan
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through f16 precision (what the side-info channel does).
+#[inline]
+pub fn round_via_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Clamp to the f16-representable range, then round (matches the Python
+/// side's `minmax_f16`, which clips to +-65504 before casting).
+#[inline]
+pub fn saturate_to_f16(x: f32) -> f32 {
+    round_via_f16(x.clamp(-65504.0, 65504.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(round_via_f16(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(0.5), 0x3800);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff);
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0);
+        // smallest positive subnormal
+        assert!((f16_bits_to_f32(0x0001) - 5.960_464_5e-8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and the next f16 (1 + 2^-10):
+        // ties-to-even keeps 1.0.
+        let x = 1.0 + f32::powi(2.0, -11);
+        assert_eq!(round_via_f16(x), 1.0);
+        // 1 + 3*2^-11 ties between (1+2^-10) and (1+2^-9): even -> 1+2^-9.
+        let y = 1.0 + 3.0 * f32::powi(2.0, -11);
+        assert_eq!(round_via_f16(y), 1.0 + f32::powi(2.0, -9));
+    }
+
+    #[test]
+    fn subnormal_roundtrip() {
+        for bits in [0x0001u16, 0x0155, 0x03ff, 0x8001, 0x83ff] {
+            let f = f16_bits_to_f32(bits);
+            assert_eq!(f32_to_f16_bits(f), bits, "bits {bits:#x}");
+        }
+    }
+
+    #[test]
+    fn overflow_saturates() {
+        assert_eq!(saturate_to_f16(1e9), 65504.0);
+        assert_eq!(saturate_to_f16(-1e9), -65504.0);
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00); // raw conversion -> inf
+    }
+
+    #[test]
+    fn monotone_on_grid() {
+        let mut prev = f16_bits_to_f32(0);
+        for bits in 1..0x7c00u16 {
+            let v = f16_bits_to_f32(bits);
+            assert!(v > prev, "bits {bits:#x}");
+            prev = v;
+        }
+    }
+}

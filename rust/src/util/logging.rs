@@ -1,0 +1,47 @@
+//! Minimal leveled stderr logger wired to the `log` crate facade.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+static LOGGER: StderrLogger = StderrLogger;
+static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERR",
+            Level::Warn => "WRN",
+            Level::Info => "INF",
+            Level::Debug => "DBG",
+            Level::Trace => "TRC",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger. Level comes from `BAF_LOG` (error|warn|info|debug|trace),
+/// defaulting to `info`. Safe to call more than once.
+pub fn init() {
+    let level = match std::env::var("BAF_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+    once_cell::sync::Lazy::force(&START);
+}

@@ -1,0 +1,11 @@
+//! Foundation utilities: PRNG, f16, timing, thread pool, logging.
+
+pub mod f16;
+pub mod logging;
+pub mod pool;
+pub mod prng;
+pub mod timer;
+
+pub use f16::{f16_bits_to_f32, f32_to_f16_bits, round_via_f16, saturate_to_f16};
+pub use prng::SplitMix64;
+pub use timer::{StageClock, Timer};

@@ -1,0 +1,115 @@
+//! A small fixed-size thread pool with scoped parallel-for.
+//!
+//! Rationale: rayon/tokio are unavailable offline; the coordinator's
+//! pipeline threads are long-lived and hand-rolled (see
+//! `coordinator::server`), but data-parallel loops (dataset generation,
+//! codec benchmarks, mAP evaluation over many images) want a simple
+//! `parallel_for` — this is it. Work is distributed in contiguous chunks;
+//! the closure must be `Sync` and output slots are disjoint, so no locks
+//! are taken on the hot path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Number of worker threads to use for data-parallel helpers.
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(i)` for every `i in 0..n` across `threads` OS threads.
+///
+/// Indices are claimed from a shared atomic in blocks of `chunk`, which
+/// keeps scheduling overhead negligible while still load-balancing uneven
+/// work (e.g. images with different shape counts).
+pub fn parallel_for<F>(n: usize, chunk: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = default_parallelism().min(n.max(1));
+    if threads <= 1 || n <= chunk {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = Arc::new(AtomicUsize::new(0));
+    let chunk = chunk.max(1);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = Arc::clone(&next);
+            let f = &f;
+            scope.spawn(move || loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + chunk).min(n) {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in order.
+pub fn parallel_map<T, F>(n: usize, chunk: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots = SyncSlice(out.as_mut_ptr());
+        let slots_ref = &slots; // capture the wrapper, not the raw field
+        parallel_for(n, chunk, move |i| {
+            // SAFETY: each index i is claimed by exactly one worker, and
+            // the vector outlives the scope inside parallel_for.
+            unsafe { slots_ref.write(i, f(i)) };
+        });
+    }
+    out
+}
+
+struct SyncSlice<T>(*mut T);
+
+impl<T> SyncSlice<T> {
+    /// SAFETY: caller guarantees exclusive access to slot `i` and that the
+    /// backing allocation outlives the call.
+    unsafe fn write(&self, i: usize, v: T) {
+        unsafe { *self.0.add(i) = v };
+    }
+}
+
+unsafe impl<T: Send> Sync for SyncSlice<T> {}
+unsafe impl<T: Send> Send for SyncSlice<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(1000, 7, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(257, 8, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+        let one = parallel_map(1, 4, |i| i + 5);
+        assert_eq!(one, vec![5]);
+    }
+}

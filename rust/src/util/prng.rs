@@ -1,0 +1,143 @@
+//! SplitMix64 — the cross-language deterministic PRNG (Rust twin).
+//!
+//! The specification lives in `python/compile/prng.py`; the two
+//! implementations are pinned against each other through
+//! `artifacts/golden/prng.json` (see `tests/golden.rs`).
+//!
+//! SplitMix64 is counter-based: draw `j` (0-indexed) of a stream seeded
+//! with `s` equals `mix(s + (j+1)*GAMMA)`, which lets NumPy generate the
+//! same stream vectorized while Rust walks it sequentially.
+
+pub const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+const MIX1: u64 = 0xBF58_476D_1CE4_E5B9;
+const MIX2: u64 = 0x94D0_49BB_1331_11EB;
+
+/// The SplitMix64 output function applied to a raw state value.
+#[inline]
+pub fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(MIX1);
+    z = (z ^ (z >> 27)).wrapping_mul(MIX2);
+    z ^ (z >> 31)
+}
+
+/// Sequential SplitMix64 stream.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GAMMA);
+        mix(self.state)
+    }
+
+    /// Uniform f32 in [0, 1) with 24 bits of precision.
+    ///
+    /// Contract: `(next_u64() >> 40) as f32 / 2^24` — identical to the
+    /// Python side's `to_f32`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [lo, hi). Panics if the range is empty.
+    #[inline]
+    pub fn next_range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi > lo, "next_range needs a non-empty range");
+        lo + (self.next_u64() % (hi - lo) as u64) as i64
+    }
+
+    /// Derive an independent stream.
+    pub fn fork(&mut self) -> SplitMix64 {
+        SplitMix64::new(self.next_u64())
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits (for workload generators that
+    /// do not need cross-language exactness, e.g. Poisson arrivals).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Exponentially distributed inter-arrival time with the given rate.
+    #[inline]
+    pub fn next_exp(&mut self, rate: f64) -> f64 {
+        let u = self.next_f64().max(1e-12);
+        -u.ln() / rate
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = (self.next_u64() % (i as u64 + 1)) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_based_equals_sequential() {
+        let mut seq = SplitMix64::new(12345);
+        for j in 0..100u64 {
+            let counter = mix(12345u64.wrapping_add((j + 1).wrapping_mul(GAMMA)));
+            assert_eq!(seq.next_u64(), counter, "draw {j}");
+        }
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let f = r.next_f32();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn range_bounds_inclusive_exclusive() {
+        let mut r = SplitMix64::new(9);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..10_000 {
+            let v = r.next_range(3, 7);
+            assert!((3..7).contains(&v));
+            seen_lo |= v == 3;
+            seen_hi |= v == 6;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(1);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn streams_differ_by_seed() {
+        let a: Vec<u64> = {
+            let mut r = SplitMix64::new(1);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = SplitMix64::new(2);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_ne!(a, b);
+    }
+}

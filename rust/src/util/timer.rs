@@ -1,0 +1,75 @@
+//! Lightweight timing helpers used by the coordinator and bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple scope timer: `let t = Timer::start(); ...; t.elapsed_ms()`.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    t0: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { t0: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.t0.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+/// Per-stage latency breakdown of one request through the pipeline.
+/// All values in microseconds; `record` accumulates named stages in order.
+#[derive(Debug, Clone, Default)]
+pub struct StageClock {
+    stages: Vec<(&'static str, f64)>,
+    last: Option<Instant>,
+}
+
+impl StageClock {
+    pub fn new() -> Self {
+        Self { stages: Vec::with_capacity(8), last: Some(Instant::now()) }
+    }
+
+    /// Close the current stage under `name` and start the next one.
+    pub fn lap(&mut self, name: &'static str) {
+        let now = Instant::now();
+        if let Some(prev) = self.last {
+            self.stages.push((name, now.duration_since(prev).as_secs_f64() * 1e6));
+        }
+        self.last = Some(now);
+    }
+
+    pub fn stages(&self) -> &[(&'static str, f64)] {
+        &self.stages
+    }
+
+    pub fn total_us(&self) -> f64 {
+        self.stages.iter().map(|(_, v)| v).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_clock_accumulates_in_order() {
+        let mut c = StageClock::new();
+        std::thread::sleep(Duration::from_millis(2));
+        c.lap("a");
+        c.lap("b");
+        assert_eq!(c.stages().len(), 2);
+        assert_eq!(c.stages()[0].0, "a");
+        assert!(c.stages()[0].1 >= 1000.0, "{:?}", c.stages());
+        assert!(c.total_us() >= c.stages()[0].1);
+    }
+}

@@ -1,0 +1,182 @@
+//! Property-based tests of the codec stack (hand-rolled generator loop;
+//! proptest is unavailable offline). Each property runs over hundreds of
+//! randomized cases seeded deterministically — failures print the seed.
+
+use baf::codec::{container, CodecKind, ImageMeta};
+use baf::quant::{consolidate, dequantize, quantize};
+use baf::tensor::Tensor;
+use baf::tile::{tile, untile};
+use baf::util::SplitMix64;
+
+fn random_tensor(r: &mut SplitMix64, c: usize, h: usize, w: usize) -> Tensor {
+    let scale = r.next_f32() * 10.0 + 0.1;
+    let offset = r.next_f32() * 20.0 - 10.0;
+    Tensor::from_vec(
+        &[c, h, w],
+        (0..c * h * w).map(|_| r.next_f32() * scale + offset).collect(),
+    )
+}
+
+/// PROPERTY: every lossless codec roundtrips every tensor exactly,
+/// through the full container, for all supported bit depths.
+#[test]
+fn prop_lossless_container_roundtrip() {
+    let mut r = SplitMix64::new(0xC0DEC);
+    for case in 0..150 {
+        let c = [1usize, 3, 4, 8, 16][(r.next_u64() % 5) as usize];
+        let h = [4usize, 8, 16][(r.next_u64() % 3) as usize];
+        let w = [4usize, 8, 16][(r.next_u64() % 3) as usize];
+        let n = [2u8, 3, 4, 6, 8, 10, 12][(r.next_u64() % 7) as usize];
+        let z = random_tensor(&mut r, c, h, w);
+        let q = quantize(&z, n);
+        for codec in [CodecKind::Tlc, CodecKind::PngLike, CodecKind::ZstdRaw] {
+            let frame = container::pack(&q, codec, 0);
+            let parsed = container::parse(&frame)
+                .unwrap_or_else(|e| panic!("case {case} {codec:?}: {e}"));
+            let back = container::unpack(&parsed);
+            assert_eq!(back.bins, q.bins, "case {case} {codec:?} n={n} c={c}");
+            assert_eq!(back.ranges, q.ranges, "case {case} {codec:?} ranges");
+            assert_eq!((back.c, back.h, back.w, back.n), (c, h, w, n));
+        }
+    }
+}
+
+/// PROPERTY: dequantization error is bounded by one quantizer step plus
+/// the f16 side-info rounding: the transmitted min/max are rounded to
+/// f16 (relative error up to 2^-11 of their magnitude), which both
+/// shifts the grid and can clamp edge values — exactly the error model
+/// the paper's Eq. 4/5 incurs with 16-bit side information.
+#[test]
+fn prop_quantization_error_bound() {
+    let mut r = SplitMix64::new(0x0E44);
+    for _ in 0..200 {
+        let n = [2u8, 4, 6, 8, 12][(r.next_u64() % 5) as usize];
+        let z = random_tensor(&mut r, 4, 8, 8);
+        let q = quantize(&z, n);
+        let zh = dequantize(&q);
+        for ch in 0..4 {
+            let rg = q.ranges[ch];
+            let step = rg.span() / q.levels() as f32;
+            let f16_err = (rg.min.abs() + rg.max.abs()) * 2f32.powi(-11);
+            let tol = step * 1.001 + 2.0 * f16_err + 1e-5;
+            for i in 0..64 {
+                let a = z.data()[ch * 64 + i];
+                let b = zh.data()[ch * 64 + i];
+                assert!((a - b).abs() <= tol, "n={n} ch={ch}: |{a}-{b}| > {tol}");
+            }
+        }
+    }
+}
+
+/// PROPERTY: consolidation output always lies within the decoded bin and
+/// never moves a prediction that was already inside it.
+#[test]
+fn prop_consolidation_invariants() {
+    let mut r = SplitMix64::new(0xEC6);
+    for _ in 0..200 {
+        let n = [2u8, 4, 8][(r.next_u64() % 3) as usize];
+        let z = random_tensor(&mut r, 3, 8, 8);
+        let q = quantize(&z, n);
+        // predictions = truth + noise
+        let mut zt = z.clone();
+        let noise = r.next_f32();
+        for v in zt.data_mut() {
+            *v += (r.next_f32() - 0.5) * noise * 2.0;
+        }
+        let cons = consolidate(&zt, &q);
+        let levels = q.levels() as f32;
+        for ch in 0..3 {
+            let rg = q.ranges[ch];
+            let span = rg.span();
+            if span <= 0.0 {
+                continue;
+            }
+            let step = span / levels;
+            for i in 0..64 {
+                let bin = q.plane(ch)[i] as f32;
+                let lo = rg.min + (bin - 0.5) * step;
+                let hi = rg.min + (bin + 0.5) * step;
+                let out = cons.data()[ch * 64 + i];
+                let pred = zt.data()[ch * 64 + i];
+                assert!(out >= lo - 1e-4 && out <= hi + 1e-4, "outside bin");
+                if pred >= lo && pred <= hi {
+                    assert_eq!(out, pred, "moved an in-bin prediction");
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: tiling is a bijection between channel planes and the tiled
+/// image for arbitrary (C, H, W).
+#[test]
+fn prop_tile_bijection() {
+    let mut r = SplitMix64::new(0x711E);
+    for _ in 0..100 {
+        let c = (r.next_u64() % 31 + 1) as usize;
+        let h = (r.next_u64() % 12 + 2) as usize;
+        let w = (r.next_u64() % 12 + 2) as usize;
+        let z = random_tensor(&mut r, c, h, w);
+        let q = quantize(&z, 6);
+        let img = tile(&q);
+        assert_eq!(untile(&img), q.bins, "c={c} h={h} w={w}");
+        assert!(img.cols * img.rows >= c);
+    }
+}
+
+/// PROPERTY: the lossy codec's distortion decreases monotonically as QP
+/// decreases (checked coarsely on random smooth fields).
+#[test]
+fn prop_lossy_distortion_monotone_in_qp() {
+    let mut r = SplitMix64::new(0x1055);
+    for _ in 0..20 {
+        let w = 32;
+        let h = 32;
+        let fx = r.next_f32() * 8.0 + 1.0;
+        let fy = r.next_f32() * 8.0 + 1.0;
+        let samples: Vec<u16> = (0..w * h)
+            .map(|i| {
+                let x = (i % w) as f32 / w as f32;
+                let y = (i / w) as f32 / h as f32;
+                (((x * fx).sin() * (y * fy).cos() * 0.4 + 0.5) * 255.0) as u16
+            })
+            .collect();
+        let meta = ImageMeta { width: w, height: h, n: 8 };
+        let mut prev_mse = -1.0f64;
+        for qp in [2u8, 14, 26, 38] {
+            let enc = CodecKind::Mic.encode_image(&samples, w, h, 8, qp);
+            let dec = CodecKind::Mic.decode_image(&enc, &meta, qp);
+            let mse: f64 = samples
+                .iter()
+                .zip(&dec)
+                .map(|(&a, &b)| {
+                    let d = a as f64 - b as f64;
+                    d * d
+                })
+                .sum::<f64>()
+                / samples.len() as f64;
+            assert!(
+                mse + 1e-9 >= prev_mse,
+                "distortion decreased with higher QP: {mse} < {prev_mse}"
+            );
+            prev_mse = mse;
+        }
+    }
+}
+
+/// PROPERTY: corrupting any single byte of a frame is detected (CRC) —
+/// the decoder never silently returns wrong tensor data.
+#[test]
+fn prop_corruption_detected() {
+    let mut r = SplitMix64::new(0xBADF);
+    let z = random_tensor(&mut r, 8, 8, 8);
+    let q = quantize(&z, 6);
+    let frame = container::pack(&q, CodecKind::Tlc, 0);
+    for _ in 0..100 {
+        let pos = (r.next_u64() % frame.len() as u64) as usize;
+        let bit = 1u8 << (r.next_u64() % 8);
+        let mut bad = frame.clone();
+        bad[pos] ^= bit;
+        assert!(container::parse(&bad).is_err(), "flip at {pos} undetected");
+    }
+}

@@ -1,0 +1,41 @@
+//! Cross-language golden integration tests.
+//!
+//! These require `make artifacts` to have run; they are skipped (with a
+//! loud message) when the artifact directory is missing so that pure-Rust
+//! CI can still run `cargo test`.
+
+use std::path::PathBuf;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = baf::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+#[test]
+fn prng_matches_python() {
+    let Some(dir) = artifact_dir() else { return };
+    baf::golden::verify_prng(&dir.join("golden")).unwrap();
+}
+
+#[test]
+fn dataset_matches_python_bit_exactly() {
+    let Some(dir) = artifact_dir() else { return };
+    baf::golden::verify_dataset(&dir.join("golden")).unwrap();
+}
+
+#[test]
+fn quantizer_matches_jnp_oracle() {
+    let Some(dir) = artifact_dir() else { return };
+    baf::golden::verify_quant(&dir.join("golden")).unwrap();
+}
+
+#[test]
+fn pjrt_pipeline_matches_jax() {
+    let Some(dir) = artifact_dir() else { return };
+    baf::golden::verify_pipeline(&dir).unwrap();
+}

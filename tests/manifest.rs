@@ -1,0 +1,73 @@
+//! Manifest parsing against a synthetic artifact directory (no PJRT).
+
+use baf::runtime::Manifest;
+
+fn write_fixture(dir: &std::path::Path) {
+    std::fs::create_dir_all(dir).unwrap();
+    let manifest = r#"{
+        "version": 1,
+        "image_size": 64, "grid": 8, "cell": 8,
+        "anchors": [[16, 16], [40, 40]],
+        "num_classes": 4, "head_channels": 18,
+        "p_channels": 64, "q_channels": 32,
+        "z_shape": [16, 16, 64],
+        "leaky_slope": 0.1,
+        "artifacts": {
+            "frontend_b1": {
+                "file": "frontend_b1.hlo.txt",
+                "inputs": [[1, 64, 64, 3]],
+                "output": [1, 16, 16, 64],
+                "stage": "frontend", "batch": 1
+            },
+            "baf_c16_n8_b1": {
+                "file": "baf_c16_n8_b1.hlo.txt",
+                "inputs": [[1, 16, 16, 16]],
+                "output": [1, 16, 16, 64],
+                "stage": "baf", "c": 16, "n": 8, "batch": 1,
+                "sel": [3, 38, 31, 29, 26, 57, 39, 34, 35, 2, 50, 15, 63, 0, 52, 60]
+            },
+            "baf_c4_n8_b1": {
+                "file": "baf_c4_n8_b1.hlo.txt",
+                "inputs": [[1, 16, 16, 4]],
+                "output": [1, 16, 16, 64],
+                "stage": "baf", "c": 4, "n": 8, "batch": 1,
+                "sel": [3, 38, 31, 29]
+            }
+        }
+    }"#;
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+}
+
+#[test]
+fn parses_geometry_and_specs() {
+    let dir = std::env::temp_dir().join("baf_manifest_fixture");
+    write_fixture(&dir);
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.image_size, 64);
+    assert_eq!(m.anchors, vec![(16.0, 16.0), (40.0, 40.0)]);
+    assert_eq!(m.z_shape, (16, 16, 64));
+    let spec = m.spec("baf_c16_n8_b1").unwrap();
+    assert_eq!(spec.c, Some(16));
+    assert_eq!(spec.n, Some(8));
+    assert_eq!(spec.inputs, vec![vec![1, 16, 16, 16]]);
+    assert_eq!(spec.sel.as_ref().unwrap().len(), 16);
+    assert!(m.spec("nonexistent").is_err());
+}
+
+#[test]
+fn baf_variants_sorted() {
+    let dir = std::env::temp_dir().join("baf_manifest_fixture2");
+    write_fixture(&dir);
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.baf_variants(), vec![(4, 8), (16, 8)]);
+    assert_eq!(Manifest::baf_name(16, 8, 1), "baf_c16_n8_b1");
+}
+
+#[test]
+fn missing_manifest_is_a_clear_error() {
+    let dir = std::env::temp_dir().join("baf_manifest_missing");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"));
+}

@@ -1,0 +1,176 @@
+//! End-to-end integration tests over the PJRT runtime (require artifacts;
+//! skipped with a message otherwise).
+
+use baf::codec::CodecKind;
+use baf::config::{PipelineConfig, ServerConfig};
+use baf::coordinator::{run_server, CloudOnly, Pipeline};
+use baf::runtime::Engine;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = baf::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+fn cfg(dir: &PathBuf, c: usize, n: u8) -> PipelineConfig {
+    PipelineConfig { artifact_dir: dir.clone(), c, n, ..Default::default() }
+}
+
+/// Transmitting ALL channels at n=8 must recover cloud-only accuracy
+/// almost exactly (quantization at 8 bits is near-lossless).
+#[test]
+fn full_channels_recover_cloud_only() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Rc::new(Engine::new(&dir).unwrap());
+    let samples = baf::data::eval_set(24);
+    let base = CloudOnly::new(Rc::clone(&engine)).evaluate_set(&samples).unwrap();
+    let pipe = Pipeline::new(Rc::clone(&engine), cfg(&dir, 64, 8)).unwrap();
+    let (map, _) = pipe.evaluate_set(&samples).unwrap();
+    assert!(
+        (map.map_50 - base.map_50).abs() < 0.03,
+        "C=P mAP {} vs cloud-only {}",
+        map.map_50,
+        base.map_50
+    );
+}
+
+/// Fewer channels must not cost nothing: rate decreases with C, and the
+/// pipeline stays functional down to C=4.
+#[test]
+fn rate_scales_with_c() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Rc::new(Engine::new(&dir).unwrap());
+    let samples = baf::data::eval_set(6);
+    let mut prev_rate = f64::INFINITY;
+    for &c in &[64usize, 16, 4] {
+        let pipe = Pipeline::new(Rc::clone(&engine), cfg(&dir, c, 8)).unwrap();
+        let (_, rate) = pipe.evaluate_set(&samples).unwrap();
+        assert!(rate < prev_rate, "rate {rate} at C={c} not below {prev_rate}");
+        prev_rate = rate;
+    }
+}
+
+/// Rate decreases with n at fixed C (the FLIF property end to end).
+#[test]
+fn rate_scales_with_n() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Rc::new(Engine::new(&dir).unwrap());
+    let samples = baf::data::eval_set(6);
+    let mut prev_rate = f64::INFINITY;
+    for &n in &[8u8, 5, 2] {
+        let pipe = Pipeline::new(Rc::clone(&engine), cfg(&dir, 16, n)).unwrap();
+        let (_, rate) = pipe.evaluate_set(&samples).unwrap();
+        assert!(rate < prev_rate, "rate {rate} at n={n} not below {prev_rate}");
+        prev_rate = rate;
+    }
+}
+
+/// The lossy codec path works end to end and costs fewer bits than
+/// lossless at the same n.
+#[test]
+fn lossy_path_works_and_saves_bits() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Rc::new(Engine::new(&dir).unwrap());
+    let samples = baf::data::eval_set(6);
+    let lossless = Pipeline::new(Rc::clone(&engine), cfg(&dir, 16, 6)).unwrap();
+    let (_, rate_ll) = lossless.evaluate_set(&samples).unwrap();
+    // an aggressive-enough QP must undercut the (efficient) lossless rate
+    let mut c = cfg(&dir, 16, 6);
+    c.codec = CodecKind::Mic;
+    c.qp = 30;
+    let lossy = Pipeline::new(Rc::clone(&engine), c).unwrap();
+    let (map, rate_l) = lossy.evaluate_set(&samples).unwrap();
+    assert!(rate_l < rate_ll, "lossy {rate_l} >= lossless {rate_ll}");
+    assert!(map.map_50 > 0.1, "lossy path collapsed: mAP {}", map.map_50);
+}
+
+/// Consolidation (Eq. 6) must reduce the reconstruction error of the
+/// transmitted channels relative to the ground-truth Z.
+#[test]
+fn consolidation_reduces_transmitted_channel_error() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Rc::new(Engine::new(&dir).unwrap());
+    let sample = baf::data::eval_set(1).remove(0);
+    let on = Pipeline::new(Rc::clone(&engine), cfg(&dir, 16, 8)).unwrap();
+    let mut c_off = cfg(&dir, 16, 8);
+    c_off.consolidate = false;
+    let off = Pipeline::new(Rc::clone(&engine), c_off).unwrap();
+
+    // ground-truth Z from the edge
+    let (_, et) = on.edge.process(&sample.image).unwrap();
+    let sel = on.edge.sel.clone();
+    let truth = baf::tensor::gather_channels_hwc_to_chw(&et.z, &sel);
+
+    let frame_on = on.edge.process(&sample.image).unwrap().0;
+    let (_, ct_on) = on.cloud.process(&frame_on).unwrap();
+    let (_, ct_off) = off.cloud.process(&frame_on).unwrap();
+    let err_on = baf::tensor::gather_channels_hwc_to_chw(&ct_on.z_tilde, &sel).mse(&truth);
+    let err_off = baf::tensor::gather_channels_hwc_to_chw(&ct_off.z_tilde, &sel).mse(&truth);
+    assert!(
+        err_on < err_off,
+        "Eq.6 should reduce transmitted-channel MSE: {err_on} vs {err_off}"
+    );
+}
+
+/// Frames produced by the edge are self-describing: a cloud configured
+/// identically decodes them; a mismatched C is rejected loudly.
+#[test]
+fn frame_geometry_checked() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Rc::new(Engine::new(&dir).unwrap());
+    let sample = baf::data::eval_set(1).remove(0);
+    let p16 = Pipeline::new(Rc::clone(&engine), cfg(&dir, 16, 8)).unwrap();
+    let p8 = Pipeline::new(Rc::clone(&engine), cfg(&dir, 8, 8)).unwrap();
+    let (frame, _) = p16.edge.process(&sample.image).unwrap();
+    assert!(p16.cloud.process(&frame).is_ok());
+    assert!(p8.cloud.process(&frame).is_err(), "C mismatch must be rejected");
+}
+
+/// The multithreaded server completes all requests and reports sane
+/// latency percentiles, with and without batching.
+#[test]
+fn server_smoke() {
+    let Some(dir) = artifact_dir() else { return };
+    for cap in [1usize, 8] {
+        let pcfg = PipelineConfig { artifact_dir: dir.clone(), ..Default::default() };
+        let scfg = ServerConfig {
+            batch_cap: cap,
+            batch_deadline_us: 1000,
+            arrival_rate: 400.0,
+            num_requests: 32,
+            decode_workers: 2,
+            queue_depth: 16,
+            burst_factor: 1.0,
+        };
+        let report = run_server(&pcfg, &scfg).unwrap();
+        assert_eq!(report.requests, 32);
+        assert!(report.throughput_rps > 1.0);
+        let e2e = report.metrics.get("latencies").unwrap().get("5_e2e").unwrap();
+        assert_eq!(e2e.get("count").unwrap().as_usize(), Some(32));
+        assert!(e2e.get("p95_us").unwrap().as_f64().unwrap() > 0.0);
+    }
+}
+
+/// Different selection policies change the transmitted set but the
+/// beta-fill reconstruction path stays functional for all of them.
+#[test]
+fn selection_policies_functional() {
+    let Some(dir) = artifact_dir() else { return };
+    let ctx = baf::experiments::Context::open(&dir, 4).unwrap();
+    for p in [
+        baf::selection::Policy::Correlation,
+        baf::selection::Policy::Variance,
+        baf::selection::Policy::FirstC,
+        baf::selection::Policy::Random(3),
+    ] {
+        let (map, bytes) = ctx.beta_fill(p, 16, 8).unwrap();
+        assert!(bytes > 0.0);
+        assert!((0.0..=1.0).contains(&map));
+    }
+}
