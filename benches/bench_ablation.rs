@@ -9,6 +9,9 @@
 //!
 //! Run: `cargo bench --bench bench_ablation`.
 
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use baf::bench::{fmt_stats, time_fn};
 use baf::codec::CodecKind;
 use baf::experiments::Context;

@@ -5,6 +5,9 @@
 //!
 //! Run: `cargo bench --bench bench_codec`.
 
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use baf::bench::{fmt_stats, time_fn};
 use baf::codec::{CodecKind, ImageMeta};
 use baf::experiments::{codec_table, codec_table_fmt, Context};
@@ -75,7 +78,7 @@ fn main() -> anyhow::Result<()> {
             let meta = ImageMeta { width: w, height: h, n };
             let sd = time_fn(
                 || {
-                    std::hint::black_box(codec.decode_image(&enc, &meta, 0));
+                    std::hint::black_box(codec.decode_image(&enc, &meta, 0).unwrap());
                 },
                 3,
                 20,

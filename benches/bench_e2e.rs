@@ -6,6 +6,9 @@
 //!
 //! Run: `cargo bench --bench bench_e2e`.
 
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use baf::config::{PipelineConfig, ServerConfig};
 use baf::coordinator::run_server;
 
@@ -30,6 +33,7 @@ fn main() -> anyhow::Result<()> {
             decode_workers: 2,
             queue_depth: 64,
             burst_factor: 1.0,
+            corrupt_rate: 0.0,
         };
         let r = run_server(&pcfg, &scfg)?;
         let lat = r.metrics.get("latencies").unwrap();
@@ -55,6 +59,7 @@ fn main() -> anyhow::Result<()> {
             decode_workers: 2,
             queue_depth: 64,
             burst_factor: 1.0,
+            corrupt_rate: 0.0,
         };
         let r = run_server(&pcfg, &scfg)?;
         let lat = r.metrics.get("latencies").unwrap();
@@ -79,6 +84,7 @@ fn main() -> anyhow::Result<()> {
             decode_workers: 2,
             queue_depth: 64,
             burst_factor: bf,
+            corrupt_rate: 0.0,
         };
         let r = run_server(&pcfg, &scfg)?;
         let lat = r.metrics.get("latencies").unwrap();
@@ -101,6 +107,7 @@ fn main() -> anyhow::Result<()> {
         decode_workers: 2,
         queue_depth: 64,
         burst_factor: 1.0,
+            corrupt_rate: 0.0,
     };
     let r = run_server(&pcfg, &scfg)?;
     println!("{}", r.table);

@@ -7,6 +7,9 @@
 //! Run: `cargo bench --bench bench_fig3` (BAF_EVAL_IMAGES overrides the
 //! eval-set size; BAF_ARTIFACTS overrides the artifact dir).
 
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use baf::experiments::{fig3, fig3_table, Context, DEFAULT_EVAL_IMAGES};
 
 fn main() -> anyhow::Result<()> {

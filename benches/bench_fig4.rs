@@ -9,6 +9,9 @@
 //!
 //! Run: `cargo bench --bench bench_fig4`.
 
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use baf::experiments::{fig4, fig4_json, fig4_table, Context, DEFAULT_EVAL_IMAGES};
 
 fn main() -> anyhow::Result<()> {

@@ -5,6 +5,9 @@
 //!
 //! Run: `cargo run --release --example codec_tool`
 
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use baf::codec::{container, CodecKind};
 use baf::quant::quantize;
 use baf::runtime::Engine;
@@ -46,7 +49,7 @@ fn main() -> anyhow::Result<()> {
             for codec in [CodecKind::Tlc, CodecKind::PngLike, CodecKind::ZstdRaw] {
                 let frame = container::pack(&q, codec, 0);
                 // verify roundtrip through the container
-                let back = container::unpack(&container::parse(&frame)?);
+                let back = container::unpack(&container::parse(&frame)?)?;
                 assert_eq!(back.bins, q.bins, "{} corrupted data", codec.name());
                 row.push_str(&format!(" {} |", frame.len()));
             }

@@ -11,6 +11,9 @@
 //!
 //! Run: `cargo run --release --example collaborative_pipeline [-- images N]`
 
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use baf::codec::CodecKind;
 use baf::config::PipelineConfig;
 use baf::coordinator::{CloudOnly, Pipeline};

@@ -4,6 +4,9 @@
 //!
 //! Run: `cargo run --release --example edge_cloud_serving`
 
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use baf::config::{PipelineConfig, ServerConfig};
 use baf::coordinator::run_server;
 
@@ -20,6 +23,7 @@ fn main() -> anyhow::Result<()> {
             decode_workers: 2,
             queue_depth: 64,
             burst_factor: 1.0,
+            corrupt_rate: 0.0,
         };
         println!("=== {label}: {} requests @ {}/s ===", scfg.num_requests, scfg.arrival_rate);
         let report = run_server(&pcfg, &scfg)?;

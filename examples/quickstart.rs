@@ -7,6 +7,9 @@
 //! Run: `cargo run --release --example quickstart`
 //! (requires `make artifacts` to have produced ./artifacts)
 
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use baf::config::PipelineConfig;
 use baf::coordinator::Pipeline;
 use baf::data;

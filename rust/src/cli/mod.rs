@@ -30,8 +30,8 @@ impl Args {
             if let Some(name) = arg.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    out.options.insert(name.to_string(), it.next().unwrap().clone());
+                } else if let Some(value) = it.next_if(|n| !n.starts_with("--")) {
+                    out.options.insert(name.to_string(), value.clone());
                 } else {
                     out.flags.push(name.to_string());
                 }
@@ -78,6 +78,8 @@ impl Args {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     fn argv(s: &str) -> Vec<String> {

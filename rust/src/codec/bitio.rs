@@ -1,5 +1,11 @@
 //! Plain MSB-first bit I/O (used by tests and the container; the entropy
 //! coders use the range coder in `rc.rs` instead).
+//!
+//! The reader keeps zero-padding semantics past the end of the buffer
+//! (writers pad the final byte with zeros, so decoders must tolerate a
+//! few phantom zero bits) but records the fact via [`BitReader::past_end`]
+//! so callers can distinguish a clean tail from a truncated stream and
+//! return [`crate::codec::Error::Truncated`].
 
 /// MSB-first bit writer.
 #[derive(Debug, Default)]
@@ -54,18 +60,26 @@ pub struct BitReader<'a> {
     pos: usize,
     cur: u8,
     nbits: u8,
+    past_end: bool,
 }
 
 impl<'a> BitReader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        Self { buf, pos: 0, cur: 0, nbits: 0 }
+        Self { buf, pos: 0, cur: 0, nbits: 0, past_end: false }
     }
 
-    /// Read one bit; returns false past the end (zero padding semantics).
+    /// Read one bit; returns false past the end (zero padding semantics)
+    /// and latches [`Self::past_end`].
     #[inline]
     pub fn get_bit(&mut self) -> bool {
         if self.nbits == 0 {
-            self.cur = self.buf.get(self.pos).copied().unwrap_or(0);
+            match self.buf.get(self.pos) {
+                Some(&b) => self.cur = b,
+                None => {
+                    self.cur = 0;
+                    self.past_end = true;
+                }
+            }
             self.pos += 1;
             self.nbits = 8;
         }
@@ -79,6 +93,24 @@ impl<'a> BitReader<'a> {
             v = (v << 1) | self.get_bit() as u32;
         }
         v
+    }
+
+    /// True once any read has consumed a byte beyond the buffer. A valid
+    /// stream never trips this: writers emit whole (zero-padded) bytes,
+    /// so every real bit lives inside the buffer.
+    #[inline]
+    pub fn past_end(&self) -> bool {
+        self.past_end
+    }
+
+    /// Byte offset the reader has fetched up to (may exceed `byte_len`
+    /// once past the end).
+    pub fn byte_pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.buf.len()
     }
 }
 
@@ -104,6 +136,7 @@ mod tests {
         for &(v, n) in &values {
             assert_eq!(rd.get_bits(n), v);
         }
+        assert!(!rd.past_end(), "valid stream must not read past end");
     }
 
     #[test]
@@ -120,6 +153,8 @@ mod tests {
     fn reading_past_end_returns_zero() {
         let mut rd = BitReader::new(&[0xff]);
         assert_eq!(rd.get_bits(8), 0xff);
+        assert!(!rd.past_end());
         assert_eq!(rd.get_bits(8), 0);
+        assert!(rd.past_end(), "overrun must be latched");
     }
 }

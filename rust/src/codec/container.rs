@@ -21,15 +21,14 @@
 //! ..     4     CRC32 over everything above
 //! ```
 
-use super::{CodecKind, ImageMeta};
+use super::{CodecKind, Error, ImageMeta, Result, MAX_DECODED_SAMPLES};
 use crate::quant::{ChannelRange, QuantizedTensor};
 use crate::tile::{tile, untile, TiledImage};
 use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
-use anyhow::{bail, Result};
 
 pub const MAGIC: &[u8; 4] = b"BAFT";
 pub const VERSION: u8 = 1;
-const HEADER_LEN: usize = 22;
+pub const HEADER_LEN: usize = 22;
 
 /// A decoded frame header + payload view.
 #[derive(Debug, Clone)]
@@ -88,28 +87,46 @@ pub fn pack(q: &QuantizedTensor, codec: CodecKind, qp: u8) -> Vec<u8> {
     out
 }
 
-/// Parse and CRC-check a frame.
+/// Parse, validate, and CRC-check a frame.
+///
+/// Total: every field is validated before it drives an allocation or an
+/// index — short input is [`Error::Truncated`], bad magic / CRC /
+/// geometry is [`Error::Corrupt`], future versions and unknown codec ids
+/// are [`Error::Unsupported`], and a header whose geometry implies more
+/// than [`MAX_DECODED_SAMPLES`] is [`Error::LimitExceeded`].
 pub fn parse(bytes: &[u8]) -> Result<Frame> {
     if bytes.len() < HEADER_LEN + 4 {
-        bail!("frame too short ({} bytes)", bytes.len());
+        return Err(Error::Truncated {
+            what: "container frame",
+            needed: HEADER_LEN + 4,
+            got: bytes.len(),
+        });
     }
     let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
-    let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let want = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
     let got = crc32fast::hash(body);
     if want != got {
-        bail!("CRC mismatch: stored {want:#010x}, computed {got:#010x}");
+        return Err(Error::Corrupt(format!(
+            "CRC mismatch: stored {want:#010x}, computed {got:#010x}"
+        )));
     }
     if &body[0..4] != MAGIC {
-        bail!("bad magic");
+        return Err(Error::Corrupt(format!(
+            "bad magic {:02x?} (want {MAGIC:02x?})",
+            &body[0..4]
+        )));
     }
     if body[4] != VERSION {
-        bail!("unsupported version {}", body[4]);
+        return Err(Error::Unsupported(format!(
+            "container version {} (this build reads {VERSION})",
+            body[4]
+        )));
     }
     let codec = CodecKind::from_u8(body[5])?;
     let n = body[6];
     let qp = body[7];
-    if !(2..=16).contains(&n) {
-        bail!("bad bit depth {n}");
+    if !(1..=16).contains(&n) {
+        return Err(Error::Corrupt(format!("bit depth {n} outside 1..=16")));
     }
     let rd16 = |off: usize| u16::from_le_bytes([body[off], body[off + 1]]) as usize;
     let channels = rd16(8);
@@ -119,16 +136,40 @@ pub fn parse(bytes: &[u8]) -> Result<Frame> {
     let rows = rd16(16);
     let payload_len =
         u32::from_le_bytes([body[18], body[19], body[20], body[21]]) as usize;
-    if channels == 0 || cols * rows < channels {
-        bail!("inconsistent geometry: C={channels}, grid {cols}x{rows}");
+    if channels == 0 || tile_w == 0 || tile_h == 0 || cols == 0 || rows == 0 {
+        return Err(Error::Corrupt(format!(
+            "zero dimension: C={channels} tile {tile_w}x{tile_h} grid {cols}x{rows}"
+        )));
+    }
+    if cols * rows < channels {
+        return Err(Error::Corrupt(format!(
+            "inconsistent geometry: C={channels} > grid {cols}x{rows}"
+        )));
+    }
+    // all five fields are u16, so this product fits in u64 with room to
+    // spare; cap it before any decoder sizes a buffer from it
+    let total_samples = (cols * tile_w) as u64 * (rows * tile_h) as u64;
+    if total_samples > MAX_DECODED_SAMPLES as u64 {
+        return Err(Error::LimitExceeded {
+            what: "frame samples",
+            requested: total_samples as usize,
+            limit: MAX_DECODED_SAMPLES,
+        });
     }
     let side_len = 4 * channels;
-    if body.len() != HEADER_LEN + side_len + payload_len {
-        bail!(
-            "length mismatch: header says {} body is {}",
-            HEADER_LEN + side_len + payload_len,
+    let expect = HEADER_LEN + side_len + payload_len;
+    if body.len() < expect {
+        return Err(Error::Truncated {
+            what: "container body",
+            needed: expect,
+            got: body.len(),
+        });
+    }
+    if body.len() > expect {
+        return Err(Error::Corrupt(format!(
+            "length mismatch: header says {expect}, body is {}",
             body.len()
-        );
+        )));
     }
     let mut ranges = Vec::with_capacity(channels);
     for ch in 0..channels {
@@ -136,7 +177,7 @@ pub fn parse(bytes: &[u8]) -> Result<Frame> {
         let min = f16_bits_to_f32(u16::from_le_bytes([body[off], body[off + 1]]));
         let max = f16_bits_to_f32(u16::from_le_bytes([body[off + 2], body[off + 3]]));
         if !(min.is_finite() && max.is_finite()) || max < min {
-            bail!("bad channel range [{min}, {max}]");
+            return Err(Error::Corrupt(format!("bad channel range [{min}, {max}]")));
         }
         ranges.push(ChannelRange { min, max });
     }
@@ -144,26 +185,27 @@ pub fn parse(bytes: &[u8]) -> Result<Frame> {
     Ok(Frame { codec, n, qp, channels, tile_w, tile_h, cols, rows, ranges, payload })
 }
 
-/// Decode a parsed frame back to a `QuantizedTensor`.
-pub fn unpack(frame: &Frame) -> QuantizedTensor {
+/// Decode a parsed frame back to a `QuantizedTensor`. Total: decode
+/// failures in the payload codec propagate as typed errors.
+pub fn unpack(frame: &Frame) -> Result<QuantizedTensor> {
     let meta = frame.image_meta();
     if frame.codec == CodecKind::TlcIc {
-        return QuantizedTensor {
+        return Ok(QuantizedTensor {
             bins: super::tlc_ic::decode_planes(
                 &frame.payload,
                 frame.channels,
                 frame.tile_h,
                 frame.tile_w,
                 frame.n,
-            ),
+            )?,
             c: frame.channels,
             h: frame.tile_h,
             w: frame.tile_w,
             n: frame.n,
             ranges: frame.ranges.clone(),
-        };
+        });
     }
-    let samples = frame.codec.decode_image(&frame.payload, &meta, frame.qp);
+    let samples = frame.codec.decode_image(&frame.payload, &meta, frame.qp)?;
     let img = TiledImage {
         width: meta.width,
         height: meta.height,
@@ -175,18 +217,33 @@ pub fn unpack(frame: &Frame) -> QuantizedTensor {
         tile_h: frame.tile_h,
         channels: frame.channels,
     };
-    QuantizedTensor {
+    Ok(QuantizedTensor {
         bins: untile(&img),
         c: frame.channels,
         h: frame.tile_h,
         w: frame.tile_w,
         n: frame.n,
         ranges: frame.ranges.clone(),
+    })
+}
+
+/// Recompute the trailing CRC32 of a (possibly mutated) frame in place.
+/// Used by the fault-injection harness to exercise header validation
+/// behind the checksum; a frame shorter than the CRC field is returned
+/// unchanged.
+pub fn refresh_crc(frame: &mut [u8]) {
+    if frame.len() < 4 {
+        return;
     }
+    let body_len = frame.len() - 4;
+    let crc = crc32fast::hash(&frame[..body_len]);
+    frame[body_len..].copy_from_slice(&crc.to_le_bytes());
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::quant::quantize;
     use crate::tensor::Tensor;
@@ -214,7 +271,7 @@ mod tests {
             let frame = parse(&bytes).unwrap();
             assert_eq!(frame.n, 8);
             assert_eq!(frame.channels, 16);
-            let q2 = unpack(&frame);
+            let q2 = unpack(&frame).unwrap();
             assert_eq!(q2.bins, q.bins, "{codec:?}");
             // ranges roundtrip exactly (already f16-rounded by quantize)
             for (a, b) in q.ranges.iter().zip(&q2.ranges) {
@@ -228,8 +285,43 @@ mod tests {
         let q = random_quant(8, 8, 2);
         let bytes = pack(&q, CodecKind::Mic, 20);
         let frame = parse(&bytes).unwrap();
-        let q2 = unpack(&frame);
+        let q2 = unpack(&frame).unwrap();
         assert_eq!((q2.c, q2.h, q2.w, q2.n), (q.c, q.h, q.w, q.n));
+    }
+
+    #[test]
+    fn mismatched_magic_and_version_rejected_behind_valid_crc() {
+        let q = random_quant(4, 6, 7);
+        let good = pack(&q, CodecKind::Tlc, 0);
+        // wrong magic, CRC refreshed so only the magic check can catch it
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        refresh_crc(&mut bad);
+        assert!(matches!(parse(&bad), Err(Error::Corrupt(_))));
+        // future version
+        let mut bad = good.clone();
+        bad[4] = VERSION + 1;
+        refresh_crc(&mut bad);
+        assert!(matches!(parse(&bad), Err(Error::Unsupported(_))));
+        // unknown codec id
+        let mut bad = good.clone();
+        bad[5] = 0xEE;
+        refresh_crc(&mut bad);
+        assert!(matches!(parse(&bad), Err(Error::Unsupported(_))));
+        // zero tile width: must be rejected, not divide/index by zero
+        let mut bad = good.clone();
+        bad[10] = 0;
+        bad[11] = 0;
+        refresh_crc(&mut bad);
+        assert!(matches!(parse(&bad), Err(Error::Corrupt(_))));
+        // absurd geometry: rejected by the sample cap before allocation
+        let mut bad = good;
+        for off in [10, 12, 14, 16] {
+            bad[off] = 0xFF;
+            bad[off + 1] = 0xFF;
+        }
+        refresh_crc(&mut bad);
+        assert!(matches!(parse(&bad), Err(Error::LimitExceeded { .. })));
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Fault generation for decode-robustness testing.
+//!
+//! The no-panic contract (see the [`crate::codec`] module docs) is only
+//! as good as the adversarial inputs it has been exercised against. This
+//! module generates them deterministically:
+//!
+//! * [`all_truncations`] — every prefix of a valid stream (the "frame
+//!   cut mid-flight" failure mode);
+//! * [`all_bit_flips`] — every single-bit flip (the "one flipped bit on
+//!   the wire" failure mode; for container frames the CRC must catch
+//!   every one of these);
+//! * [`header_mutations`] — targeted header-field corruption with the
+//!   CRC refreshed, so validation logic behind the checksum is reached;
+//! * [`Corruptor`] — a seeded random fault source for end-to-end runs
+//!   (the E5 server's `--corrupt-rate` injection).
+//!
+//! `tests/decode_robustness.rs` drives all of these against every codec:
+//! truncations and bit flips of CRC-protected frames must yield `Err` or
+//! the exact original tensor; CRC-refreshed header mutations and raw
+//! payload corruption must yield `Err` or a bounded, shape-consistent
+//! result. No input may panic or over-allocate.
+
+use super::container;
+use crate::util::SplitMix64;
+
+/// One deterministic fault applied to a byte stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Keep only the first `len` bytes.
+    Truncate { len: usize },
+    /// XOR bit `bit` (0..8) of byte `pos`.
+    BitFlip { pos: usize, bit: u8 },
+    /// Overwrite byte `pos` with `value`.
+    SetByte { pos: usize, value: u8 },
+}
+
+impl Fault {
+    /// Apply the fault, returning the corrupted copy. Out-of-range
+    /// positions return the input unchanged (so generators can be sloppy
+    /// about stream length).
+    pub fn apply(&self, bytes: &[u8]) -> Vec<u8> {
+        let mut out = bytes.to_vec();
+        match *self {
+            Fault::Truncate { len } => out.truncate(len),
+            Fault::BitFlip { pos, bit } => {
+                if let Some(b) = out.get_mut(pos) {
+                    *b ^= 1 << (bit & 7);
+                }
+            }
+            Fault::SetByte { pos, value } => {
+                if let Some(b) = out.get_mut(pos) {
+                    *b = value;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Every 1-byte-granular truncation of a stream: lengths 0..len.
+pub fn all_truncations(len: usize) -> impl Iterator<Item = Fault> {
+    (0..len).map(|len| Fault::Truncate { len })
+}
+
+/// Every single-bit flip of a stream.
+pub fn all_bit_flips(len: usize) -> impl Iterator<Item = Fault> {
+    (0..len).flat_map(|pos| (0..8).map(move |bit| Fault::BitFlip { pos, bit }))
+}
+
+/// Targeted corruptions of a container frame's fixed header, with the
+/// trailing CRC refreshed so parsing reaches the validation logic the
+/// checksum would otherwise shadow. Returns complete corrupted frames.
+pub fn header_mutations(frame: &[u8]) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    let header = container::HEADER_LEN.min(frame.len());
+    for pos in 0..header {
+        for value in [0x00, 0x01, 0x7F, 0xFF] {
+            let mut bad = Fault::SetByte { pos, value }.apply(frame);
+            container::refresh_crc(&mut bad);
+            out.push(bad);
+        }
+    }
+    out
+}
+
+/// Seeded random fault source for end-to-end corruption injection.
+///
+/// Mirrors a lossy transport: each corrupted frame gets one of
+/// truncation, a burst of bit flips, or random garbage of similar
+/// length. Deterministic given the seed.
+#[derive(Debug)]
+pub struct Corruptor {
+    rng: SplitMix64,
+}
+
+impl Corruptor {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed) }
+    }
+
+    /// Return a corrupted copy of `frame`.
+    pub fn corrupt(&mut self, frame: &[u8]) -> Vec<u8> {
+        if frame.is_empty() {
+            return vec![0xAA];
+        }
+        match self.rng.next_u64() % 3 {
+            0 => {
+                // truncate somewhere strictly inside the frame
+                let len = (self.rng.next_u64() as usize) % frame.len();
+                Fault::Truncate { len }.apply(frame)
+            }
+            1 => {
+                // 1..=8 random bit flips
+                let mut out = frame.to_vec();
+                let flips = self.rng.next_u64() % 8 + 1;
+                for _ in 0..flips {
+                    let pos = (self.rng.next_u64() as usize) % out.len();
+                    let bit = (self.rng.next_u64() % 8) as u8;
+                    out[pos] ^= 1 << bit;
+                }
+                out
+            }
+            _ => {
+                // random garbage, same order of magnitude in length
+                let len = (self.rng.next_u64() as usize) % (frame.len() + 1) + 1;
+                (0..len).map(|_| self.rng.next_u64() as u8).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn fault_application_is_local_and_total() {
+        let data = vec![0u8; 16];
+        assert_eq!(Fault::Truncate { len: 4 }.apply(&data).len(), 4);
+        let flipped = Fault::BitFlip { pos: 3, bit: 2 }.apply(&data);
+        assert_eq!(flipped[3], 0b100);
+        assert_eq!(flipped.iter().filter(|&&b| b != 0).count(), 1);
+        // out-of-range faults are no-ops, not panics
+        assert_eq!(Fault::BitFlip { pos: 99, bit: 0 }.apply(&data), data);
+        assert_eq!(Fault::SetByte { pos: 99, value: 1 }.apply(&data), data);
+    }
+
+    #[test]
+    fn generators_cover_the_stream() {
+        assert_eq!(all_truncations(10).count(), 10);
+        assert_eq!(all_bit_flips(10).count(), 80);
+        // every bit position appears exactly once
+        let mut seen = [[false; 8]; 10];
+        for f in all_bit_flips(10) {
+            if let Fault::BitFlip { pos, bit } = f {
+                assert!(!seen[pos][bit as usize]);
+                seen[pos][bit as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn corruptor_is_deterministic_and_always_changes_something() {
+        let frame: Vec<u8> = (0..64u8).collect();
+        let mut a = Corruptor::new(7);
+        let mut b = Corruptor::new(7);
+        for _ in 0..50 {
+            let ca = a.corrupt(&frame);
+            assert_eq!(ca, b.corrupt(&frame), "same seed must reproduce");
+            assert_ne!(ca, frame, "corruption must alter the frame");
+        }
+    }
+}

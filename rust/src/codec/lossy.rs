@@ -12,7 +12,7 @@
 
 use super::dct::{self, ZIGZAG};
 use super::rc::{BitModel, BitTree, Decoder, Encoder};
-use super::ImageMeta;
+use super::{Error, ImageMeta, Result};
 
 /// Frequency band of a zigzag position (context grouping for AC models).
 #[inline]
@@ -145,7 +145,13 @@ pub fn encode(samples: &[u16], width: usize, height: usize, n: u8, qp: u8) -> Ve
 }
 
 /// Decode back to (lossy) samples.
-pub fn decode(bytes: &[u8], meta: &ImageMeta, qp: u8) -> Vec<u16> {
+///
+/// Total: the `last`-position symbol is validated against the 64-entry
+/// zigzag table (the bit tree is 7 bits wide, so corrupt streams can
+/// produce 64..127), DC accumulation saturates instead of wrapping, and
+/// truncation surfaces via the range decoder's overrun counter.
+pub fn decode(bytes: &[u8], meta: &ImageMeta, qp: u8) -> Result<Vec<u16>> {
+    let samples_len = meta.checked_samples()?;
     let (width, height, n) = (meta.width, meta.height, meta.n);
     let bw = width.div_ceil(8);
     let bh = height.div_ceil(8);
@@ -154,7 +160,7 @@ pub fn decode(bytes: &[u8], meta: &ImageMeta, qp: u8) -> Vec<u16> {
     let maxv = (1i32 << n) - 1;
     let mut dec = Decoder::new(bytes);
     let mut m = Models::new();
-    let mut out = vec![0u16; width * height];
+    let mut out = vec![0u16; samples_len];
     let mut prev_dc = 0i32;
     for by in 0..bh {
         for bx in 0..bw {
@@ -176,10 +182,16 @@ pub fn decode(bytes: &[u8], meta: &ImageMeta, qp: u8) -> Vec<u16> {
                     mag as i32
                 }
             };
-            prev_dc += ddc;
+            // saturate: a corrupt stream can feed extreme deltas forever
+            prev_dc = prev_dc.saturating_add(ddc);
             q[0] = prev_dc;
             // AC
             let last = m.last.decode(&mut dec) as usize;
+            if last >= 64 {
+                return Err(Error::Corrupt(format!(
+                    "last-coefficient index {last} outside 8x8 block"
+                )));
+            }
             for pos in 1..=last {
                 let b = band(pos);
                 if dec.decode(&mut m.zero[b]) == 0 {
@@ -207,11 +219,20 @@ pub fn decode(bytes: &[u8], meta: &ImageMeta, qp: u8) -> Vec<u16> {
             }
         }
     }
-    out
+    if dec.overrun() > 0 {
+        return Err(Error::Truncated {
+            what: "mic range-coded stream",
+            needed: dec.byte_pos(),
+            got: dec.byte_len(),
+        });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::util::SplitMix64;
 
@@ -255,7 +276,7 @@ mod tests {
         let mut prev_psnr = f64::INFINITY;
         for qp in [4u8, 16, 28, 40] {
             let bytes = encode(&img, 64, 64, 8, qp);
-            let rec = decode(&bytes, &meta, qp);
+            let rec = decode(&bytes, &meta, qp).unwrap();
             let p = psnr(&img, &rec, 8);
             assert!(bytes.len() < prev_size, "rate must shrink with QP");
             assert!(p <= prev_psnr + 0.5, "psnr must not improve with QP");
@@ -269,7 +290,7 @@ mod tests {
         let img = smooth_image(48, 40, 8, 3);
         let meta = ImageMeta { width: 48, height: 40, n: 8 };
         let bytes = encode(&img, 48, 40, 8, 0);
-        let rec = decode(&bytes, &meta, 0);
+        let rec = decode(&bytes, &meta, 0).unwrap();
         assert!(psnr(&img, &rec, 8) > 48.0);
     }
 
@@ -278,7 +299,7 @@ mod tests {
         let img = smooth_image(37, 29, 8, 9);
         let meta = ImageMeta { width: 37, height: 29, n: 8 };
         let bytes = encode(&img, 37, 29, 8, 12);
-        let rec = decode(&bytes, &meta, 12);
+        let rec = decode(&bytes, &meta, 12).unwrap();
         assert_eq!(rec.len(), 37 * 29);
         assert!(psnr(&img, &rec, 8) > 25.0);
     }
@@ -289,7 +310,7 @@ mod tests {
         let meta = ImageMeta { width: 32, height: 32, n: 6 };
         for qp in [0u8, 10, 20] {
             let bytes = encode(&img, 32, 32, 6, qp);
-            let rec = decode(&bytes, &meta, qp);
+            let rec = decode(&bytes, &meta, qp).unwrap();
             assert!(rec.iter().all(|&v| v < 64));
             assert!(psnr(&img, &rec, 6) > 20.0, "qp={qp}");
         }

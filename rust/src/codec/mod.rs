@@ -4,10 +4,39 @@
 //! These stand in for FLIF and HEVC in the paper's evaluation; see
 //! DESIGN.md §2 for the substitution rationale and E2/E4 for the benches
 //! that compare them.
+//!
+//! # Error handling & robustness
+//!
+//! The cloud decoder is fed bytes it does not control: frames arrive over
+//! a lossy edge→cloud channel and may be truncated, bit-flipped, or
+//! adversarial. The entire decode path is therefore **total** — every
+//! decoder returns a typed [`Error`] instead of panicking, and no input
+//! can trigger unbounded allocation:
+//!
+//! * [`Error::Truncated`] — the stream ended before the decoder was done.
+//!   The range coder ([`rc::Decoder`]) and bit reader
+//!   ([`bitio::BitReader`]) track reads past the end of the buffer, so
+//!   truncation surfaces even mid-payload.
+//! * [`Error::Corrupt`] — the bytes are structurally invalid (CRC
+//!   mismatch, bad magic, impossible symbol, inconsistent geometry).
+//! * [`Error::LimitExceeded`] — a header asks the decoder to allocate
+//!   more than [`MAX_DECODED_SAMPLES`]; rejected before any allocation.
+//! * [`Error::Unsupported`] — well-formed but unknown (future container
+//!   version, unregistered codec id).
+//!
+//! Encoders keep `assert!`-style contracts: the encode side runs on
+//! trusted, locally produced tensors and a violated invariant there is a
+//! programming error, not an input error.
+//!
+//! The fault-injection harness ([`faultgen`] + `tests/decode_robustness.rs`)
+//! enforces the contract: every codec's valid output is truncated at every
+//! byte boundary, bit-flipped, and header-corrupted, and the decoder must
+//! return `Err` or a correct tensor — never panic, never over-allocate.
 
 pub mod bitio;
 pub mod container;
 pub mod dct;
+pub mod faultgen;
 pub mod lossy;
 pub mod png_like;
 pub mod rice;
@@ -17,15 +46,93 @@ pub mod tlc;
 pub mod tlc_ic;
 pub mod zstd_raw;
 
-use anyhow::bail;
+use std::fmt;
+
+/// Hard cap on the number of samples any decode is allowed to produce
+/// (16 Mi samples = 32 MiB of `u16`). Derived limits from container
+/// headers are checked against this before any payload allocation, so a
+/// hostile header cannot OOM the serving process.
+pub const MAX_DECODED_SAMPLES: usize = 1 << 24;
+
+/// Typed decode-path error taxonomy. See the module docs for the
+/// classification contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// The stream ended before decoding completed. `got` is the number of
+    /// bytes (or, where noted, bits) available; `needed` is what the
+    /// decoder required at the point it ran dry.
+    Truncated {
+        what: &'static str,
+        needed: usize,
+        got: usize,
+    },
+    /// Structurally invalid bytes: checksum mismatch, bad magic,
+    /// impossible symbol, inconsistent geometry.
+    Corrupt(String),
+    /// A header-derived allocation exceeds a hard cap.
+    LimitExceeded {
+        what: &'static str,
+        requested: usize,
+        limit: usize,
+    },
+    /// Well-formed but not something this build decodes (future version,
+    /// unknown codec id).
+    Unsupported(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Truncated { what, needed, got } => {
+                write!(f, "truncated {what}: needed {needed}, got {got}")
+            }
+            Error::Corrupt(msg) => write!(f, "corrupt stream: {msg}"),
+            Error::LimitExceeded { what, requested, limit } => {
+                write!(f, "{what} limit exceeded: {requested} > {limit}")
+            }
+            Error::Unsupported(msg) => write!(f, "unsupported: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Decode-path result type.
+pub type Result<T> = std::result::Result<T, Error>;
 
 /// Geometry a decoder needs (travels in the container header).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ImageMeta {
     pub width: usize,
     pub height: usize,
-    /// Sample bit depth (2..=16).
+    /// Sample bit depth (1..=16).
     pub n: u8,
+}
+
+impl ImageMeta {
+    /// Validate the geometry against the decode limits; returns the
+    /// number of samples a decode of this image will allocate.
+    pub fn checked_samples(&self) -> Result<usize> {
+        if !(1..=16).contains(&self.n) {
+            return Err(Error::Corrupt(format!("bit depth {} outside 1..=16", self.n)));
+        }
+        let samples = self
+            .width
+            .checked_mul(self.height)
+            .ok_or(Error::LimitExceeded {
+                what: "decoded samples",
+                requested: usize::MAX,
+                limit: MAX_DECODED_SAMPLES,
+            })?;
+        if samples > MAX_DECODED_SAMPLES {
+            return Err(Error::LimitExceeded {
+                what: "decoded samples",
+                requested: samples,
+                limit: MAX_DECODED_SAMPLES,
+            });
+        }
+        Ok(samples)
+    }
 }
 
 /// Registry of payload codecs.
@@ -46,26 +153,40 @@ pub enum CodecKind {
     TlcIc = 5,
 }
 
+/// Every registered codec, in id order (handy for sweeps and the
+/// fault-injection harness).
+pub const ALL_CODECS: [CodecKind; 5] = [
+    CodecKind::Tlc,
+    CodecKind::PngLike,
+    CodecKind::ZstdRaw,
+    CodecKind::Mic,
+    CodecKind::TlcIc,
+];
+
 impl CodecKind {
-    pub fn from_u8(v: u8) -> anyhow::Result<Self> {
+    pub fn from_u8(v: u8) -> Result<Self> {
         Ok(match v {
             1 => CodecKind::Tlc,
             2 => CodecKind::PngLike,
             3 => CodecKind::ZstdRaw,
             4 => CodecKind::Mic,
             5 => CodecKind::TlcIc,
-            other => bail!("unknown codec id {other}"),
+            other => return Err(Error::Unsupported(format!("unknown codec id {other}"))),
         })
     }
 
-    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+    pub fn from_name(name: &str) -> Result<Self> {
         Ok(match name {
             "tlc" => CodecKind::Tlc,
             "png" | "png-like" => CodecKind::PngLike,
             "zstd" => CodecKind::ZstdRaw,
             "mic" | "lossy" => CodecKind::Mic,
             "tlc-ic" | "tlcic" => CodecKind::TlcIc,
-            other => bail!("unknown codec '{other}' (tlc|tlc-ic|png|zstd|mic)"),
+            other => {
+                return Err(Error::Unsupported(format!(
+                    "unknown codec '{other}' (tlc|tlc-ic|png|zstd|mic)"
+                )))
+            }
         })
     }
 
@@ -84,6 +205,7 @@ impl CodecKind {
     }
 
     /// Encode one plane. `qp` is only meaningful for lossy codecs.
+    /// Panics on inconsistent arguments (trusted, locally produced input).
     pub fn encode_image(
         &self,
         samples: &[u16],
@@ -102,8 +224,11 @@ impl CodecKind {
         }
     }
 
-    /// Decode one plane.
-    pub fn decode_image(&self, bytes: &[u8], meta: &ImageMeta, qp: u8) -> Vec<u16> {
+    /// Decode one plane. Total: any byte sequence yields `Ok` with exactly
+    /// `meta.width * meta.height` samples or a typed [`Error`] — never a
+    /// panic, never an allocation beyond [`MAX_DECODED_SAMPLES`].
+    pub fn decode_image(&self, bytes: &[u8], meta: &ImageMeta, qp: u8) -> Result<Vec<u16>> {
+        meta.checked_samples()?;
         match self {
             CodecKind::Tlc => tlc::decode(bytes, meta),
             CodecKind::PngLike => png_like::decode(bytes, meta),
@@ -118,27 +243,46 @@ impl CodecKind {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     #[test]
     fn kind_roundtrips_through_ids_and_names() {
-        for k in [
-            CodecKind::Tlc,
-            CodecKind::PngLike,
-            CodecKind::ZstdRaw,
-            CodecKind::Mic,
-            CodecKind::TlcIc,
-        ] {
+        for k in ALL_CODECS {
             assert_eq!(CodecKind::from_u8(k as u8).unwrap(), k);
             assert_eq!(CodecKind::from_name(k.name()).unwrap(), k);
         }
-        assert!(CodecKind::from_u8(0).is_err());
-        assert!(CodecKind::from_name("hevc").is_err());
+        assert!(matches!(CodecKind::from_u8(0), Err(Error::Unsupported(_))));
+        assert!(matches!(CodecKind::from_name("hevc"), Err(Error::Unsupported(_))));
     }
 
     #[test]
     fn lossless_flag() {
         assert!(CodecKind::Tlc.is_lossless());
         assert!(!CodecKind::Mic.is_lossless());
+    }
+
+    #[test]
+    fn meta_limits_enforced() {
+        let ok = ImageMeta { width: 64, height: 64, n: 8 };
+        assert_eq!(ok.checked_samples().unwrap(), 4096);
+        let huge = ImageMeta { width: 1 << 16, height: 1 << 16, n: 8 };
+        assert!(matches!(
+            huge.checked_samples(),
+            Err(Error::LimitExceeded { .. })
+        ));
+        let bad_n = ImageMeta { width: 4, height: 4, n: 17 };
+        assert!(matches!(bad_n.checked_samples(), Err(Error::Corrupt(_))));
+        let zero_n = ImageMeta { width: 4, height: 4, n: 0 };
+        assert!(zero_n.checked_samples().is_err());
+    }
+
+    #[test]
+    fn error_display_names_the_failure() {
+        let e = Error::Truncated { what: "frame", needed: 10, got: 3 };
+        assert!(e.to_string().contains("needed 10"));
+        let e = Error::LimitExceeded { what: "samples", requested: 99, limit: 10 };
+        assert!(e.to_string().contains("99 > 10"));
     }
 }

@@ -5,7 +5,7 @@
 //! big-endian like PNG's 16-bit mode.
 
 use super::predict::paeth;
-use super::ImageMeta;
+use super::{Error, ImageMeta, Result};
 use flate2::read::ZlibDecoder;
 use flate2::write::ZlibEncoder;
 use flate2::Compression;
@@ -49,18 +49,46 @@ pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
         }
     }
     let mut enc = ZlibEncoder::new(Vec::new(), Compression::best());
-    enc.write_all(&filtered).expect("in-memory write");
-    enc.finish().expect("deflate finish")
+    // in-memory sink: a write failure is a programming error, not input
+    if let Err(e) = enc.write_all(&filtered) {
+        panic!("in-memory deflate write failed: {e}");
+    }
+    match enc.finish() {
+        Ok(out) => out,
+        Err(e) => panic!("deflate finish failed: {e}"),
+    }
 }
 
 /// Inverse of `encode`.
-pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Vec<u16> {
+///
+/// Total: the inflate read is bounded to the expected output size plus
+/// one byte (so a deflate bomb cannot allocate more than the validated
+/// geometry allows), and both short and long streams are rejected.
+pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Result<Vec<u16>> {
+    let samples_len = meta.checked_samples()?;
     let (width, height, n) = (meta.width, meta.height, meta.n);
     let bps = bytes_per_sample(n);
     let stride = width * bps;
-    let mut filtered = Vec::with_capacity(height * stride);
-    ZlibDecoder::new(bytes).read_to_end(&mut filtered).expect("inflate");
-    assert_eq!(filtered.len(), height * stride, "corrupt png-like stream");
+    let expected = samples_len * bps;
+    let mut filtered = Vec::with_capacity(expected);
+    // `.take(expected + 1)`: enough to detect an over-long stream without
+    // ever buffering an unbounded decompression
+    ZlibDecoder::new(bytes)
+        .take(expected as u64 + 1)
+        .read_to_end(&mut filtered)
+        .map_err(|e| Error::Corrupt(format!("inflate failed: {e}")))?;
+    if filtered.len() < expected {
+        return Err(Error::Truncated {
+            what: "png-like filtered plane",
+            needed: expected,
+            got: filtered.len(),
+        });
+    }
+    if filtered.len() > expected {
+        return Err(Error::Corrupt(format!(
+            "png-like stream inflates past expected {expected} bytes"
+        )));
+    }
     let mut raw = vec![0u8; filtered.len()];
     for y in 0..height {
         for i in 0..stride {
@@ -82,25 +110,40 @@ pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Vec<u16> {
             };
         }
     }
-    samples
+    Ok(samples)
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::util::SplitMix64;
 
     #[test]
     fn roundtrip_8_and_16_bit() {
         let mut r = SplitMix64::new(21);
-        for n in [4u8, 8, 12, 16] {
+        for n in [1u8, 4, 8, 12, 16] {
             let mask = (1u32 << n) - 1;
             let samples: Vec<u16> =
                 (0..40 * 30).map(|_| (r.next_u64() as u32 & mask) as u16).collect();
             let bytes = encode(&samples, 40, 30, n);
             let meta = ImageMeta { width: 40, height: 30, n };
-            assert_eq!(decode(&bytes, &meta), samples, "n={n}");
+            assert_eq!(decode(&bytes, &meta).unwrap(), samples, "n={n}");
         }
+    }
+
+    #[test]
+    fn garbage_and_truncation_are_rejected() {
+        let samples: Vec<u16> = (0..16 * 16).map(|i| (i & 255) as u16).collect();
+        let bytes = encode(&samples, 16, 16, 8);
+        let meta = ImageMeta { width: 16, height: 16, n: 8 };
+        assert!(decode(&[], &meta).is_err());
+        assert!(decode(&[0xde, 0xad, 0xbe, 0xef], &meta).is_err());
+        assert!(decode(&bytes[..bytes.len() / 2], &meta).is_err());
+        // stream longer than the geometry claims is corrupt, not a panic
+        let small = ImageMeta { width: 4, height: 4, n: 8 };
+        assert!(matches!(decode(&bytes, &small), Err(Error::Corrupt(_))));
     }
 
     #[test]

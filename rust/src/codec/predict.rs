@@ -41,8 +41,15 @@ pub const NUM_CONTEXTS: usize = 8;
 #[inline]
 pub fn activity_context(a: i32, b: i32, c: i32, n_bits: u8) -> usize {
     // normalize activity to the 8-bit scale so context boundaries are
-    // comparable across bit depths
-    let act = ((a - c).abs() + (c - b).abs()) >> n_bits.saturating_sub(8);
+    // comparable across bit depths: scale down for depths above 8 bits,
+    // up for depths below (a full-scale edge must land in the top
+    // context regardless of precision)
+    let d = (a - c).abs() + (c - b).abs();
+    let act = if n_bits >= 8 {
+        d >> (n_bits - 8)
+    } else {
+        d << (8 - n_bits)
+    };
     match act {
         0 => 0,
         1 => 1,
@@ -91,5 +98,23 @@ mod tests {
         }
         // higher bit depth shifts activity down
         assert_eq!(activity_context(1024, 0, 0, 12), activity_context(64, 0, 0, 8));
+    }
+
+    #[test]
+    fn low_bit_depths_scale_activity_up() {
+        // a 4-bit activity of 2 is the same relative texture as an 8-bit
+        // activity of 32 (2 << 4) and must land in the same context
+        assert_eq!(activity_context(2, 0, 0, 4), activity_context(32, 0, 0, 8));
+        // 6-bit activity of 8 == 8-bit activity of 32 (8 << 2)
+        assert_eq!(activity_context(8, 0, 0, 6), activity_context(32, 0, 0, 8));
+        // a full-scale edge saturates the top context at every depth
+        for n in [1u8, 2, 4, 6, 8, 12, 16] {
+            let full = (1i32 << n) - 1;
+            assert_eq!(
+                activity_context(full, 0, 0, n),
+                7,
+                "full-scale edge at n={n} must hit the busiest context"
+            );
+        }
     }
 }

@@ -124,17 +124,25 @@ impl Encoder {
 }
 
 /// Range decoder reading from a byte slice.
+///
+/// Reads past the end of the buffer yield zero bytes (so decoding is
+/// total) but are counted in [`Decoder::overrun`]. The encoder's output
+/// length is exactly `renormalizations + 5` bytes and the decoder
+/// consumes exactly that many on a valid stream, so `overrun() > 0` is a
+/// reliable truncation signal with no false positives — codecs check it
+/// after decoding and map it to [`crate::codec::Error::Truncated`].
 #[derive(Debug)]
 pub struct Decoder<'a> {
     code: u32,
     range: u32,
     buf: &'a [u8],
     pos: usize,
+    overrun: usize,
 }
 
 impl<'a> Decoder<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        let mut d = Self { code: 0, range: u32::MAX, buf, pos: 0 };
+        let mut d = Self { code: 0, range: u32::MAX, buf, pos: 0, overrun: 0 };
         // the first of the 5 init bytes is the encoder's leading cache
         // byte and shifts out of the 32-bit window
         for _ in 0..5 {
@@ -145,9 +153,31 @@ impl<'a> Decoder<'a> {
 
     #[inline]
     fn next_byte(&mut self) -> u8 {
-        let b = self.buf.get(self.pos).copied().unwrap_or(0);
+        let b = match self.buf.get(self.pos) {
+            Some(&b) => b,
+            None => {
+                self.overrun += 1;
+                0
+            }
+        };
         self.pos += 1;
         b
+    }
+
+    /// Number of zero bytes synthesized past the end of the buffer.
+    /// Zero for every stream produced by [`Encoder::finish`].
+    #[inline]
+    pub fn overrun(&self) -> usize {
+        self.overrun
+    }
+
+    /// Bytes consumed so far (including synthesized overrun bytes).
+    pub fn byte_pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.buf.len()
     }
 
     /// Decode one bit with an adaptive model.
@@ -246,6 +276,40 @@ mod tests {
         let mut m = BitModel::default();
         for &b in &bits {
             assert_eq!(dec.decode(&mut m), b);
+        }
+        assert_eq!(dec.overrun(), 0, "valid stream must not overrun");
+    }
+
+    #[test]
+    fn valid_streams_never_overrun_truncated_ones_do() {
+        // The overrun()==0 invariant for encoder-produced streams is what
+        // lets the codecs use a strict truncation check; pin it across
+        // many stream lengths, and check truncation does trip it.
+        let mut r = SplitMix64::new(9);
+        for len in [0usize, 1, 7, 100, 3000] {
+            let bits: Vec<u32> = (0..len).map(|_| (r.next_u64() & 1) as u32).collect();
+            let mut enc = Encoder::new();
+            let mut m = BitModel::default();
+            for &b in &bits {
+                enc.encode(&mut m, b);
+            }
+            let buf = enc.finish();
+            let mut dec = Decoder::new(&buf);
+            let mut m = BitModel::default();
+            for &b in &bits {
+                assert_eq!(dec.decode(&mut m), b, "len={len}");
+            }
+            assert_eq!(dec.overrun(), 0, "len={len}");
+            // any truncation starves the 5-byte init or a renorm read
+            if !buf.is_empty() {
+                let cut = &buf[..buf.len() - 1];
+                let mut dec = Decoder::new(cut);
+                let mut m = BitModel::default();
+                for _ in &bits {
+                    dec.decode(&mut m);
+                }
+                assert!(dec.overrun() > 0, "truncation undetected at len={len}");
+            }
         }
     }
 

@@ -7,6 +7,7 @@
 //! JPEG-LS style `A/N` estimator.
 
 use super::bitio::{BitReader, BitWriter};
+use super::{Error, Result};
 
 /// Map a signed residual to unsigned (zigzag): 0,-1,1,-2,2 -> 0,1,2,3,4.
 #[inline]
@@ -84,7 +85,11 @@ pub fn encode(w: &mut BitWriter, st: &mut RiceState, u: u32) {
 }
 
 /// Decode one value and update the state (must mirror `encode`).
-pub fn decode(r: &mut BitReader, st: &mut RiceState) -> u32 {
+///
+/// Returns [`Error::Truncated`] if the stream ran out mid-symbol; never
+/// panics. Valid streams end on a byte boundary (the writer zero-pads),
+/// so a clean decode never reads past the buffer.
+pub fn decode(r: &mut BitReader, st: &mut RiceState) -> Result<u32> {
     let k = st.k();
     const ESCAPE: u32 = 24;
     let mut q = 0u32;
@@ -104,12 +109,21 @@ pub fn decode(r: &mut BitReader, st: &mut RiceState) -> u32 {
     } else {
         q
     };
+    if r.past_end() {
+        return Err(Error::Truncated {
+            what: "rice-coded stream",
+            needed: r.byte_pos(),
+            got: r.byte_len(),
+        });
+    }
     st.update(u);
-    u
+    Ok(u)
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::util::SplitMix64;
 
@@ -139,10 +153,33 @@ mod tests {
         let mut rd = BitReader::new(&bytes);
         let mut st = RiceState::default();
         for &v in &vals {
-            assert_eq!(decode(&mut rd, &mut st), v);
+            assert_eq!(decode(&mut rd, &mut st).unwrap(), v);
         }
         // should beat raw 6-bit packing on this skewed source
         assert!(bytes.len() * 8 < vals.len() * 6, "{} bits", bytes.len() * 8);
+    }
+
+    #[test]
+    fn truncation_yields_error_not_garbage() {
+        let vals = [700u32, 900, 12, 65_000, 3];
+        let mut w = BitWriter::new();
+        let mut st = RiceState::default();
+        for &v in &vals {
+            encode(&mut w, &mut st, v);
+        }
+        let bytes = w.finish();
+        // cut the stream short: some symbol must report Truncated
+        let cut = &bytes[..bytes.len() / 2];
+        let mut rd = BitReader::new(cut);
+        let mut st = RiceState::default();
+        let mut saw_err = false;
+        for _ in &vals {
+            if decode(&mut rd, &mut st).is_err() {
+                saw_err = true;
+                break;
+            }
+        }
+        assert!(saw_err, "truncated stream decoded without error");
     }
 
     #[test]
@@ -157,7 +194,7 @@ mod tests {
         let mut rd = BitReader::new(&bytes);
         let mut st = RiceState::default();
         for &v in &vals {
-            assert_eq!(decode(&mut rd, &mut st), v);
+            assert_eq!(decode(&mut rd, &mut st).unwrap(), v);
         }
     }
 

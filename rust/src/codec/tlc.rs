@@ -15,7 +15,7 @@
 
 use super::predict::{activity_context, med, NUM_CONTEXTS};
 use super::rc::{BitModel, Decoder, Encoder};
-use super::ImageMeta;
+use super::{Error, ImageMeta, Result};
 
 const MAX_EXP: usize = 17;
 
@@ -115,11 +115,17 @@ pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
 }
 
 /// Decode a TLC stream back to samples.
-pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Vec<u16> {
+///
+/// Total: corrupt bytes decode to clamped garbage (the range coder has no
+/// internal redundancy — integrity is the container CRC's job) but
+/// truncation is detected via the decoder's overrun counter, and no input
+/// panics or allocates beyond the validated geometry.
+pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Result<Vec<u16>> {
+    let samples_len = meta.checked_samples()?;
     let (width, height, n) = (meta.width, meta.height, meta.n);
     let mut dec = Decoder::new(bytes);
     let mut models = Models::new();
-    let mut samples = vec![0u16; width * height];
+    let mut samples = vec![0u16; samples_len];
     let half = 1i32 << (n - 1);
     let maxv = (1i32 << n) - 1;
     let mut decode_at = |dec: &mut Decoder,
@@ -161,25 +167,34 @@ pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Vec<u16> {
             samples[y * width + x] = decode_at(&mut dec, &mut models, a, b, c);
         }
     }
-    samples
+    if dec.overrun() > 0 {
+        return Err(Error::Truncated {
+            what: "tlc range-coded stream",
+            needed: dec.byte_pos(),
+            got: dec.byte_len(),
+        });
+    }
+    Ok(samples)
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::util::SplitMix64;
 
     fn roundtrip(samples: &[u16], w: usize, h: usize, n: u8) -> usize {
         let bytes = encode(samples, w, h, n);
         let meta = ImageMeta { width: w, height: h, n };
-        assert_eq!(decode(&bytes, &meta), samples, "w={w} h={h} n={n}");
+        assert_eq!(decode(&bytes, &meta).unwrap(), samples, "w={w} h={h} n={n}");
         bytes.len()
     }
 
     #[test]
     fn roundtrip_random_all_depths() {
         let mut r = SplitMix64::new(10);
-        for n in [2u8, 3, 4, 6, 8, 10, 12, 16] {
+        for n in [1u8, 2, 3, 4, 6, 8, 10, 12, 16] {
             let mask = (1u32 << n) - 1;
             let samples: Vec<u16> =
                 (0..64 * 48).map(|_| (r.next_u64() as u32 & mask) as u16).collect();
@@ -236,5 +251,25 @@ mod tests {
         let samples: Vec<u16> =
             (0..32 * 32).map(|i| if i % 2 == 0 { 0 } else { 65535 }).collect();
         roundtrip(&samples, 32, 32, 16);
+    }
+
+    #[test]
+    fn truncation_reports_error() {
+        let mut r = SplitMix64::new(42);
+        let samples: Vec<u16> = (0..32 * 32).map(|_| (r.next_u64() & 255) as u16).collect();
+        let bytes = encode(&samples, 32, 32, 8);
+        let meta = ImageMeta { width: 32, height: 32, n: 8 };
+        for cut in [0, 1, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                matches!(decode(&bytes[..cut], &meta), Err(Error::Truncated { .. })),
+                "cut at {cut} not reported"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_geometry_rejected_before_allocation() {
+        let meta = ImageMeta { width: 1 << 20, height: 1 << 20, n: 8 };
+        assert!(matches!(decode(&[], &meta), Err(Error::LimitExceeded { .. })));
     }
 }

@@ -22,6 +22,7 @@
 
 use super::predict::{activity_context, med, NUM_CONTEXTS};
 use super::rc::{BitModel, Decoder, Encoder};
+use super::{Error, Result, MAX_DECODED_SAMPLES};
 
 const MAX_EXP: usize = 17;
 
@@ -187,10 +188,27 @@ pub fn encode_planes(bins: &[u16], c: usize, h: usize, w: usize, n: u8) -> Vec<u
 }
 
 /// Decode C channel planes.
-pub fn decode_planes(bytes: &[u8], c: usize, h: usize, w: usize, n: u8) -> Vec<u16> {
+///
+/// Total: geometry is validated against [`MAX_DECODED_SAMPLES`] before
+/// allocation and truncation surfaces via the range decoder's overrun
+/// counter; corrupt (non-truncated) bytes decode to clamped garbage —
+/// integrity is the container CRC's job.
+pub fn decode_planes(bytes: &[u8], c: usize, h: usize, w: usize, n: u8) -> Result<Vec<u16>> {
+    if !(1..=16).contains(&n) {
+        return Err(Error::Corrupt(format!("bit depth {n} outside 1..=16")));
+    }
+    let total = c
+        .checked_mul(h)
+        .and_then(|v| v.checked_mul(w))
+        .filter(|&v| v <= MAX_DECODED_SAMPLES)
+        .ok_or(Error::LimitExceeded {
+            what: "decoded samples",
+            requested: usize::MAX,
+            limit: MAX_DECODED_SAMPLES,
+        })?;
     let mut dec = Decoder::new(bytes);
     let mut models = Models::new();
-    let mut out = vec![0u16; c * h * w];
+    let mut out = vec![0u16; total];
     for ch in 0..c {
         let (done, rest) = out.split_at_mut(ch * h * w);
         let cur = &mut rest[..h * w];
@@ -201,18 +219,55 @@ pub fn decode_planes(bytes: &[u8], c: usize, h: usize, w: usize, n: u8) -> Vec<u
         };
         code_plane_dec(&mut dec, &mut models, cur, prev, w, h, n);
     }
-    out
+    if dec.overrun() > 0 {
+        return Err(Error::Truncated {
+            what: "tlc-ic range-coded stream",
+            needed: dec.byte_pos(),
+            got: dec.byte_len(),
+        });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::util::SplitMix64;
 
     fn roundtrip(bins: &[u16], c: usize, h: usize, w: usize, n: u8) -> usize {
         let bytes = encode_planes(bins, c, h, w, n);
-        assert_eq!(decode_planes(&bytes, c, h, w, n), bins, "c={c} h={h} w={w} n={n}");
+        assert_eq!(
+            decode_planes(&bytes, c, h, w, n).unwrap(),
+            bins,
+            "c={c} h={h} w={w} n={n}"
+        );
         bytes.len()
+    }
+
+    #[test]
+    fn truncation_and_oversize_rejected() {
+        let mut r = SplitMix64::new(21);
+        let bins: Vec<u16> = (0..4 * 8 * 8).map(|_| (r.next_u64() & 63) as u16).collect();
+        let bytes = encode_planes(&bins, 4, 8, 8, 6);
+        for cut in [0, bytes.len() / 3, bytes.len() - 1] {
+            assert!(
+                matches!(
+                    decode_planes(&bytes[..cut], 4, 8, 8, 6),
+                    Err(Error::Truncated { .. })
+                ),
+                "cut {cut}"
+            );
+        }
+        assert!(matches!(
+            decode_planes(&bytes, usize::MAX, 2, 2, 6),
+            Err(Error::LimitExceeded { .. })
+        ));
+        assert!(matches!(
+            decode_planes(&bytes, 4, 8, 8, 0),
+            Err(Error::Corrupt(_))
+        ));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! compares against.
 
 use super::bitio::{BitReader, BitWriter};
-use super::ImageMeta;
+use super::{Error, ImageMeta, Result};
 
 /// Bit-pack to ceil(n) bits/sample, then zstd level 19.
 pub fn encode(samples: &[u16], _width: usize, _height: usize, n: u8) -> Vec<u8> {
@@ -12,33 +12,55 @@ pub fn encode(samples: &[u16], _width: usize, _height: usize, n: u8) -> Vec<u8> 
     for &s in samples {
         w.put_bits(s as u32, n);
     }
-    zstd::bulk::compress(&w.finish(), 19).expect("zstd compress")
+    // in-memory compression of a sane buffer cannot fail; a failure here
+    // is a programming error, not an input error
+    match zstd::bulk::compress(&w.finish(), 19) {
+        Ok(out) => out,
+        Err(e) => panic!("zstd compress failed: {e}"),
+    }
 }
 
 /// Inverse of `encode`.
-pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Vec<u16> {
-    let count = meta.width * meta.height;
+///
+/// Total: the decompression capacity is bounded by the validated
+/// geometry (so a zstd bomb cannot over-allocate), malformed frames map
+/// to [`Error::Corrupt`], and short unpacked payloads to
+/// [`Error::Truncated`].
+pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Result<Vec<u16>> {
+    let count = meta.checked_samples()?;
     let packed_len = (count * meta.n as usize).div_ceil(8);
-    let raw = zstd::bulk::decompress(bytes, packed_len).expect("zstd decompress");
+    // `decompress` caps its output at `packed_len` bytes; an over-long
+    // stream errors inside zstd rather than growing the buffer
+    let raw = zstd::bulk::decompress(bytes, packed_len)
+        .map_err(|e| Error::Corrupt(format!("zstd decompress failed: {e}")))?;
+    if raw.len() < packed_len {
+        return Err(Error::Truncated {
+            what: "zstd packed payload",
+            needed: packed_len,
+            got: raw.len(),
+        });
+    }
     let mut r = BitReader::new(&raw);
-    (0..count).map(|_| r.get_bits(meta.n) as u16).collect()
+    Ok((0..count).map(|_| r.get_bits(meta.n) as u16).collect())
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::util::SplitMix64;
 
     #[test]
     fn roundtrip_various_depths() {
         let mut r = SplitMix64::new(31);
-        for n in [2u8, 5, 8, 11, 16] {
+        for n in [1u8, 2, 5, 8, 11, 16] {
             let mask = (1u32 << n) - 1;
             let samples: Vec<u16> =
                 (0..50 * 20).map(|_| (r.next_u64() as u32 & mask) as u16).collect();
             let bytes = encode(&samples, 50, 20, n);
             let meta = ImageMeta { width: 50, height: 20, n };
-            assert_eq!(decode(&bytes, &meta), samples, "n={n}");
+            assert_eq!(decode(&bytes, &meta).unwrap(), samples, "n={n}");
         }
     }
 
@@ -47,5 +69,18 @@ mod tests {
         let samples: Vec<u16> = (0..64 * 64).map(|i| (i % 7) as u16).collect();
         let bytes = encode(&samples, 64, 64, 8);
         assert!(bytes.len() < 300);
+    }
+
+    #[test]
+    fn garbage_and_truncation_are_rejected() {
+        let samples: Vec<u16> = (0..32 * 32).map(|i| (i & 63) as u16).collect();
+        let bytes = encode(&samples, 32, 32, 6);
+        let meta = ImageMeta { width: 32, height: 32, n: 6 };
+        assert!(decode(&[], &meta).is_err());
+        assert!(decode(&[1, 2, 3, 4, 5], &meta).is_err());
+        assert!(decode(&bytes[..bytes.len() - 1], &meta).is_err());
+        // frame that decompresses smaller than the geometry requires
+        let tiny = ImageMeta { width: 64, height: 64, n: 6 };
+        assert!(decode(&bytes, &tiny).is_err());
     }
 }

@@ -4,7 +4,7 @@
 use crate::codec::CodecKind;
 use crate::json::{self, Value};
 use crate::selection::Policy;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::path::{Path, PathBuf};
 
 /// Configuration of the compression pipeline (one (C, n, codec) operating
@@ -60,6 +60,10 @@ pub struct ServerConfig {
     /// with OFF periods so the mean rate stays `arrival_rate` (a simple
     /// MMPP-2). 1.0 = plain Poisson.
     pub burst_factor: f64,
+    /// Fraction of frames to corrupt in flight (fault injection for the
+    /// robustness demo; 0.0 disables). Corrupt frames must be dropped
+    /// and counted, never crash the server.
+    pub corrupt_rate: f64,
 }
 
 impl Default for ServerConfig {
@@ -72,6 +76,7 @@ impl Default for ServerConfig {
             decode_workers: 2,
             queue_depth: 64,
             burst_factor: 1.0,
+            corrupt_rate: 0.0,
         }
     }
 }
@@ -84,16 +89,35 @@ fn set_if<T>(slot: &mut T, v: Option<T>) {
 
 impl PipelineConfig {
     /// Overlay fields present in a JSON object onto `self`.
+    ///
+    /// Out-of-range values are rejected with an error naming the field
+    /// and the offending value (they used to be truncated silently with
+    /// `as u8`, which turned e.g. `"n": 257` into n=1).
     pub fn apply(&mut self, v: &Value) -> Result<()> {
         if let Some(s) = v.get("artifact_dir").and_then(Value::as_str) {
             self.artifact_dir = PathBuf::from(s);
         }
-        set_if(&mut self.c, v.get("c").and_then(Value::as_usize));
-        set_if(&mut self.n, v.get("n").and_then(Value::as_i64).map(|x| x as u8));
+        if let Some(c) = v.get("c").and_then(Value::as_usize) {
+            if c == 0 {
+                bail!("config field 'c': must be >= 1, got {c}");
+            }
+            self.c = c;
+        }
+        if let Some(n) = v.get("n").and_then(Value::as_i64) {
+            if !(1..=16).contains(&n) {
+                bail!("config field 'n': bit depth must be in 1..=16, got {n}");
+            }
+            self.n = n as u8;
+        }
         if let Some(s) = v.get("codec").and_then(Value::as_str) {
             self.codec = CodecKind::from_name(s)?;
         }
-        set_if(&mut self.qp, v.get("qp").and_then(Value::as_i64).map(|x| x as u8));
+        if let Some(qp) = v.get("qp").and_then(Value::as_i64) {
+            if !(0..=255).contains(&qp) {
+                bail!("config field 'qp': must be in 0..=255, got {qp}");
+            }
+            self.qp = qp as u8;
+        }
         if let Some(s) = v.get("policy").and_then(Value::as_str) {
             self.policy = Policy::parse(s)?;
         }
@@ -114,32 +138,50 @@ impl PipelineConfig {
 }
 
 impl ServerConfig {
-    pub fn apply(&mut self, v: &Value) {
-        set_if(&mut self.batch_cap, v.get("batch_cap").and_then(Value::as_usize));
+    /// Overlay fields present in a JSON object onto `self`, rejecting
+    /// out-of-range values with an error that names the field.
+    pub fn apply(&mut self, v: &Value) -> Result<()> {
+        if let Some(b) = v.get("batch_cap").and_then(Value::as_usize) {
+            if b == 0 {
+                bail!("config field 'batch_cap': must be >= 1, got {b}");
+            }
+            self.batch_cap = b;
+        }
         set_if(
             &mut self.batch_deadline_us,
             v.get("batch_deadline_us").and_then(Value::as_i64).map(|x| x as u64),
         );
         set_if(&mut self.arrival_rate, v.get("arrival_rate").and_then(Value::as_f64));
         set_if(&mut self.num_requests, v.get("num_requests").and_then(Value::as_usize));
-        set_if(
-            &mut self.decode_workers,
-            v.get("decode_workers").and_then(Value::as_usize),
-        );
+        if let Some(w) = v.get("decode_workers").and_then(Value::as_usize) {
+            if w == 0 {
+                bail!("config field 'decode_workers': must be >= 1, got {w}");
+            }
+            self.decode_workers = w;
+        }
         set_if(&mut self.queue_depth, v.get("queue_depth").and_then(Value::as_usize));
         set_if(&mut self.burst_factor, v.get("burst_factor").and_then(Value::as_f64));
+        if let Some(r) = v.get("corrupt_rate").and_then(Value::as_f64) {
+            if !(0.0..=1.0).contains(&r) {
+                bail!("config field 'corrupt_rate': must be in 0.0..=1.0, got {r}");
+            }
+            self.corrupt_rate = r;
+        }
+        Ok(())
     }
 
     pub fn load(path: &Path) -> Result<Self> {
         let mut cfg = Self::default();
         let v = json::from_file(path)?;
-        cfg.apply(v.get("server").unwrap_or(&v));
+        cfg.apply(v.get("server").unwrap_or(&v))?;
         Ok(cfg)
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::json::parse;
 
@@ -174,9 +216,31 @@ mod tests {
     #[test]
     fn server_overlay() {
         let mut cfg = ServerConfig::default();
-        cfg.apply(&parse(r#"{"batch_cap": 4, "arrival_rate": 50.5}"#).unwrap());
+        cfg.apply(&parse(r#"{"batch_cap": 4, "arrival_rate": 50.5}"#).unwrap())
+            .unwrap();
         assert_eq!(cfg.batch_cap, 4);
         assert_eq!(cfg.arrival_rate, 50.5);
         assert_eq!(cfg.num_requests, 512);
+        assert_eq!(cfg.corrupt_rate, 0.0);
+    }
+
+    #[test]
+    fn out_of_range_values_name_the_field() {
+        let mut cfg = PipelineConfig::default();
+        let err = cfg.apply(&parse(r#"{"n": 257}"#).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("'n'"), "{err}");
+        assert!(err.to_string().contains("257"), "{err}");
+        assert_eq!(cfg.n, 8, "rejected overlay must not mutate the field");
+        let err = cfg.apply(&parse(r#"{"c": 0}"#).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("'c'"), "{err}");
+
+        let mut scfg = ServerConfig::default();
+        let err = scfg
+            .apply(&parse(r#"{"corrupt_rate": 1.5}"#).unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("'corrupt_rate'"), "{err}");
+        assert!(scfg.apply(&parse(r#"{"corrupt_rate": 0.1}"#).unwrap()).is_ok());
+        assert_eq!(scfg.corrupt_rate, 0.1);
+        assert!(scfg.apply(&parse(r#"{"decode_workers": 0}"#).unwrap()).is_err());
     }
 }

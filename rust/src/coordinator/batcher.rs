@@ -53,6 +53,8 @@ pub fn next_batch<T>(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use std::sync::mpsc;
     use std::thread;

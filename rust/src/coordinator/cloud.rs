@@ -74,7 +74,7 @@ impl CloudNode {
             parsed.channels,
             self.cfg.c
         );
-        let q = container::unpack(&parsed);
+        let q = container::unpack(&parsed).context("frame payload decode")?;
         let zhat_chw = quant::dequantize(&q);
         let zhat = chw_to_hwc(&zhat_chw);
         let (h, w, c) = (q.h, q.w, q.c);

@@ -62,6 +62,11 @@ impl Pipeline {
 
     /// Evaluate mAP + mean rate over a set of samples.
     pub fn evaluate_set(&self, samples: &[Sample]) -> Result<(MapResult, f64)> {
+        anyhow::ensure!(
+            !samples.is_empty(),
+            "evaluate_set called with an empty sample slice — the mean \
+             rate would be 0/0"
+        );
         let mut evals = Vec::with_capacity(samples.len());
         let mut total_bytes = 0usize;
         for s in samples {
@@ -103,6 +108,10 @@ impl CloudOnly {
     }
 
     pub fn evaluate_set(&self, samples: &[Sample]) -> Result<MapResult> {
+        anyhow::ensure!(
+            !samples.is_empty(),
+            "evaluate_set called with an empty sample slice"
+        );
         let mut evals = Vec::with_capacity(samples.len());
         for s in samples {
             evals.push(ImageEval {

@@ -53,6 +53,9 @@ struct DecodedMsg {
 #[derive(Debug)]
 pub struct ServerReport {
     pub requests: usize,
+    /// Frames dropped by the decode stage (corrupt/truncated); the run
+    /// still completes — `requests` counts completions + drops.
+    pub dropped: usize,
     pub wall_seconds: f64,
     pub throughput_rps: f64,
     pub mean_batch_size: f64,
@@ -88,6 +91,13 @@ pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerRe
                         std::rc::Rc::new(Engine::new(&pcfg.artifact_dir)?);
                     let edge = EdgeNode::new(engine, stats, pcfg.clone())?;
                     let mut rng = crate::util::SplitMix64::new(0xA221);
+                    // deterministic fault injection (scfg.corrupt_rate of
+                    // frames are mangled in "transit") to exercise the
+                    // decode stage's drop path end to end
+                    let mut fault_rng = crate::util::SplitMix64::new(0xFA11);
+                    let mut corruptor =
+                        crate::codec::faultgen::Corruptor::new(0xC011A95E);
+                    let injected_c = registry.counter("frames_corrupted_injected");
                     let edge_h = registry.histogram("1_edge_total");
                     let mut next_arrival = Instant::now();
                     // MMPP-2: alternate ON (burst_factor x rate) and OFF
@@ -111,7 +121,13 @@ pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerRe
                         }
                         let t_arrival = Instant::now();
                         let img = &images[id % images.len()];
-                        let (frame, _trace) = edge.process(img)?;
+                        let (mut frame, _trace) = edge.process(img)?;
+                        if scfg.corrupt_rate > 0.0
+                            && fault_rng.next_f64() < scfg.corrupt_rate
+                        {
+                            frame = corruptor.corrupt(&frame);
+                            injected_c.inc();
+                        }
                         let t_edge_done = Instant::now();
                         edge_h.record_us(
                             (t_edge_done - t_arrival).as_secs_f64() * 1e6,
@@ -139,20 +155,48 @@ pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerRe
             let pcfg = pcfg.clone();
             scope.spawn(move || {
                 let h = registry.histogram("2_decode");
+                let dropped_c = registry.counter("frames_dropped");
                 loop {
-                    let msg = match frame_rx.lock().unwrap().recv() {
+                    // recover a poisoned mutex: the queue itself is
+                    // always structurally sound, and one panicked peer
+                    // must not wedge the whole decode pool
+                    let msg = {
+                        let rx = frame_rx
+                            .lock()
+                            .unwrap_or_else(|poisoned| poisoned.into_inner());
+                        rx.recv()
+                    };
+                    let msg = match msg {
                         Ok(m) => m,
                         Err(_) => break,
                     };
                     let t0 = Instant::now();
-                    let parsed = match crate::codec::container::parse(&msg.frame) {
-                        Ok(p) => p,
+                    // a corrupt or truncated frame is dropped and counted
+                    // — the server keeps serving
+                    let q = match crate::codec::container::parse(&msg.frame)
+                        .and_then(|parsed| crate::codec::container::unpack(&parsed))
+                    {
+                        Ok(q) => q,
                         Err(e) => {
-                            log::error!("decode worker {wid}: bad frame: {e:#}");
+                            log::warn!(
+                                "decode worker {wid}: dropping frame {}: {e}",
+                                msg.id
+                            );
+                            dropped_c.inc();
                             continue;
                         }
                     };
-                    let q = crate::codec::container::unpack(&parsed);
+                    if q.c != pcfg.c {
+                        log::warn!(
+                            "decode worker {wid}: dropping frame {}: C={} but \
+                             pipeline expects C={}",
+                            msg.id,
+                            q.c,
+                            pcfg.c
+                        );
+                        dropped_c.inc();
+                        continue;
+                    }
                     let zhat_chw = crate::quant::dequantize(&q);
                     let zhat = crate::tensor::chw_to_hwc(&zhat_chw)
                         .reshape(&[1, q.h, q.w, pcfg.c]);
@@ -214,14 +258,11 @@ pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerRe
                                 (t0 - msg.t_decoded).as_secs_f64() * 1e6,
                             );
                         }
-                        let use_batch8 = batch.len() > 1
-                            && baf8.is_some()
-                            && tail8.is_some();
-                        if use_batch8 {
+                        if let (Some(baf8), Some(tail8), true) =
+                            (baf8.as_ref(), tail8.as_ref(), batch.len() > 1)
+                        {
                             // pad to batch 8, one PJRT call for BaF, one
                             // for the tail; consolidation per item.
-                            let baf8 = baf8.as_ref().unwrap();
-                            let tail8 = tail8.as_ref().unwrap();
                             let cin = pcfg.c;
                             let mut zin = Tensor::zeros(&[8, zh, zw, cin]);
                             for (k, msg) in batch.iter().enumerate() {
@@ -284,18 +325,24 @@ pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerRe
         drop(done_tx);
 
         // ---- collector (this thread) ----
+        // Completions arrive on done_rx; dropped frames are only visible
+        // through the counter, so run until every request is accounted
+        // for (completed + dropped) or the pipeline shuts down (channel
+        // closes when edge -> decode -> cloud have all drained).
         let e2e = registry.histogram("5_e2e");
+        let dropped_c = registry.counter("frames_dropped");
         let mut completed = 0usize;
         while let Ok((_id, t_arrival, t_done, _nboxes)) = done_rx.recv() {
             e2e.record_us((t_done - t_arrival).as_secs_f64() * 1e6);
             completed += 1;
-            if completed == scfg.num_requests {
+            if completed + dropped_c.get() as usize >= scfg.num_requests {
                 break;
             }
         }
+        let dropped = dropped_c.get() as usize;
         anyhow::ensure!(
-            completed == scfg.num_requests,
-            "served {completed} of {} requests",
+            completed + dropped == scfg.num_requests,
+            "served {completed} + dropped {dropped} of {} requests",
             scfg.num_requests
         );
         Ok(())
@@ -305,8 +352,10 @@ pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerRe
     let wall = t_start.elapsed().as_secs_f64();
     let batches = registry.counter("batches").get().max(1);
     let items = registry.counter("batched_items").get();
+    let dropped = registry.counter("frames_dropped").get() as usize;
     Ok(ServerReport {
         requests: scfg.num_requests,
+        dropped,
         wall_seconds: wall,
         throughput_rps: scfg.num_requests as f64 / wall,
         mean_batch_size: items as f64 / batches as f64,

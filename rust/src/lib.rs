@@ -24,21 +24,46 @@
 //! See DESIGN.md for the architecture and experiment index, and
 //! EXPERIMENTS.md for reproduction results.
 
+// The decode path (codec) and the serving stack (coordinator) carry a
+// no-panic contract: attacker-controlled bytes must never unwrap. Tier-1
+// CI enforces it with `cargo clippy --all-targets -- -D clippy::unwrap_used
+// -D clippy::expect_used`; the modules outside that contract opt out
+// explicitly below (their inputs are trusted, produced by this crate).
+// Test modules everywhere opt back in via inner `#![allow]`.
+
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod bench;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod cli;
+#[deny(clippy::unwrap_used, clippy::expect_used)]
 pub mod codec;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod config;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod experiments;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod golden;
+#[deny(clippy::unwrap_used, clippy::expect_used)]
 pub mod coordinator;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod data;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod eval;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod json;
+#[deny(clippy::unwrap_used, clippy::expect_used)]
 pub mod metrics;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod quant;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod runtime;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod selection;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod tensor;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod tile;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod tio;
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod util;

@@ -30,7 +30,8 @@ COMMANDS
   ablate     E6: consolidation + selection-policy ablations
   serve      E5: pipelined serving demo with Poisson arrivals
              --rate RPS --requests N --batch-cap B --deadline-us US
-             --decode-workers N
+             --decode-workers N --corrupt-rate P (inject faults; frames
+             that fail to decode are dropped and counted, not fatal)
   encode     compress a CHW f32 .npy tensor into a .baf frame
              <in.npy> <out.baf> [--n BITS] [--codec NAME] [--qp QP]
   decode     decompress a .baf frame back to a CHW f32 .npy
@@ -55,9 +56,14 @@ fn pipeline_cfg(args: &Args) -> Result<PipelineConfig> {
         ..Default::default()
     };
     if let Some(c) = args.opt_parse::<usize>("c")? {
+        anyhow::ensure!(c >= 1, "--c: must be >= 1, got {c}");
         cfg.c = c;
     }
     if let Some(n) = args.opt_parse::<u8>("n")? {
+        anyhow::ensure!(
+            (1..=16).contains(&n),
+            "--n: bit depth must be in 1..=16, got {n}"
+        );
         cfg.n = n;
     }
     if let Some(codec) = args.opt("codec") {
@@ -174,6 +180,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
         "artifacts", "c", "n", "codec", "qp", "policy", "no-consolidate", "rate",
         "requests", "batch-cap", "deadline-us", "decode-workers", "burst",
+        "corrupt-rate",
     ])?;
     let pcfg = pipeline_cfg(args)?;
     let mut scfg = ServerConfig::default();
@@ -195,6 +202,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(v) = args.opt_parse::<f64>("burst")? {
         scfg.burst_factor = v;
     }
+    if let Some(v) = args.opt_parse::<f64>("corrupt-rate")? {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&v),
+            "--corrupt-rate: must be in 0.0..=1.0, got {v}"
+        );
+        scfg.corrupt_rate = v;
+    }
     println!(
         "serving: {} requests @ {}/s, batch cap {}, deadline {} us, {} decode workers",
         scfg.num_requests,
@@ -203,10 +217,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         scfg.batch_deadline_us,
         scfg.decode_workers
     );
+    if scfg.corrupt_rate > 0.0 {
+        println!("fault injection: corrupting ~{:.1}% of frames", scfg.corrupt_rate * 100.0);
+    }
     let report = run_server(&pcfg, &scfg)?;
     println!(
-        "\nserved {} requests in {:.2}s -> {:.1} req/s (mean batch {:.2})",
-        report.requests, report.wall_seconds, report.throughput_rps, report.mean_batch_size
+        "\nserved {} requests in {:.2}s -> {:.1} req/s (mean batch {:.2}, {} dropped)",
+        report.requests,
+        report.wall_seconds,
+        report.throughput_rps,
+        report.mean_batch_size,
+        report.dropped
     );
     println!("\n{}", report.table);
     Ok(())
@@ -242,7 +263,7 @@ fn cmd_decode(args: &Args) -> Result<()> {
     };
     let bytes = std::fs::read(input)?;
     let frame = baf::codec::container::parse(&bytes)?;
-    let q = baf::codec::container::unpack(&frame);
+    let q = baf::codec::container::unpack(&frame)?;
     let t = baf::quant::dequantize(&q);
     baf::tio::write_f32(std::path::Path::new(output), &t)?;
     println!(

@@ -128,14 +128,20 @@ pub struct Registry {
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
+/// Recover the map even if a recording thread panicked mid-insert: the
+/// maps only grow, so the inner state is always usable.
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 impl Registry {
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
-        let mut m = self.counters.lock().unwrap();
+        let mut m = lock_recover(&self.counters);
         m.entry(name.to_string()).or_default().clone()
     }
 
     pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
-        let mut m = self.histograms.lock().unwrap();
+        let mut m = lock_recover(&self.histograms);
         m.entry(name.to_string())
             .or_insert_with(|| std::sync::Arc::new(Histogram::new()))
             .clone()
@@ -145,23 +151,25 @@ impl Registry {
     pub fn export(&self) -> Value {
         let mut v = Value::obj();
         let mut counters = Value::obj();
-        for (k, c) in self.counters.lock().unwrap().iter() {
+        for (k, c) in lock_recover(&self.counters).iter() {
             counters.set(k, c.get());
         }
         let mut hists = Value::obj();
-        for (k, h) in self.histograms.lock().unwrap().iter() {
+        for (k, h) in lock_recover(&self.histograms).iter() {
             hists.set(k, h.summary());
         }
         v.set("counters", counters).set("latencies", hists);
         v
     }
 
-    /// Human-readable latency table (fixed-width markdown).
+    /// Human-readable metrics table (fixed-width markdown): latency
+    /// histograms followed by the counters (drop/corruption accounting
+    /// included).
     pub fn table(&self) -> String {
         let mut out = String::from(
             "| stage | count | mean(us) | p50(us) | p95(us) | p99(us) | max(us) |\n|---|---|---|---|---|---|---|\n",
         );
-        for (k, h) in self.histograms.lock().unwrap().iter() {
+        for (k, h) in lock_recover(&self.histograms).iter() {
             out.push_str(&format!(
                 "| {k} | {} | {:.0} | {:.0} | {:.0} | {:.0} | {:.0} |\n",
                 h.count(),
@@ -172,12 +180,21 @@ impl Registry {
                 h.max_us()
             ));
         }
+        let counters = lock_recover(&self.counters);
+        if !counters.is_empty() {
+            out.push_str("\n| counter | value |\n|---|---|\n");
+            for (k, c) in counters.iter() {
+                out.push_str(&format!("| {k} | {} |\n", c.get()));
+            }
+        }
         out
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     #[test]
@@ -223,6 +240,8 @@ mod tests {
             Some(3.0)
         );
         assert!(v.get("latencies").unwrap().get("e2e").is_some());
-        assert!(r.table().contains("e2e"));
+        let table = r.table();
+        assert!(table.contains("e2e"));
+        assert!(table.contains("requests"), "counters must appear in the table");
     }
 }

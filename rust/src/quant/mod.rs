@@ -34,7 +34,7 @@ pub struct QuantizedTensor {
     pub c: usize,
     pub h: usize,
     pub w: usize,
-    /// Bit depth n (2..=16 supported end to end).
+    /// Bit depth n (1..=16 supported end to end).
     pub n: u8,
     pub ranges: Vec<ChannelRange>,
 }
@@ -65,7 +65,7 @@ fn round_half_even(x: f32) -> f32 {
 
 /// Eq. 4: quantize a channel-major (C, H, W) tensor to n bits per channel.
 pub fn quantize(z: &Tensor, n: u8) -> QuantizedTensor {
-    assert!((2..=16).contains(&n), "n out of range: {n}");
+    assert!((1..=16).contains(&n), "n out of range: {n}");
     let s = z.shape();
     assert_eq!(s.len(), 3);
     let (c, h, w) = (s[0], s[1], s[2]);
@@ -161,6 +161,8 @@ pub fn consolidation_rate(z_tilde: &Tensor, q: &QuantizedTensor) -> f64 {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::util::SplitMix64;
 
@@ -174,7 +176,7 @@ mod tests {
 
     #[test]
     fn quantize_dequantize_error_bounded_by_half_step() {
-        for n in [2u8, 4, 8, 12] {
+        for n in [1u8, 2, 4, 8, 12] {
             let z = random_chw(4, 8, 8, n as u64);
             let q = quantize(&z, n);
             let zh = dequantize(&q);

@@ -2,6 +2,9 @@
 //! proptest is unavailable offline). Each property runs over hundreds of
 //! randomized cases seeded deterministically — failures print the seed.
 
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use baf::codec::{container, CodecKind, ImageMeta};
 use baf::quant::{consolidate, dequantize, quantize};
 use baf::tensor::Tensor;
@@ -18,7 +21,7 @@ fn random_tensor(r: &mut SplitMix64, c: usize, h: usize, w: usize) -> Tensor {
 }
 
 /// PROPERTY: every lossless codec roundtrips every tensor exactly,
-/// through the full container, for all supported bit depths.
+/// through the full container, for every supported bit depth 1..=16.
 #[test]
 fn prop_lossless_container_roundtrip() {
     let mut r = SplitMix64::new(0xC0DEC);
@@ -26,18 +29,51 @@ fn prop_lossless_container_roundtrip() {
         let c = [1usize, 3, 4, 8, 16][(r.next_u64() % 5) as usize];
         let h = [4usize, 8, 16][(r.next_u64() % 3) as usize];
         let w = [4usize, 8, 16][(r.next_u64() % 3) as usize];
-        let n = [2u8, 3, 4, 6, 8, 10, 12][(r.next_u64() % 7) as usize];
+        let n = (r.next_u64() % 16 + 1) as u8;
         let z = random_tensor(&mut r, c, h, w);
         let q = quantize(&z, n);
-        for codec in [CodecKind::Tlc, CodecKind::PngLike, CodecKind::ZstdRaw] {
+        for codec in [
+            CodecKind::Tlc,
+            CodecKind::PngLike,
+            CodecKind::ZstdRaw,
+            CodecKind::TlcIc,
+        ] {
             let frame = container::pack(&q, codec, 0);
             let parsed = container::parse(&frame)
                 .unwrap_or_else(|e| panic!("case {case} {codec:?}: {e}"));
-            let back = container::unpack(&parsed);
+            let back = container::unpack(&parsed)
+                .unwrap_or_else(|e| panic!("case {case} {codec:?}: {e}"));
             assert_eq!(back.bins, q.bins, "case {case} {codec:?} n={n} c={c}");
             assert_eq!(back.ranges, q.ranges, "case {case} {codec:?} ranges");
             assert_eq!((back.c, back.h, back.w, back.n), (c, h, w, n));
         }
+    }
+}
+
+/// PROPERTY: the lossy codec (the fifth `CodecKind`) also packs and
+/// unpacks through the container for all bit depths — geometry and
+/// side info are preserved even though sample values are approximated.
+#[test]
+fn prop_lossy_container_roundtrip_geometry() {
+    let mut r = SplitMix64::new(0x10551);
+    for case in 0..40 {
+        let c = [1usize, 3, 8][(r.next_u64() % 3) as usize];
+        let n = (r.next_u64() % 16 + 1) as u8;
+        let qp = (r.next_u64() % 40) as u8;
+        let z = random_tensor(&mut r, c, 8, 8);
+        let q = quantize(&z, n);
+        let frame = container::pack(&q, CodecKind::Mic, qp);
+        let parsed = container::parse(&frame)
+            .unwrap_or_else(|e| panic!("case {case} qp={qp}: {e}"));
+        let back = container::unpack(&parsed)
+            .unwrap_or_else(|e| panic!("case {case} qp={qp}: {e}"));
+        assert_eq!((back.c, back.h, back.w, back.n), (c, 8, 8, n));
+        assert_eq!(back.ranges, q.ranges, "case {case} ranges");
+        let cap = (1u32 << n) - 1;
+        assert!(
+            back.bins.iter().all(|&b| u32::from(b) <= cap),
+            "case {case}: lossy decode exceeded n={n} range"
+        );
     }
 }
 
@@ -145,7 +181,7 @@ fn prop_lossy_distortion_monotone_in_qp() {
         let mut prev_mse = -1.0f64;
         for qp in [2u8, 14, 26, 38] {
             let enc = CodecKind::Mic.encode_image(&samples, w, h, 8, qp);
-            let dec = CodecKind::Mic.decode_image(&enc, &meta, qp);
+            let dec = CodecKind::Mic.decode_image(&enc, &meta, qp).unwrap();
             let mse: f64 = samples
                 .iter()
                 .zip(&dec)
@@ -160,6 +196,30 @@ fn prop_lossy_distortion_monotone_in_qp() {
                 "distortion decreased with higher QP: {mse} < {prev_mse}"
             );
             prev_mse = mse;
+        }
+    }
+}
+
+/// PROPERTY: a frame with the wrong magic or an unsupported version is
+/// rejected even when its CRC is internally consistent (i.e. the check
+/// is on the fields themselves, not a side effect of the checksum).
+#[test]
+fn prop_mismatched_magic_and_version_rejected() {
+    let mut r = SplitMix64::new(0x3A61);
+    let z = random_tensor(&mut r, 4, 8, 8);
+    let q = quantize(&z, 6);
+    for codec in [CodecKind::Tlc, CodecKind::PngLike, CodecKind::ZstdRaw] {
+        let frame = container::pack(&q, codec, 0);
+        for _ in 0..30 {
+            // corrupt one of the 4 magic bytes, or the version byte
+            let pos = (r.next_u64() % 5) as usize;
+            let mut bad = frame.clone();
+            bad[pos] = bad[pos].wrapping_add((r.next_u64() % 255 + 1) as u8);
+            container::refresh_crc(&mut bad);
+            assert!(
+                container::parse(&bad).is_err(),
+                "{codec:?}: altered byte {pos} accepted"
+            );
         }
     }
 }

@@ -4,6 +4,9 @@
 //! loud message) when the artifact directory is missing so that pure-Rust
 //! CI can still run `cargo test`.
 
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use std::path::PathBuf;
 
 fn artifact_dir() -> Option<PathBuf> {

@@ -1,5 +1,8 @@
 //! Manifest parsing against a synthetic artifact directory (no PJRT).
 
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use baf::runtime::Manifest;
 
 fn write_fixture(dir: &std::path::Path) {

@@ -1,6 +1,8 @@
 //! End-to-end integration tests over the PJRT runtime (require artifacts;
 //! skipped with a message otherwise).
 
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
 use baf::codec::CodecKind;
 use baf::config::{PipelineConfig, ServerConfig};
 use baf::coordinator::{run_server, CloudOnly, Pipeline};
@@ -147,14 +149,60 @@ fn server_smoke() {
             decode_workers: 2,
             queue_depth: 16,
             burst_factor: 1.0,
+            corrupt_rate: 0.0,
         };
         let report = run_server(&pcfg, &scfg).unwrap();
         assert_eq!(report.requests, 32);
+        assert_eq!(report.dropped, 0);
         assert!(report.throughput_rps > 1.0);
         let e2e = report.metrics.get("latencies").unwrap().get("5_e2e").unwrap();
         assert_eq!(e2e.get("count").unwrap().as_usize(), Some(32));
         assert!(e2e.get("p95_us").unwrap().as_f64().unwrap() > 0.0);
     }
+}
+
+/// With 10% of frames corrupted in flight the server must still complete
+/// the run: corrupt frames are dropped and counted (never fatal), every
+/// clean frame is served, and the drop count shows up in the metrics
+/// table.
+#[test]
+fn server_survives_fault_injection() {
+    let Some(dir) = artifact_dir() else { return };
+    let pcfg = PipelineConfig { artifact_dir: dir, ..Default::default() };
+    let scfg = ServerConfig {
+        batch_cap: 4,
+        batch_deadline_us: 1000,
+        arrival_rate: 400.0,
+        num_requests: 64,
+        decode_workers: 2,
+        queue_depth: 16,
+        burst_factor: 1.0,
+        corrupt_rate: 0.10,
+    };
+    let report = run_server(&pcfg, &scfg).unwrap();
+    assert_eq!(report.requests, 64, "every request must be accounted for");
+    assert!(
+        report.dropped > 0 && report.dropped < 64,
+        "with 64 requests at 10% corruption, some (not all) frames must be \
+         dropped; got {}",
+        report.dropped
+    );
+    let e2e = report.metrics.get("latencies").unwrap().get("5_e2e").unwrap();
+    assert_eq!(
+        e2e.get("count").unwrap().as_usize(),
+        Some(64 - report.dropped),
+        "clean frames must all complete"
+    );
+    let counters = report.metrics.get("counters").unwrap();
+    assert_eq!(
+        counters.get("frames_dropped").unwrap().as_usize(),
+        Some(report.dropped)
+    );
+    assert!(
+        report.table.contains("frames_dropped"),
+        "drop count must appear in the metrics table:\n{}",
+        report.table
+    );
 }
 
 /// Different selection policies change the transmitted set but the
