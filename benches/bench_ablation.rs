@@ -7,12 +7,13 @@
 //!     using the Pallas consolidate kernel in-graph) — execution-time
 //!     comparison of the two deployments.
 //!
-//! Run: `cargo bench --bench bench_ablation`.
+//! Run: `cargo bench --bench bench_ablation` (`--json-out [DIR]` writes
+//! `BENCH_ablation.json`).
 
 
 #![allow(clippy::unwrap_used, clippy::expect_used)]
 
-use baf::bench::{fmt_stats, time_fn};
+use baf::bench::{fmt_stats, json_out_dir, time_fn, JsonReport};
 use baf::codec::CodecKind;
 use baf::experiments::Context;
 use baf::quant;
@@ -23,6 +24,8 @@ use std::rc::Rc;
 
 fn main() -> anyhow::Result<()> {
     baf::util::logging::init();
+    let json_dir = json_out_dir();
+    let mut report = JsonReport::new("ablation");
     let dir = baf::runtime::default_artifact_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("[bench_ablation] no artifacts — run `make artifacts` first");
@@ -48,9 +51,13 @@ fn main() -> anyhow::Result<()> {
             rand_map = map;
         }
         println!("| {} | {map:.4} | {bytes:.0} |", p.name());
+        let case = format!("policy_{}", p.name());
+        report.metric(&case, "map_50", map);
+        report.metric(&case, "bytes", bytes);
     }
     let (baf_map, _) = ctx.point(16, 8, CodecKind::Tlc, 0)?;
     println!("| correlation + BaF | {baf_map:.4} | (same rate) |");
+    report.metric("policy_correlation_baf", "map_50", baf_map);
     assert!(
         baf_map > corr_map,
         "BaF must improve over no-prediction ({baf_map} vs {corr_map})"
@@ -63,6 +70,10 @@ fn main() -> anyhow::Result<()> {
     for n in [4u8, 6, 8] {
         let (on, off, rate) = ctx.consolidation_ablation(16, n)?;
         println!("| {n} | {on:.4} | {off:.4} | {rate:.4} |");
+        let case = format!("consolidation_n{n}");
+        report.metric(&case, "map_on", on);
+        report.metric(&case, "map_off", off);
+        report.metric(&case, "clamp_rate", rate);
     }
 
     // ---- split vs fused cloud graph ----
@@ -107,6 +118,7 @@ fn main() -> anyhow::Result<()> {
         2000.0,
     );
     println!("{}", fmt_stats("split graph (2 PJRT calls + rust Eq.6)", &split_stats));
+    report.stats("split_graph", &split_stats);
 
     if engine.load("fused_c16_n8_b1").is_ok() {
         let fused = engine.load("fused_c16_n8_b1")?;
@@ -132,8 +144,19 @@ fn main() -> anyhow::Result<()> {
             "fused / split mean ratio: {:.3}",
             fused_stats.mean_us / split_stats.mean_us
         );
+        report.stats("fused_graph", &fused_stats);
+        report.metric(
+            "fused_graph",
+            "fused_split_ratio",
+            fused_stats.mean_us / split_stats.mean_us,
+        );
     } else {
         println!("(fused artifact not present)");
+    }
+    if let Some(dir) = json_dir {
+        std::fs::create_dir_all(&dir)?;
+        let path = report.write(&dir)?;
+        println!("JSON results -> {}", path.display());
     }
     Ok(())
 }

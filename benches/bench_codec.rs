@@ -1,16 +1,25 @@
 //! E4 — lossless codec comparison on tiled quantized tensors (the [5]
 //! comparison): TLC (FLIF stand-in) vs PNG-like vs zstd, rate and
 //! throughput, across C and n. Also micro-benchmarks of the codec hot
-//! paths on synthetic planes (used by the §Perf iteration log).
+//! paths on synthetic planes (used by the §Perf iteration log), and the
+//! striped-container scaling section: encode+decode throughput vs stripe
+//! count K on a 64-channel tensor, with the acceptance checks
+//! (size within 1% of v1, zero steady-state codec allocations, and —
+//! on machines with >= 4 cores — >= 2x combined throughput at K=4).
 //!
-//! Run: `cargo bench --bench bench_codec`.
-
+//! Run: `cargo bench --bench bench_codec` (add `--smoke` for a quick
+//! tier-1 pass, `--json-out [DIR]` for `BENCH_codec.json`).
 
 #![allow(clippy::unwrap_used, clippy::expect_used)]
 
-use baf::bench::{fmt_stats, time_fn};
+use baf::bench::{fmt_stats, json_out_from, time_fn, JsonReport};
+use baf::codec::container::{pack, pack_v2_with, parse, unpack_with};
+use baf::codec::scratch::ScratchPool;
 use baf::codec::{CodecKind, ImageMeta};
 use baf::experiments::{codec_table, codec_table_fmt, Context};
+use baf::quant::{quantize, QuantizedTensor};
+use baf::runtime::pool::WorkerPool;
+use baf::tensor::Tensor;
 use baf::util::SplitMix64;
 
 fn synthetic_plane(w: usize, h: usize, n: u8, seed: u64) -> Vec<u16> {
@@ -29,12 +38,42 @@ fn synthetic_plane(w: usize, h: usize, n: u8, seed: u64) -> Vec<u16> {
         .collect()
 }
 
+/// A 64-channel synthetic tensor shaped like a BN output (smooth per
+/// channel, channel-correlated), quantized to n bits.
+fn synthetic_quant(c: usize, h: usize, w: usize, n: u8) -> QuantizedTensor {
+    let mut data = Vec::with_capacity(c * h * w);
+    for ch in 0..c {
+        let plane = synthetic_plane(w, h, 12, 1000 + ch as u64);
+        let scale = 1.0 + (ch as f32) * 0.01;
+        data.extend(plane.iter().map(|&s| s as f32 / 4096.0 * scale - 0.5));
+    }
+    quantize(&Tensor::from_vec(&[c, h, w], data), n)
+}
+
+/// One full codec round trip of a striped frame, recycling every pooled
+/// buffer — the steady-state serving loop in miniature.
+fn roundtrip(q: &QuantizedTensor, k: usize, pool: &WorkerPool, scratch: &ScratchPool) -> usize {
+    let frame = pack_v2_with(q, CodecKind::Tlc, 0, k, pool, scratch);
+    let len = frame.len();
+    let parsed = parse(&frame).unwrap();
+    let q2 = unpack_with(&parsed, pool, scratch).unwrap();
+    assert_eq!(q2.bins, q.bins, "striped roundtrip must be lossless");
+    scratch.put_u16(q2.bins);
+    scratch.put_u8(frame);
+    len
+}
+
 fn main() -> anyhow::Result<()> {
     baf::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let json_dir = json_out_from(&argv);
+    let mut report = JsonReport::new("codec");
     let dir = baf::runtime::default_artifact_dir();
+    let budget = if smoke { 30.0 } else { 300.0 };
 
     // ---- real-tensor comparison table (E4 proper) ----
-    if dir.join("manifest.json").exists() {
+    if !smoke && dir.join("manifest.json").exists() {
         let ctx = Context::open(&dir, 32)?;
         let rows = codec_table(&ctx, &[8, 16, 32], &[2, 4, 6, 8])?;
         println!("{}", codec_table_fmt(&rows));
@@ -50,7 +89,7 @@ fn main() -> anyhow::Result<()> {
                 "TLC rate must grow with n at C={c}: {tlc:?}"
             );
         }
-    } else {
+    } else if !smoke {
         eprintln!("[bench_codec] no artifacts — skipping real-tensor table");
     }
 
@@ -67,7 +106,7 @@ fn main() -> anyhow::Result<()> {
                 },
                 3,
                 20,
-                300.0,
+                budget,
             );
             println!(
                 "{}  ({} bytes, {:.1} MB/s enc)",
@@ -82,29 +121,142 @@ fn main() -> anyhow::Result<()> {
                 },
                 3,
                 20,
-                300.0,
+                budget,
             );
             println!(
                 "{}  ({:.1} MB/s dec)",
                 fmt_stats(&format!("{} decode n={n}", codec.name()), &sd),
                 (w * h) as f64 / sd.mean_us
             );
+            let case = format!("{}_n{n}", codec.name());
+            report.stats(&format!("{case}_encode"), &s);
+            report.stats(&format!("{case}_decode"), &sd);
+            report.metric(&format!("{case}_encode"), "bytes", enc.len());
+            report.metric(
+                &format!("{case}_encode"),
+                "throughput_msamples_s",
+                (w * h) as f64 / s.mean_us,
+            );
+            report.metric(
+                &format!("{case}_decode"),
+                "throughput_msamples_s",
+                (w * h) as f64 / sd.mean_us,
+            );
         }
     }
-    // lossy codec RD sanity
-    println!("\nMIC lossy micro-bench (128x128 plane, n=8):");
-    let plane = synthetic_plane(w, h, 8, 7);
-    for qp in [4u8, 16, 28, 40] {
-        let enc = CodecKind::Mic.encode_image(&plane, w, h, 8, qp);
+
+    // ---- striped-container scaling (the parallel-codec tentpole) ----
+    // 64 channels of 48x48 -> a 384x384 tiled plane, the paper's C=64
+    // operating point. Encode+decode the same tensor at K stripes with a
+    // K-wide pool; the whole round trip recycles through one scratch pool.
+    println!("\nstriped container scaling (TLC, C=64, 48x48 channels):");
+    let q = synthetic_quant(64, 48, 48, 8);
+    let samples = (64 * 48 * 48) as f64;
+    let v1_len = pack(&q, CodecKind::Tlc, 0).len();
+    println!("  v1 frame: {v1_len} bytes");
+    report.metric("striped_summary", "v1_bytes", v1_len);
+    let scratch = ScratchPool::new();
+    let mut combined: Vec<(usize, f64)> = Vec::new();
+    for k in [1usize, 2, 4, 8] {
+        let pool = WorkerPool::new(k);
+        let len = roundtrip(&q, k, &pool, &scratch);
         let s = time_fn(
             || {
-                std::hint::black_box(CodecKind::Mic.encode_image(&plane, w, h, 8, qp));
+                std::hint::black_box(roundtrip(&q, k, &pool, &scratch));
             },
             2,
-            10,
-            200.0,
+            if smoke { 3 } else { 10 },
+            if smoke { 60.0 } else { 1500.0 },
         );
-        println!("{}  ({} bytes)", fmt_stats(&format!("mic encode qp={qp}"), &s), enc.len());
+        let tput = samples / s.mean_us; // Msamples/s through enc+dec
+        println!(
+            "{}  ({len} bytes, {tput:.1} Msamples/s enc+dec)",
+            fmt_stats(&format!("tlc striped K={k}"), &s)
+        );
+        let case = format!("striped_tlc_k{k}");
+        report.stats(&case, &s);
+        report.metric(&case, "bytes", len);
+        report.metric(&case, "throughput_msamples_s", tput);
+        report.metric(&case, "size_overhead_vs_v1", len as f64 / v1_len as f64 - 1.0);
+        combined.push((k, tput));
+        // acceptance: stripe restarts must stay within 1% of the v1
+        // bitstream at the paper-scale tensor for K <= 4
+        if k <= 4 {
+            assert!(
+                len as f64 <= v1_len as f64 * 1.01,
+                "K={k} frame is {len} bytes, more than 1% over v1's {v1_len}"
+            );
+        }
+    }
+
+    // acceptance: >= 2x combined throughput at K=4 vs K=1 — only
+    // meaningful when the machine actually has >= 4 cores
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let t1 = combined.iter().find(|(k, _)| *k == 1).map(|(_, t)| *t).unwrap();
+    let t4 = combined.iter().find(|(k, _)| *k == 4).map(|(_, t)| *t).unwrap();
+    let speedup = t4 / t1;
+    println!("  K=4 vs K=1 enc+dec speedup: {speedup:.2}x ({cores} cores)");
+    report.metric("striped_summary", "speedup_k4", speedup);
+    report.metric("striped_summary", "cores", cores);
+    if cores >= 4 && !smoke {
+        assert!(
+            speedup >= 2.0,
+            "striped codec must reach 2x at K=4 on {cores} cores, got {speedup:.2}x"
+        );
+    }
+
+    // acceptance: zero codec-layer allocations per frame at steady state
+    // — after warmup, further round trips must not add a single scratch
+    // miss (every take is served by a recycled buffer)
+    for _ in 0..5 {
+        roundtrip(&q, 4, &WorkerPool::new(4), &scratch);
+    }
+    let warm = scratch.stats();
+    for _ in 0..20 {
+        roundtrip(&q, 4, &WorkerPool::new(4), &scratch);
+    }
+    let steady = scratch.stats();
+    println!(
+        "  scratch after warmup: {} hits, {} misses (+{} misses over 20 steady frames)",
+        steady.hits,
+        steady.misses,
+        steady.misses - warm.misses
+    );
+    report.metric("striped_summary", "steady_state_misses", steady.misses - warm.misses);
+    assert_eq!(
+        steady.misses, warm.misses,
+        "steady-state round trips must not allocate (scratch misses grew)"
+    );
+
+    // ---- lossy codec RD sanity ----
+    if !smoke {
+        println!("\nMIC lossy micro-bench (128x128 plane, n=8):");
+        let plane = synthetic_plane(w, h, 8, 7);
+        for qp in [4u8, 16, 28, 40] {
+            let enc = CodecKind::Mic.encode_image(&plane, w, h, 8, qp);
+            let s = time_fn(
+                || {
+                    std::hint::black_box(CodecKind::Mic.encode_image(&plane, w, h, 8, qp));
+                },
+                2,
+                10,
+                200.0,
+            );
+            println!(
+                "{}  ({} bytes)",
+                fmt_stats(&format!("mic encode qp={qp}"), &s),
+                enc.len()
+            );
+            let case = format!("mic_qp{qp}");
+            report.stats(&case, &s);
+            report.metric(&case, "bytes", enc.len());
+        }
+    }
+
+    if let Some(dir) = json_dir {
+        std::fs::create_dir_all(&dir)?;
+        let path = report.write(&dir)?;
+        println!("\nJSON results -> {}", path.display());
     }
     Ok(())
 }

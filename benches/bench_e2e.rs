@@ -4,16 +4,21 @@
 //! split pipeline keeps the added (non-inference) work off the critical
 //! path and that batching the cloud stage lifts throughput.
 //!
-//! Run: `cargo bench --bench bench_e2e`.
+//! Run: `cargo bench --bench bench_e2e` (`--json-out [DIR]` writes
+//! `BENCH_e2e.json`).
 
 
 #![allow(clippy::unwrap_used, clippy::expect_used)]
 
+use baf::bench::{json_out_from, JsonReport};
 use baf::config::{PipelineConfig, ServerConfig};
 use baf::coordinator::run_server;
 
 fn main() -> anyhow::Result<()> {
     baf::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let json_dir = json_out_from(&argv);
+    let mut report = JsonReport::new("e2e");
     let dir = baf::runtime::default_artifact_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("[bench_e2e] no artifacts — run `make artifacts` first");
@@ -38,13 +43,19 @@ fn main() -> anyhow::Result<()> {
         let r = run_server(&pcfg, &scfg)?;
         let lat = r.metrics.get("latencies").unwrap();
         let e2e = lat.get("5_e2e").unwrap();
-        println!(
-            "| {cap} | {deadline} | {:.1} | {:.2} | {:.2} | {:.2} |",
-            r.throughput_rps,
-            r.mean_batch_size,
+        let (p50, p95) = (
             e2e.get("p50_us").unwrap().as_f64().unwrap() / 1e3,
             e2e.get("p95_us").unwrap().as_f64().unwrap() / 1e3,
         );
+        println!(
+            "| {cap} | {deadline} | {:.1} | {:.2} | {p50:.2} | {p95:.2} |",
+            r.throughput_rps, r.mean_batch_size,
+        );
+        let case = format!("batch_cap{cap}_dl{deadline}");
+        report.metric(&case, "throughput_rps", r.throughput_rps);
+        report.metric(&case, "mean_batch", r.mean_batch_size);
+        report.metric(&case, "p50_e2e_ms", p50);
+        report.metric(&case, "p95_e2e_ms", p95);
     }
 
     println!("\noffered-load scaling (batch cap 8, deadline 2 ms):");
@@ -64,12 +75,15 @@ fn main() -> anyhow::Result<()> {
         let r = run_server(&pcfg, &scfg)?;
         let lat = r.metrics.get("latencies").unwrap();
         let e2e = lat.get("5_e2e").unwrap();
-        println!(
-            "| {rate:.0} | {:.1} | {:.2} | {:.2} |",
-            r.throughput_rps,
+        let (p50, p95) = (
             e2e.get("p50_us").unwrap().as_f64().unwrap() / 1e3,
             e2e.get("p95_us").unwrap().as_f64().unwrap() / 1e3,
         );
+        println!("| {rate:.0} | {:.1} | {p50:.2} | {p95:.2} |", r.throughput_rps);
+        let case = format!("load_{rate:.0}rps");
+        report.metric(&case, "throughput_rps", r.throughput_rps);
+        report.metric(&case, "p50_e2e_ms", p50);
+        report.metric(&case, "p95_e2e_ms", p95);
     }
 
     println!("\nbursty arrivals (MMPP-2, mean 300/s, cap 8):");
@@ -89,13 +103,20 @@ fn main() -> anyhow::Result<()> {
         let r = run_server(&pcfg, &scfg)?;
         let lat = r.metrics.get("latencies").unwrap();
         let e2e = lat.get("5_e2e").unwrap();
-        println!(
-            "| {bf:.0} | {:.1} | {:.2} | {:.2} | {:.2} |",
-            r.throughput_rps,
+        let (p50, p95, p99) = (
             e2e.get("p50_us").unwrap().as_f64().unwrap() / 1e3,
             e2e.get("p95_us").unwrap().as_f64().unwrap() / 1e3,
             e2e.get("p99_us").unwrap().as_f64().unwrap() / 1e3,
         );
+        println!(
+            "| {bf:.0} | {:.1} | {p50:.2} | {p95:.2} | {p99:.2} |",
+            r.throughput_rps,
+        );
+        let case = format!("burst_{bf:.0}x");
+        report.metric(&case, "throughput_rps", r.throughput_rps);
+        report.metric(&case, "p50_e2e_ms", p50);
+        report.metric(&case, "p95_e2e_ms", p95);
+        report.metric(&case, "p99_e2e_ms", p99);
     }
 
     println!("\nfull stage table at 300/s, cap 8:");
@@ -111,5 +132,11 @@ fn main() -> anyhow::Result<()> {
     };
     let r = run_server(&pcfg, &scfg)?;
     println!("{}", r.table);
+
+    if let Some(dir) = json_dir {
+        std::fs::create_dir_all(&dir)?;
+        let path = report.write(&dir)?;
+        println!("JSON results -> {}", path.display());
+    }
     Ok(())
 }

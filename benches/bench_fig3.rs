@@ -5,15 +5,19 @@
 //! control that shows how much of the recovery is due to BaF itself.
 //!
 //! Run: `cargo bench --bench bench_fig3` (BAF_EVAL_IMAGES overrides the
-//! eval-set size; BAF_ARTIFACTS overrides the artifact dir).
+//! eval-set size; BAF_ARTIFACTS overrides the artifact dir;
+//! `--json-out [DIR]` writes `BENCH_fig3.json`).
 
 
 #![allow(clippy::unwrap_used, clippy::expect_used)]
 
+use baf::bench::{json_out_dir, JsonReport};
 use baf::experiments::{fig3, fig3_table, Context, DEFAULT_EVAL_IMAGES};
 
 fn main() -> anyhow::Result<()> {
     baf::util::logging::init();
+    let json_dir = json_out_dir();
+    let mut report = JsonReport::new("fig3");
     let images: usize = std::env::var("BAF_EVAL_IMAGES")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -23,6 +27,14 @@ fn main() -> anyhow::Result<()> {
     let ctx = Context::open(&dir, images)?;
     let (cloud_map, rows) = fig3(&ctx, &[4, 8, 16, 32, 64])?;
     println!("{}", fig3_table(cloud_map, &rows));
+    report.metric("cloud_only", "map_50", cloud_map);
+    for r in &rows {
+        let case = format!("c{}", r.c);
+        report.metric(&case, "map_50", r.map_50);
+        report.metric(&case, "beta_fill_map", r.beta_fill_map);
+        report.metric(&case, "delta_vs_cloud", r.delta_vs_cloud);
+        report.metric(&case, "mean_bytes", r.mean_bytes);
+    }
     // paper-shape assertions: monotone-ish saturation toward cloud-only
     let full = rows.last().expect("rows");
     assert!(
@@ -34,5 +46,10 @@ fn main() -> anyhow::Result<()> {
         rows.iter().all(|r| r.map_50 >= r.beta_fill_map - 0.02),
         "BaF must not lose to the no-prediction control"
     );
+    if let Some(dir) = json_dir {
+        std::fs::create_dir_all(&dir)?;
+        let path = report.write(&dir)?;
+        eprintln!("[bench_fig3] JSON results -> {}", path.display());
+    }
     Ok(())
 }

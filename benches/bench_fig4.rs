@@ -7,15 +7,19 @@
 //! bit-savings at <1 % and <2 % mAP loss and the BD-Bitrate-mAP of BaF vs
 //! the all-channel baseline (paper: 62 % / 75 % savings; >90 % BD-rate).
 //!
-//! Run: `cargo bench --bench bench_fig4`.
+//! Run: `cargo bench --bench bench_fig4` (`--json-out [DIR]` writes
+//! `BENCH_fig4.json`).
 
 
 #![allow(clippy::unwrap_used, clippy::expect_used)]
 
+use baf::bench::{json_out_dir, JsonReport};
 use baf::experiments::{fig4, fig4_json, fig4_table, Context, DEFAULT_EVAL_IMAGES};
 
 fn main() -> anyhow::Result<()> {
     baf::util::logging::init();
+    let json_dir = json_out_dir();
+    let mut report = JsonReport::new("fig4");
     let images: usize = std::env::var("BAF_EVAL_IMAGES")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -39,6 +43,38 @@ fn main() -> anyhow::Result<()> {
     );
     if let Some(bd) = r.bd_rate_vs_all {
         assert!(bd < 0.0, "BaF should save bits vs all-channel lossy (bd={bd})");
+    }
+
+    report.metric("cloud_only", "map_50", r.cloud_map);
+    report.metric("cloud_only", "bytes", r.cloud_bytes);
+    for (n, p) in &r.baf_lossless {
+        let case = format!("baf_lossless_n{n}");
+        report.metric(&case, "bytes", p.rate);
+        report.metric(&case, "map_50", p.map);
+    }
+    for (qp, p) in &r.baf_lossy6 {
+        let case = format!("baf_lossy6_qp{qp}");
+        report.metric(&case, "bytes", p.rate);
+        report.metric(&case, "map_50", p.map);
+    }
+    for (qp, p) in &r.all_lossy {
+        let case = format!("all_lossy_qp{qp}");
+        report.metric(&case, "bytes", p.rate);
+        report.metric(&case, "map_50", p.map);
+    }
+    if let Some((sav, _)) = r.savings_1pct {
+        report.metric("headline", "savings_1pct", sav);
+    }
+    if let Some((sav, _)) = r.savings_2pct {
+        report.metric("headline", "savings_2pct", sav);
+    }
+    if let Some(bd) = r.bd_rate_vs_all {
+        report.metric("headline", "bd_rate_vs_all_pct", bd);
+    }
+    if let Some(dir) = json_dir {
+        std::fs::create_dir_all(&dir)?;
+        let path = report.write(&dir)?;
+        eprintln!("[bench_fig4] JSON results -> {}", path.display());
     }
     Ok(())
 }

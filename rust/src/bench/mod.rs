@@ -3,7 +3,15 @@
 //! `cargo bench` binaries (benches/*.rs, harness = false) use this to get
 //! warmup, repetition, and robust statistics, and to emit the markdown
 //! tables EXPERIMENTS.md records.
+//!
+//! Every bench binary also supports `--json-out [DIR]` (or
+//! `--json-out=DIR`): build a [`JsonReport`], record each case's
+//! [`Stats`] and derived metrics, and [`JsonReport::write`] emits
+//! `BENCH_<name>.json` — machine-readable mean/median/p95/throughput per
+//! case, so CI can diff runs instead of scraping stdout tables.
 
+use crate::json::Value;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 /// Timing statistics over repeated runs (all in microseconds).
@@ -70,6 +78,96 @@ pub fn fmt_stats(name: &str, s: &Stats) -> String {
     )
 }
 
+/// Machine-readable bench results, one object per case, written as
+/// `BENCH_<name>.json`.
+#[derive(Debug)]
+pub struct JsonReport {
+    name: String,
+    cases: Vec<(String, Value)>,
+}
+
+impl JsonReport {
+    pub fn new(name: &str) -> Self {
+        JsonReport { name: name.to_string(), cases: Vec::new() }
+    }
+
+    fn case_mut(&mut self, case: &str) -> &mut Value {
+        if !self.cases.iter().any(|(c, _)| c == case) {
+            self.cases.push((case.to_string(), Value::obj()));
+        }
+        // the entry exists by construction above
+        let idx = self
+            .cases
+            .iter()
+            .position(|(c, _)| c == case)
+            .unwrap_or_default();
+        &mut self.cases[idx].1
+    }
+
+    /// Record timing statistics for a case (mean/median/min/p95/stddev
+    /// in microseconds, plus the iteration count).
+    pub fn stats(&mut self, case: &str, s: &Stats) -> &mut Self {
+        self.case_mut(case)
+            .set("iters", s.iters)
+            .set("mean_us", s.mean_us)
+            .set("median_us", s.median_us)
+            .set("min_us", s.min_us)
+            .set("p95_us", s.p95_us)
+            .set("stddev_us", s.stddev_us);
+        self
+    }
+
+    /// Record an arbitrary named metric for a case (e.g. throughput in
+    /// items/s, compressed size in bytes, speedup ratios).
+    pub fn metric(&mut self, case: &str, key: &str, value: impl Into<Value>) -> &mut Self {
+        self.case_mut(case).set(key, value);
+        self
+    }
+
+    pub fn to_value(&self) -> Value {
+        let mut cases = Value::obj();
+        for (case, v) in &self.cases {
+            cases.set(case, v.clone());
+        }
+        let mut root = Value::obj();
+        root.set("bench", self.name.as_str()).set("cases", cases);
+        root
+    }
+
+    /// Write `BENCH_<name>.json` under `dir`; returns the path.
+    pub fn write(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        crate::json::to_file(&path, &self.to_value())?;
+        Ok(path)
+    }
+}
+
+/// Parse `--json-out [DIR]` / `--json-out=DIR` from an argv slice.
+/// `None` means the flag is absent; a bare flag defaults to `.`.
+/// (Bench binaries run with `harness = false` parse their own argv.)
+pub fn json_out_from(argv: &[String]) -> Option<PathBuf> {
+    let mut it = argv.iter().peekable();
+    while let Some(arg) = it.next() {
+        if let Some(dir) = arg.strip_prefix("--json-out=") {
+            return Some(PathBuf::from(dir));
+        }
+        if arg == "--json-out" {
+            // a following non-flag token is the directory
+            return match it.peek() {
+                Some(next) if !next.starts_with("--") => Some(PathBuf::from(next.as_str())),
+                _ => Some(PathBuf::from(".")),
+            };
+        }
+    }
+    None
+}
+
+/// [`json_out_from`] over the process argv.
+pub fn json_out_dir() -> Option<PathBuf> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    json_out_from(&argv)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,6 +178,61 @@ mod tests {
         assert!(s.iters >= 10);
         assert!(s.min_us <= s.median_us && s.median_us <= s.p95_us);
         assert!(s.mean_us > 0.0);
+    }
+
+    #[test]
+    fn json_out_flag_parsing() {
+        let argv = |s: &[&str]| s.iter().map(|x| x.to_string()).collect::<Vec<_>>();
+        assert_eq!(json_out_from(&argv(&[])), None);
+        assert_eq!(json_out_from(&argv(&["--smoke"])), None);
+        assert_eq!(
+            json_out_from(&argv(&["--json-out"])),
+            Some(PathBuf::from("."))
+        );
+        assert_eq!(
+            json_out_from(&argv(&["--json-out", "out"])),
+            Some(PathBuf::from("out"))
+        );
+        assert_eq!(
+            json_out_from(&argv(&["--json-out=/tmp/x"])),
+            Some(PathBuf::from("/tmp/x"))
+        );
+        // a trailing flag is not swallowed as the directory
+        assert_eq!(
+            json_out_from(&argv(&["--json-out", "--smoke"])),
+            Some(PathBuf::from("."))
+        );
+    }
+
+    #[test]
+    fn json_report_shape_and_write() {
+        let mut rep = JsonReport::new("unit");
+        let s = Stats {
+            iters: 3,
+            mean_us: 2.0,
+            median_us: 2.0,
+            min_us: 1.0,
+            p95_us: 3.0,
+            stddev_us: 0.5,
+        };
+        rep.stats("encode_k1", &s);
+        rep.metric("encode_k1", "throughput_mps", 12.5);
+        rep.metric("encode_k4", "bytes", 1024usize);
+        let v = rep.to_value();
+        assert_eq!(v.get("bench").and_then(Value::as_str), Some("unit"));
+        let cases = v.get("cases").expect("cases");
+        let k1 = cases.get("encode_k1").expect("case");
+        assert_eq!(k1.get("mean_us").and_then(Value::as_f64), Some(2.0));
+        assert_eq!(k1.get("throughput_mps").and_then(Value::as_f64), Some(12.5));
+        assert!(cases.get("encode_k4").is_some());
+
+        let dir = std::env::temp_dir().join("baf_bench_json_test");
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let path = rep.write(&dir).expect("write");
+        assert!(path.ends_with("BENCH_unit.json"));
+        let back = crate::json::from_file(&path).expect("parse back");
+        assert_eq!(back.get("bench").and_then(Value::as_str), Some("unit"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -20,6 +20,14 @@ impl BitWriter {
         Self::default()
     }
 
+    /// Like [`BitWriter::new`] but writing into a recycled buffer: `buf`
+    /// is cleared and its capacity reused, so steady-state packing does
+    /// not allocate (see [`crate::codec::scratch`]).
+    pub fn with_buffer(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        Self { buf, cur: 0, nbits: 0 }
+    }
+
     #[inline]
     pub fn put_bit(&mut self, bit: bool) {
         self.cur = (self.cur << 1) | bit as u8;

@@ -1,6 +1,6 @@
 //! The BaF bitstream container — what actually travels edge -> cloud.
 //!
-//! Layout (all integers little-endian):
+//! v1 layout (all integers little-endian):
 //!
 //! ```text
 //! offset size  field
@@ -20,19 +20,56 @@
 //! ..     len   entropy-coded payload
 //! ..     4     CRC32 over everything above
 //! ```
+//!
+//! v2 ("striped") keeps the fixed header byte-for-byte but sets
+//! version = 2 and splits the payload into K independently
+//! entropy-coded stripes so encode and decode parallelize within one
+//! frame (see `runtime::pool`):
+//!
+//! ```text
+//! 0      22    fixed header as v1 (version byte = 2); the payload
+//!              length field covers stripe table + stripe payloads
+//! 22     2     K (stripe count, 1..=stripe units)
+//! 24     4*C   side info (as v1)
+//! ..     8*K   stripe table: per stripe (len u32, crc32-of-payload u32)
+//! ..     ..    K concatenated stripe payloads
+//! ..     4     CRC32 over everything above
+//! ```
+//!
+//! A stripe covers a contiguous run of *stripe units* — rows of channel
+//! tiles for image codecs (so each stripe is a full-width horizontal
+//! band of the tiled image) or whole channels for TLC-IC. Each stripe is
+//! a complete standalone stream of its codec: entropy-model state never
+//! crosses a stripe boundary, which is what makes stripes independently
+//! decodable. The cost is K-1 model restarts worth of adaptation; for
+//! frame-sized tensors and small K this is well under 1% of the payload
+//! (bench_codec measures it).
 
+use super::scratch::ScratchPool;
 use super::{CodecKind, Error, ImageMeta, Result, MAX_DECODED_SAMPLES};
 use crate::quant::{ChannelRange, QuantizedTensor};
-use crate::tile::{tile, untile, TiledImage};
+use crate::runtime::pool::WorkerPool;
+use crate::tile::{grid_for, tile, tile_with_buffer, untile_into, TiledImage};
 use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
 
 pub const MAGIC: &[u8; 4] = b"BAFT";
 pub const VERSION: u8 = 1;
+/// The striped frame layout.
+pub const VERSION2: u8 = 2;
 pub const HEADER_LEN: usize = 22;
+
+/// One stripe's payload range within [`Frame::payload`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StripeInfo {
+    pub offset: usize,
+    pub len: usize,
+}
 
 /// A decoded frame header + payload view.
 #[derive(Debug, Clone)]
 pub struct Frame {
+    /// Container version the frame was parsed from (1 or 2).
+    pub version: u8,
     pub codec: CodecKind,
     pub n: u8,
     pub qp: u8,
@@ -42,6 +79,9 @@ pub struct Frame {
     pub cols: usize,
     pub rows: usize,
     pub ranges: Vec<ChannelRange>,
+    /// Stripe ranges into `payload`. v1 frames parse as one stripe
+    /// covering the whole payload, so the decode path is uniform.
+    pub stripes: Vec<StripeInfo>,
     pub payload: Vec<u8>,
 }
 
@@ -53,9 +93,26 @@ impl Frame {
             n: self.n,
         }
     }
+
+    /// How many independently codeable units this frame has: rows of
+    /// channel tiles for image codecs, channels for TLC-IC.
+    pub fn stripe_units(&self) -> usize {
+        if self.codec == CodecKind::TlcIc {
+            self.channels
+        } else {
+            self.rows
+        }
+    }
 }
 
-/// Serialize: quantized tensor -> tiled image -> codec -> framed bytes.
+/// The unit range `[start, end)` of stripe `i` of `k` over `total`
+/// units: near-equal contiguous spans, every unit covered exactly once.
+pub fn stripe_span(total: usize, k: usize, i: usize) -> (usize, usize) {
+    (i * total / k, (i + 1) * total / k)
+}
+
+/// Serialize: quantized tensor -> tiled image -> codec -> framed bytes
+/// (v1 single-stream layout).
 pub fn pack(q: &QuantizedTensor, codec: CodecKind, qp: u8) -> Vec<u8> {
     let img = tile(q);
     // TLC-IC codes the channel-plane sequence directly (inter-channel
@@ -87,13 +144,135 @@ pub fn pack(q: &QuantizedTensor, codec: CodecKind, qp: u8) -> Vec<u8> {
     out
 }
 
-/// Parse, validate, and CRC-check a frame.
+/// [`pack_v2_with`] on a private single-thread pool and throwaway
+/// scratch — for tools and tests that don't hold long-lived state.
+pub fn pack_v2(q: &QuantizedTensor, codec: CodecKind, qp: u8, k: usize) -> Vec<u8> {
+    pack_v2_with(q, codec, qp, k, &WorkerPool::new(1), &ScratchPool::new())
+}
+
+/// Serialize a striped v2 frame: the tensor is split into `k` stripes
+/// (clamped to the available units), each entropy-coded independently —
+/// concurrently across `pool` — with working buffers drawn from
+/// `scratch` so steady-state encoding does not allocate.
+pub fn pack_v2_with(
+    q: &QuantizedTensor,
+    codec: CodecKind,
+    qp: u8,
+    k: usize,
+    pool: &WorkerPool,
+    scratch: &ScratchPool,
+) -> Vec<u8> {
+    let (cols, rows) = grid_for(q.c);
+    let (tile_w, tile_h) = (q.w, q.h);
+    let units = if codec == CodecKind::TlcIc { q.c } else { rows };
+    let k = k.clamp(1, units.max(1));
+    let plane = tile_h * tile_w;
+
+    // encode each stripe into its own pooled buffer; jobs own disjoint
+    // input slices so the fan-out is borrow-checked, not unsafe
+    struct EncJob<'a> {
+        samples: &'a [u16],
+        width: usize,
+        height: usize,
+        channels: usize,
+        out: Vec<u8>,
+    }
+    let payloads: Vec<Vec<u8>> = if codec == CodecKind::TlcIc {
+        let mut jobs: Vec<EncJob> = (0..k)
+            .map(|i| {
+                let (c0, c1) = stripe_span(units, k, i);
+                EncJob {
+                    samples: &q.bins[c0 * plane..c1 * plane],
+                    width: tile_w,
+                    height: tile_h,
+                    channels: c1 - c0,
+                    out: scratch.take_u8(0),
+                }
+            })
+            .collect();
+        pool.for_each_mut(&mut jobs, |_, job| {
+            super::tlc_ic::encode_planes_into(
+                job.samples,
+                job.channels,
+                job.height,
+                job.width,
+                q.n,
+                &mut job.out,
+            );
+        });
+        jobs.into_iter().map(|j| j.out).collect()
+    } else {
+        let img = tile_with_buffer(q, scratch.take_u16(cols * tile_w * rows * tile_h));
+        let width = img.width;
+        let mut jobs: Vec<EncJob> = (0..k)
+            .map(|i| {
+                let (r0, r1) = stripe_span(units, k, i);
+                EncJob {
+                    samples: &img.samples[r0 * tile_h * width..r1 * tile_h * width],
+                    width,
+                    height: (r1 - r0) * tile_h,
+                    channels: q.c,
+                    out: scratch.take_u8(0),
+                }
+            })
+            .collect();
+        pool.for_each_mut(&mut jobs, |_, job| {
+            codec.encode_image_into(
+                job.samples,
+                job.width,
+                job.height,
+                q.n,
+                qp,
+                scratch,
+                &mut job.out,
+            );
+        });
+        let payloads = jobs.into_iter().map(|j| j.out).collect();
+        scratch.put_u16(img.samples);
+        payloads
+    };
+
+    let payload_len = 8 * k + payloads.iter().map(Vec::len).sum::<usize>();
+    assert!(payload_len <= u32::MAX as usize, "payload too large for container");
+    let mut out = scratch.take_u8(HEADER_LEN + 2 + 4 * q.c + payload_len + 4);
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION2);
+    out.push(codec as u8);
+    out.push(q.n);
+    out.push(qp);
+    out.extend_from_slice(&(q.c as u16).to_le_bytes());
+    out.extend_from_slice(&(tile_w as u16).to_le_bytes());
+    out.extend_from_slice(&(tile_h as u16).to_le_bytes());
+    out.extend_from_slice(&(cols as u16).to_le_bytes());
+    out.extend_from_slice(&(rows as u16).to_le_bytes());
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    out.extend_from_slice(&(k as u16).to_le_bytes());
+    for r in &q.ranges {
+        out.extend_from_slice(&f32_to_f16_bits(r.min).to_le_bytes());
+        out.extend_from_slice(&f32_to_f16_bits(r.max).to_le_bytes());
+    }
+    for p in &payloads {
+        out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32fast::hash(p).to_le_bytes());
+    }
+    for p in payloads {
+        out.extend_from_slice(&p);
+        scratch.put_u8(p);
+    }
+    let crc = crc32fast::hash(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse, validate, and CRC-check a frame (v1 or v2).
 ///
 /// Total: every field is validated before it drives an allocation or an
 /// index — short input is [`Error::Truncated`], bad magic / CRC /
-/// geometry is [`Error::Corrupt`], future versions and unknown codec ids
-/// are [`Error::Unsupported`], and a header whose geometry implies more
-/// than [`MAX_DECODED_SAMPLES`] is [`Error::LimitExceeded`].
+/// geometry / stripe table is [`Error::Corrupt`], future versions and
+/// unknown codec ids are [`Error::Unsupported`], and a header whose
+/// geometry implies more than [`MAX_DECODED_SAMPLES`] is
+/// [`Error::LimitExceeded`]. v2 stripe payloads each carry their own
+/// CRC32, verified here, so a corrupt stripe is localized before decode.
 pub fn parse(bytes: &[u8]) -> Result<Frame> {
     if bytes.len() < HEADER_LEN + 4 {
         return Err(Error::Truncated {
@@ -116,10 +295,10 @@ pub fn parse(bytes: &[u8]) -> Result<Frame> {
             &body[0..4]
         )));
     }
-    if body[4] != VERSION {
+    let version = body[4];
+    if version != VERSION && version != VERSION2 {
         return Err(Error::Unsupported(format!(
-            "container version {} (this build reads {VERSION})",
-            body[4]
+            "container version {version} (this build reads {VERSION} and {VERSION2})"
         )));
     }
     let codec = CodecKind::from_u8(body[5])?;
@@ -156,8 +335,21 @@ pub fn parse(bytes: &[u8]) -> Result<Frame> {
             limit: MAX_DECODED_SAMPLES,
         });
     }
+    // v2 carries the stripe count right after the fixed header
+    let (k, side_off) = if version == VERSION2 {
+        if body.len() < HEADER_LEN + 2 {
+            return Err(Error::Truncated {
+                what: "container stripe count",
+                needed: HEADER_LEN + 2,
+                got: body.len(),
+            });
+        }
+        (rd16(HEADER_LEN), HEADER_LEN + 2)
+    } else {
+        (1usize, HEADER_LEN)
+    };
     let side_len = 4 * channels;
-    let expect = HEADER_LEN + side_len + payload_len;
+    let expect = side_off + side_len + payload_len;
     if body.len() < expect {
         return Err(Error::Truncated {
             what: "container body",
@@ -173,7 +365,7 @@ pub fn parse(bytes: &[u8]) -> Result<Frame> {
     }
     let mut ranges = Vec::with_capacity(channels);
     for ch in 0..channels {
-        let off = HEADER_LEN + 4 * ch;
+        let off = side_off + 4 * ch;
         let min = f16_bits_to_f32(u16::from_le_bytes([body[off], body[off + 1]]));
         let max = f16_bits_to_f32(u16::from_le_bytes([body[off + 2], body[off + 3]]));
         if !(min.is_finite() && max.is_finite()) || max < min {
@@ -181,23 +373,176 @@ pub fn parse(bytes: &[u8]) -> Result<Frame> {
         }
         ranges.push(ChannelRange { min, max });
     }
-    let payload = body[HEADER_LEN + side_len..].to_vec();
-    Ok(Frame { codec, n, qp, channels, tile_w, tile_h, cols, rows, ranges, payload })
+    let payload_off = side_off + side_len;
+    if version != VERSION2 {
+        let payload = body[payload_off..].to_vec();
+        return Ok(Frame {
+            version,
+            codec,
+            n,
+            qp,
+            channels,
+            tile_w,
+            tile_h,
+            cols,
+            rows,
+            ranges,
+            stripes: vec![StripeInfo { offset: 0, len: payload_len }],
+            payload,
+        });
+    }
+    // v2: validate the stripe table before trusting any range in it
+    let units = if codec == CodecKind::TlcIc { channels } else { rows };
+    if k == 0 || k > units {
+        return Err(Error::Corrupt(format!(
+            "stripe count {k} outside 1..={units}"
+        )));
+    }
+    if payload_len < 8 * k {
+        return Err(Error::Truncated {
+            what: "stripe table",
+            needed: 8 * k,
+            got: payload_len,
+        });
+    }
+    let table = &body[payload_off..payload_off + 8 * k];
+    let data = &body[payload_off + 8 * k..];
+    let mut stripes = Vec::with_capacity(k);
+    let mut off = 0usize;
+    for i in 0..k {
+        let e = &table[8 * i..8 * i + 8];
+        let len = u32::from_le_bytes([e[0], e[1], e[2], e[3]]) as usize;
+        let want = u32::from_le_bytes([e[4], e[5], e[6], e[7]]);
+        let end = off.checked_add(len).filter(|&end| end <= data.len()).ok_or_else(|| {
+            Error::Corrupt(format!("stripe {i} range {off}+{len} outside payload"))
+        })?;
+        let got = crc32fast::hash(&data[off..end]);
+        if got != want {
+            return Err(Error::Corrupt(format!(
+                "stripe {i} CRC mismatch: stored {want:#010x}, computed {got:#010x}"
+            )));
+        }
+        stripes.push(StripeInfo { offset: off, len });
+        off = end;
+    }
+    if off != data.len() {
+        return Err(Error::Corrupt(format!(
+            "stripe lengths sum to {off}, payload holds {}",
+            data.len()
+        )));
+    }
+    Ok(Frame {
+        version,
+        codec,
+        n,
+        qp,
+        channels,
+        tile_w,
+        tile_h,
+        cols,
+        rows,
+        ranges,
+        stripes,
+        payload: data.to_vec(),
+    })
 }
 
 /// Decode a parsed frame back to a `QuantizedTensor`. Total: decode
 /// failures in the payload codec propagate as typed errors.
 pub fn unpack(frame: &Frame) -> Result<QuantizedTensor> {
-    let meta = frame.image_meta();
+    unpack_with(frame, &WorkerPool::new(1), &ScratchPool::new())
+}
+
+/// [`unpack`] with stripes decoded concurrently across `pool` and all
+/// working buffers (including the returned tensor's bins) drawn from
+/// `scratch` — hand `QuantizedTensor::bins` back via
+/// [`ScratchPool::put_u16`] once consumed to close the reuse loop.
+///
+/// v1 frames are one stripe, so the same walk decodes both versions.
+pub fn unpack_with(
+    frame: &Frame,
+    pool: &WorkerPool,
+    scratch: &ScratchPool,
+) -> Result<QuantizedTensor> {
+    let k = frame.stripes.len();
+    let units = frame.stripe_units();
+    if k == 0 || units == 0 || k > units {
+        return Err(Error::Corrupt(format!(
+            "stripe count {k} outside 1..={units}"
+        )));
+    }
+    let plane = frame.tile_h * frame.tile_w;
+
+    struct DecJob<'a> {
+        payload: &'a [u8],
+        out: &'a mut [u16],
+        meta: ImageMeta,
+        channels: usize,
+        res: Result<()>,
+    }
+    // carve the payload into per-stripe slices (validated at parse; a
+    // hand-built Frame with bad ranges errors instead of panicking)
+    let mut slices = Vec::with_capacity(k);
+    for (i, si) in frame.stripes.iter().enumerate() {
+        let s = si
+            .offset
+            .checked_add(si.len)
+            .and_then(|end| frame.payload.get(si.offset..end))
+            .ok_or_else(|| {
+                Error::Corrupt(format!(
+                    "stripe {i} range {}+{} outside payload",
+                    si.offset, si.len
+                ))
+            })?;
+        slices.push(s);
+    }
+
     if frame.codec == CodecKind::TlcIc {
-        return Ok(QuantizedTensor {
-            bins: super::tlc_ic::decode_planes(
-                &frame.payload,
-                frame.channels,
+        let total = frame
+            .channels
+            .checked_mul(plane)
+            .filter(|&t| t <= MAX_DECODED_SAMPLES)
+            .ok_or(Error::LimitExceeded {
+                what: "decoded samples",
+                requested: usize::MAX,
+                limit: MAX_DECODED_SAMPLES,
+            })?;
+        let mut bins = scratch.take_u16(total);
+        bins.resize(total, 0);
+        // disjoint per-stripe output spans: stripe i owns channels
+        // [i*C/k, (i+1)*C/k) — the spans tile `bins` exactly
+        let mut jobs: Vec<DecJob> = Vec::with_capacity(k);
+        let mut rest: &mut [u16] = &mut bins;
+        for (i, payload) in slices.into_iter().enumerate() {
+            let (c0, c1) = stripe_span(units, k, i);
+            let (cur, r) = rest.split_at_mut((c1 - c0) * plane);
+            rest = r;
+            jobs.push(DecJob {
+                payload,
+                out: cur,
+                meta: ImageMeta { width: frame.tile_w, height: frame.tile_h, n: frame.n },
+                channels: c1 - c0,
+                res: Ok(()),
+            });
+        }
+        pool.for_each_mut(&mut jobs, |_, job| {
+            job.res = super::tlc_ic::decode_planes_into(
+                job.payload,
+                job.channels,
                 frame.tile_h,
                 frame.tile_w,
                 frame.n,
-            )?,
+                job.out,
+            );
+        });
+        let err = jobs.iter().find_map(|j| j.res.as_ref().err().cloned());
+        drop(jobs);
+        if let Some(e) = err {
+            scratch.put_u16(bins);
+            return Err(e);
+        }
+        return Ok(QuantizedTensor {
+            bins,
             c: frame.channels,
             h: frame.tile_h,
             w: frame.tile_w,
@@ -205,7 +550,43 @@ pub fn unpack(frame: &Frame) -> Result<QuantizedTensor> {
             ranges: frame.ranges.clone(),
         });
     }
-    let samples = frame.codec.decode_image(&frame.payload, &meta, frame.qp)?;
+
+    // image codecs: each stripe is a full-width horizontal band of the
+    // tiled plane — bands are disjoint, so split_at_mut carves them
+    let meta = frame.image_meta();
+    let total = meta.checked_samples()?;
+    let mut samples = scratch.take_u16(total);
+    samples.resize(total, 0);
+    let band = frame.tile_h * meta.width;
+    let mut jobs: Vec<DecJob> = Vec::with_capacity(k);
+    let mut rest: &mut [u16] = &mut samples;
+    for (i, payload) in slices.into_iter().enumerate() {
+        let (r0, r1) = stripe_span(units, k, i);
+        let (cur, r) = rest.split_at_mut((r1 - r0) * band);
+        rest = r;
+        jobs.push(DecJob {
+            payload,
+            out: cur,
+            meta: ImageMeta {
+                width: meta.width,
+                height: (r1 - r0) * frame.tile_h,
+                n: frame.n,
+            },
+            channels: frame.channels,
+            res: Ok(()),
+        });
+    }
+    pool.for_each_mut(&mut jobs, |_, job| {
+        job.res = frame
+            .codec
+            .decode_image_into(job.payload, &job.meta, frame.qp, scratch, job.out);
+    });
+    let err = jobs.iter().find_map(|j| j.res.as_ref().err().cloned());
+    drop(jobs);
+    if let Some(e) = err {
+        scratch.put_u16(samples);
+        return Err(e);
+    }
     let img = TiledImage {
         width: meta.width,
         height: meta.height,
@@ -217,8 +598,12 @@ pub fn unpack(frame: &Frame) -> Result<QuantizedTensor> {
         tile_h: frame.tile_h,
         channels: frame.channels,
     };
+    let mut bins = scratch.take_u16(frame.channels * plane);
+    bins.resize(frame.channels * plane, 0);
+    untile_into(&img, &mut bins);
+    scratch.put_u16(img.samples);
     Ok(QuantizedTensor {
-        bins: untile(&img),
+        bins,
         c: frame.channels,
         h: frame.tile_h,
         w: frame.tile_w,
@@ -271,11 +656,83 @@ mod tests {
             let frame = parse(&bytes).unwrap();
             assert_eq!(frame.n, 8);
             assert_eq!(frame.channels, 16);
+            assert_eq!(frame.version, VERSION);
+            assert_eq!(frame.stripes.len(), 1);
             let q2 = unpack(&frame).unwrap();
             assert_eq!(q2.bins, q.bins, "{codec:?}");
             // ranges roundtrip exactly (already f16-rounded by quantize)
             for (a, b) in q.ranges.iter().zip(&q2.ranges) {
                 assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn striped_pack_roundtrips_all_codecs_and_stripe_counts() {
+        for codec in [
+            CodecKind::Tlc,
+            CodecKind::PngLike,
+            CodecKind::ZstdRaw,
+            CodecKind::TlcIc,
+        ] {
+            let q = random_quant(16, 8, 6);
+            // grid for C=16 is 4x4 -> 4 tile rows; K=9 and K=999 clamp
+            for k in [1usize, 2, 3, 4, 9, 999] {
+                let bytes = pack_v2(&q, codec, 0, k);
+                let frame = parse(&bytes).unwrap();
+                assert_eq!(frame.version, VERSION2);
+                assert!(frame.stripes.len() <= frame.stripe_units());
+                let q2 = unpack(&frame).unwrap();
+                assert_eq!(q2.bins, q.bins, "{codec:?} k={k}");
+                for (a, b) in q.ranges.iter().zip(&q2.ranges) {
+                    assert_eq!(a, b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn striped_and_parallel_decodes_agree() {
+        let pool = WorkerPool::new(4);
+        let scratch = ScratchPool::new();
+        for codec in [CodecKind::Tlc, CodecKind::TlcIc] {
+            let q = random_quant(16, 6, 12);
+            let bytes = pack_v2_with(&q, codec, 0, 4, &pool, &scratch);
+            let frame = parse(&bytes).unwrap();
+            let seq = unpack(&frame).unwrap();
+            let par = unpack_with(&frame, &pool, &scratch).unwrap();
+            assert_eq!(seq.bins, par.bins, "{codec:?}");
+            assert_eq!(seq.bins, q.bins, "{codec:?}");
+        }
+        let st = scratch.stats();
+        assert!(st.returned > 0, "scratch pool must see traffic: {st:?}");
+    }
+
+    #[test]
+    fn stripe_k1_payload_matches_v1_exactly() {
+        // one stripe = one uninterrupted model pass = v1's byte stream
+        let q = random_quant(8, 8, 13);
+        let v1 = pack(&q, CodecKind::Tlc, 0);
+        let v2 = pack_v2(&q, CodecKind::Tlc, 0, 1);
+        let f1 = parse(&v1).unwrap();
+        let f2 = parse(&v2).unwrap();
+        assert_eq!(f1.payload, f2.payload);
+        // v2 overhead at K=1 is exactly K field + one table entry
+        assert_eq!(v2.len(), v1.len() + 2 + 8);
+    }
+
+    #[test]
+    fn stripe_span_partitions_units() {
+        for total in [1usize, 3, 4, 7, 64, 65] {
+            for k in 1..=total {
+                let mut covered = 0;
+                for i in 0..k {
+                    let (a, b) = stripe_span(total, k, i);
+                    assert_eq!(a, covered, "total={total} k={k} i={i}");
+                    assert!(b > a, "empty stripe: total={total} k={k} i={i}");
+                    covered = b;
+                }
+                assert_eq!(covered, total);
             }
         }
     }
@@ -287,6 +744,61 @@ mod tests {
         let frame = parse(&bytes).unwrap();
         let q2 = unpack(&frame).unwrap();
         assert_eq!((q2.c, q2.h, q2.w, q2.n), (q.c, q.h, q.w, q.n));
+        // lossy codecs stripe too (each band is its own DCT pass)
+        let bytes = pack_v2(&q, CodecKind::Mic, 20, 2);
+        let q2 = unpack(&parse(&bytes).unwrap()).unwrap();
+        assert_eq!((q2.c, q2.h, q2.w, q2.n), (q.c, q.h, q.w, q.n));
+    }
+
+    #[test]
+    fn corrupt_stripe_table_rejected() {
+        let q = random_quant(16, 8, 14);
+        let good = pack_v2(&q, CodecKind::Tlc, 0, 4);
+        let frame = parse(&good).unwrap();
+        let table_off = HEADER_LEN + 2 + 4 * frame.channels;
+        // stripe count of zero
+        let mut bad = good.clone();
+        bad[HEADER_LEN] = 0;
+        bad[HEADER_LEN + 1] = 0;
+        refresh_crc(&mut bad);
+        assert!(matches!(parse(&bad), Err(Error::Corrupt(_))));
+        // stripe count beyond the unit count
+        let mut bad = good.clone();
+        bad[HEADER_LEN] = 0xFF;
+        bad[HEADER_LEN + 1] = 0xFF;
+        refresh_crc(&mut bad);
+        assert!(parse(&bad).is_err());
+        // first stripe length inflated: sum check must catch it
+        let mut bad = good.clone();
+        bad[table_off] = bad[table_off].wrapping_add(1);
+        refresh_crc(&mut bad);
+        assert!(matches!(parse(&bad), Err(Error::Corrupt(_))));
+        // stripe payload corrupted: per-stripe CRC catches it even with
+        // the frame CRC refreshed
+        let mut bad = good.clone();
+        let payload_start = table_off + 8 * frame.stripes.len();
+        bad[payload_start + 2] ^= 0x10;
+        refresh_crc(&mut bad);
+        assert!(matches!(parse(&bad), Err(Error::Corrupt(_))));
+    }
+
+    #[test]
+    fn hand_built_frame_with_bad_stripes_errors_not_panics() {
+        let q = random_quant(4, 6, 15);
+        let mut frame = parse(&pack_v2(&q, CodecKind::Tlc, 0, 2)).unwrap();
+        // no stripes
+        let saved = std::mem::take(&mut frame.stripes);
+        assert!(unpack(&frame).is_err());
+        // stripe range past the payload
+        frame.stripes = vec![StripeInfo { offset: usize::MAX, len: 2 }];
+        assert!(unpack(&frame).is_err());
+        frame.stripes = vec![StripeInfo { offset: 0, len: frame.payload.len() + 1 }];
+        assert!(unpack(&frame).is_err());
+        // more stripes than units
+        frame.stripes = (0..99).map(|_| StripeInfo { offset: 0, len: 1 }).collect();
+        assert!(unpack(&frame).is_err());
+        frame.stripes = saved;
+        assert!(unpack(&frame).is_ok());
     }
 
     #[test]
@@ -298,11 +810,17 @@ mod tests {
         bad[0] = b'X';
         refresh_crc(&mut bad);
         assert!(matches!(parse(&bad), Err(Error::Corrupt(_))));
-        // future version
+        // future version (2 is the striped layout now, so jump far ahead)
         let mut bad = good.clone();
-        bad[4] = VERSION + 1;
+        bad[4] = 0x7F;
         refresh_crc(&mut bad);
         assert!(matches!(parse(&bad), Err(Error::Unsupported(_))));
+        // a v1 frame relabelled v2 must fail (its body is 2 bytes short
+        // of where v2 puts the side info), not misparse
+        let mut bad = good.clone();
+        bad[4] = VERSION2;
+        refresh_crc(&mut bad);
+        assert!(parse(&bad).is_err());
         // unknown codec id
         let mut bad = good.clone();
         bad[5] = 0xEE;
@@ -336,9 +854,10 @@ mod tests {
     #[test]
     fn truncation_rejected() {
         let q = random_quant(4, 6, 4);
-        let bytes = pack(&q, CodecKind::Tlc, 0);
-        for cut in [0, 5, HEADER_LEN, bytes.len() - 5] {
-            assert!(parse(&bytes[..cut]).is_err(), "cut at {cut}");
+        for bytes in [pack(&q, CodecKind::Tlc, 0), pack_v2(&q, CodecKind::Tlc, 0, 2)] {
+            for cut in [0, 5, HEADER_LEN, bytes.len() - 5] {
+                assert!(parse(&bytes[..cut]).is_err(), "cut at {cut}");
+            }
         }
     }
 
@@ -353,6 +872,14 @@ mod tests {
         assert_eq!(
             bytes.len() * 8,
             fixed_bits + side_bits + frame.payload.len() * 8
+        );
+        // v2 adds exactly 2 bytes (K) + 8 per stripe
+        let k = 4;
+        let bytes2 = pack_v2(&q, CodecKind::Tlc, 0, k);
+        let frame2 = parse(&bytes2).unwrap();
+        assert_eq!(
+            bytes2.len() * 8,
+            fixed_bits + 16 + side_bits + 64 * k + frame2.payload.len() * 8
         );
     }
 }

@@ -11,6 +11,9 @@
 //!   every one of these);
 //! * [`header_mutations`] — targeted header-field corruption with the
 //!   CRC refreshed, so validation logic behind the checksum is reached;
+//! * [`stripe_table_mutations`] — v2-specific corruption of the stripe
+//!   count and stripe table (lengths and per-stripe CRCs), again with
+//!   the frame CRC refreshed;
 //! * [`Corruptor`] — a seeded random fault source for end-to-end runs
 //!   (the E5 server's `--corrupt-rate` injection).
 //!
@@ -75,6 +78,33 @@ pub fn header_mutations(frame: &[u8]) -> Vec<Vec<u8>> {
     let header = container::HEADER_LEN.min(frame.len());
     for pos in 0..header {
         for value in [0x00, 0x01, 0x7F, 0xFF] {
+            let mut bad = Fault::SetByte { pos, value }.apply(frame);
+            container::refresh_crc(&mut bad);
+            out.push(bad);
+        }
+    }
+    out
+}
+
+/// Targeted corruptions of a v2 (striped) frame's stripe-count field and
+/// stripe table, with the trailing CRC refreshed — the table drives
+/// payload slicing in `container::parse`, so this reaches the
+/// length-sum, range, and per-stripe CRC validation paths directly.
+/// Returns an empty vec for non-v2 frames (nothing stripe-shaped to hit).
+pub fn stripe_table_mutations(frame: &[u8]) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    if frame.len() <= container::HEADER_LEN + 2 || frame[4] != container::VERSION2 {
+        return out;
+    }
+    let rd16 = |off: usize| u16::from_le_bytes([frame[off], frame[off + 1]]) as usize;
+    let channels = rd16(8);
+    let k = rd16(container::HEADER_LEN);
+    let table_off = container::HEADER_LEN + 2 + 4 * channels;
+    let table_end = (table_off + 8 * k).min(frame.len());
+    let targets = (container::HEADER_LEN..container::HEADER_LEN + 2)
+        .chain(table_off..table_end);
+    for pos in targets {
+        for value in [0x00, 0x01, 0xFF] {
             let mut bad = Fault::SetByte { pos, value }.apply(frame);
             container::refresh_crc(&mut bad);
             out.push(bad);
@@ -159,6 +189,40 @@ mod tests {
                 seen[pos][bit as usize] = true;
             }
         }
+    }
+
+    #[test]
+    fn stripe_mutations_target_v2_frames_only() {
+        use crate::codec::CodecKind;
+        use crate::quant::quantize;
+        use crate::tensor::Tensor;
+
+        let mut r = SplitMix64::new(21);
+        let z = Tensor::from_vec(
+            &[8, 8, 8],
+            (0..512).map(|_| r.next_f32() * 2.0 - 1.0).collect(),
+        );
+        let q = quantize(&z, 6);
+        let v1 = container::pack(&q, CodecKind::Tlc, 0);
+        assert!(stripe_table_mutations(&v1).is_empty());
+        let v2 = container::pack_v2(&q, CodecKind::Tlc, 0, 2);
+        let muts = stripe_table_mutations(&v2);
+        // 2 stripe-count bytes + 16 table bytes, 3 values each
+        assert_eq!(muts.len(), (2 + 16) * 3);
+        for bad in &muts {
+            assert_eq!(bad.len(), v2.len(), "SetByte never resizes");
+        }
+        // mutated frames must parse to Err or reproduce the original
+        // tensor exactly — never panic (the CRC is refreshed, so parse
+        // reaches the table validation itself)
+        let mut rejected = 0;
+        for bad in &muts {
+            match container::parse(bad).and_then(|f| container::unpack(&f)) {
+                Ok(q2) => assert_eq!(q2.bins, q.bins),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "some mutation must invalidate the table");
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub mod png_like;
 pub mod rice;
 pub mod predict;
 pub mod rc;
+pub mod scratch;
 pub mod tlc;
 pub mod tlc_ic;
 pub mod zstd_raw;
@@ -214,13 +215,41 @@ impl CodecKind {
         n: u8,
         qp: u8,
     ) -> Vec<u8> {
+        let pool = scratch::ScratchPool::new();
+        let mut out = Vec::new();
+        self.encode_image_into(samples, width, height, n, qp, &pool, &mut out);
+        out
+    }
+
+    /// Re-entrant [`Self::encode_image`]: intermediates come from
+    /// `scratch`, the stream lands in `out` (cleared first, capacity
+    /// reused). This is the per-stripe entry point of the parallel
+    /// container path — each stripe job calls it concurrently against
+    /// the shared pool.
+    pub fn encode_image_into(
+        &self,
+        samples: &[u16],
+        width: usize,
+        height: usize,
+        n: u8,
+        qp: u8,
+        scratch: &scratch::ScratchPool,
+        out: &mut Vec<u8>,
+    ) {
         match self {
-            CodecKind::Tlc => tlc::encode(samples, width, height, n),
-            CodecKind::PngLike => png_like::encode(samples, width, height, n),
-            CodecKind::ZstdRaw => zstd_raw::encode(samples, width, height, n),
-            CodecKind::Mic => lossy::encode(samples, width, height, n, qp),
+            CodecKind::Tlc => tlc::encode_into(samples, width, height, n, out),
+            CodecKind::PngLike => {
+                png_like::encode_into(samples, width, height, n, scratch, out)
+            }
+            CodecKind::ZstdRaw => {
+                zstd_raw::encode_into(samples, width, height, n, scratch, out)
+            }
+            CodecKind::Mic => {
+                out.clear();
+                out.extend_from_slice(&lossy::encode(samples, width, height, n, qp));
+            }
             // single-plane fallback (the container codes planes directly)
-            CodecKind::TlcIc => tlc_ic::encode_planes(samples, 1, height, width, n),
+            CodecKind::TlcIc => tlc_ic::encode_planes_into(samples, 1, height, width, n, out),
         }
     }
 
@@ -228,14 +257,43 @@ impl CodecKind {
     /// `meta.width * meta.height` samples or a typed [`Error`] — never a
     /// panic, never an allocation beyond [`MAX_DECODED_SAMPLES`].
     pub fn decode_image(&self, bytes: &[u8], meta: &ImageMeta, qp: u8) -> Result<Vec<u16>> {
+        let count = meta.checked_samples()?;
+        let pool = scratch::ScratchPool::new();
+        let mut out = vec![0u16; count];
+        self.decode_image_into(bytes, meta, qp, &pool, &mut out)?;
+        Ok(out)
+    }
+
+    /// Re-entrant [`Self::decode_image`]: writes into a caller-owned
+    /// slice of exactly `meta.width * meta.height` samples (a mismatch
+    /// is [`Error::Corrupt`], never a panic). Same totality contract.
+    pub fn decode_image_into(
+        &self,
+        bytes: &[u8],
+        meta: &ImageMeta,
+        qp: u8,
+        scratch: &scratch::ScratchPool,
+        out: &mut [u16],
+    ) -> Result<()> {
         meta.checked_samples()?;
         match self {
-            CodecKind::Tlc => tlc::decode(bytes, meta),
-            CodecKind::PngLike => png_like::decode(bytes, meta),
-            CodecKind::ZstdRaw => zstd_raw::decode(bytes, meta),
-            CodecKind::Mic => lossy::decode(bytes, meta, qp),
+            CodecKind::Tlc => tlc::decode_into(bytes, meta, out),
+            CodecKind::PngLike => png_like::decode_into(bytes, meta, scratch, out),
+            CodecKind::ZstdRaw => zstd_raw::decode_into(bytes, meta, out),
+            CodecKind::Mic => {
+                let samples = lossy::decode(bytes, meta, qp)?;
+                if samples.len() != out.len() {
+                    return Err(Error::Corrupt(format!(
+                        "mic output slice is {} samples, decode produced {}",
+                        out.len(),
+                        samples.len()
+                    )));
+                }
+                out.copy_from_slice(&samples);
+                Ok(())
+            }
             CodecKind::TlcIc => {
-                tlc_ic::decode_planes(bytes, 1, meta.height, meta.width, meta.n)
+                tlc_ic::decode_planes_into(bytes, 1, meta.height, meta.width, meta.n, out)
             }
         }
     }

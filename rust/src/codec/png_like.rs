@@ -5,6 +5,7 @@
 //! big-endian like PNG's 16-bit mode.
 
 use super::predict::paeth;
+use super::scratch::ScratchPool;
 use super::{Error, ImageMeta, Result};
 use flate2::read::ZlibDecoder;
 use flate2::write::ZlibEncoder;
@@ -21,9 +22,28 @@ fn bytes_per_sample(n: u8) -> usize {
 
 /// Paeth-filter rows then DEFLATE.
 pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
+    let scratch = ScratchPool::new();
+    let mut out = Vec::new();
+    encode_into(samples, width, height, n, &scratch, &mut out);
+    out
+}
+
+/// Re-entrant [`encode`]: the raw/filtered intermediates come from
+/// `scratch` and go back when done, and the deflate output lands in
+/// `out` (cleared first, capacity reused). DEFLATE's internal state is
+/// the one allocation this cannot pool (flate2 owns it).
+pub fn encode_into(
+    samples: &[u16],
+    width: usize,
+    height: usize,
+    n: u8,
+    scratch: &ScratchPool,
+    out: &mut Vec<u8>,
+) {
     let bps = bytes_per_sample(n);
     let stride = width * bps;
-    let mut raw = vec![0u8; height * stride];
+    let mut raw = scratch.take_u8(height * stride);
+    raw.resize(height * stride, 0);
     for y in 0..height {
         for x in 0..width {
             let v = samples[y * width + x];
@@ -38,7 +58,8 @@ pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
     }
     // Paeth filter per byte-lane (PNG semantics: the "left" neighbour is
     // bps bytes back)
-    let mut filtered = vec![0u8; raw.len()];
+    let mut filtered = scratch.take_u8(raw.len());
+    filtered.resize(raw.len(), 0);
     for y in 0..height {
         for i in 0..stride {
             let cur = raw[y * stride + i] as i32;
@@ -48,15 +69,19 @@ pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
             filtered[y * stride + i] = (cur - paeth(a, b, c)) as u8;
         }
     }
-    let mut enc = ZlibEncoder::new(Vec::new(), Compression::best());
+    let mut sink = std::mem::take(out);
+    sink.clear();
+    let mut enc = ZlibEncoder::new(sink, Compression::best());
     // in-memory sink: a write failure is a programming error, not input
     if let Err(e) = enc.write_all(&filtered) {
         panic!("in-memory deflate write failed: {e}");
     }
-    match enc.finish() {
+    *out = match enc.finish() {
         Ok(out) => out,
         Err(e) => panic!("deflate finish failed: {e}"),
-    }
+    };
+    scratch.put_u8(raw);
+    scratch.put_u8(filtered);
 }
 
 /// Inverse of `encode`.
@@ -66,30 +91,60 @@ pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
 /// geometry allows), and both short and long streams are rejected.
 pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Result<Vec<u16>> {
     let samples_len = meta.checked_samples()?;
+    let scratch = ScratchPool::new();
+    let mut samples = vec![0u16; samples_len];
+    decode_into(bytes, meta, &scratch, &mut samples)?;
+    Ok(samples)
+}
+
+/// Re-entrant [`decode`]: intermediates come from `scratch`, the result
+/// lands in a caller-owned slice of exactly `width * height` samples (a
+/// mismatch is [`Error::Corrupt`]). Error paths still return their
+/// scratch buffers to the pool.
+pub fn decode_into(
+    bytes: &[u8],
+    meta: &ImageMeta,
+    scratch: &ScratchPool,
+    samples: &mut [u16],
+) -> Result<()> {
+    let samples_len = meta.checked_samples()?;
+    if samples.len() != samples_len {
+        return Err(Error::Corrupt(format!(
+            "png-like output slice is {} samples, geometry says {samples_len}",
+            samples.len()
+        )));
+    }
     let (width, height, n) = (meta.width, meta.height, meta.n);
     let bps = bytes_per_sample(n);
     let stride = width * bps;
     let expected = samples_len * bps;
-    let mut filtered = Vec::with_capacity(expected);
+    let mut filtered = scratch.take_u8(expected);
     // `.take(expected + 1)`: enough to detect an over-long stream without
     // ever buffering an unbounded decompression
-    ZlibDecoder::new(bytes)
+    if let Err(e) = ZlibDecoder::new(bytes)
         .take(expected as u64 + 1)
         .read_to_end(&mut filtered)
-        .map_err(|e| Error::Corrupt(format!("inflate failed: {e}")))?;
+    {
+        scratch.put_u8(filtered);
+        return Err(Error::Corrupt(format!("inflate failed: {e}")));
+    }
     if filtered.len() < expected {
+        let got = filtered.len();
+        scratch.put_u8(filtered);
         return Err(Error::Truncated {
             what: "png-like filtered plane",
             needed: expected,
-            got: filtered.len(),
+            got,
         });
     }
     if filtered.len() > expected {
+        scratch.put_u8(filtered);
         return Err(Error::Corrupt(format!(
             "png-like stream inflates past expected {expected} bytes"
         )));
     }
-    let mut raw = vec![0u8; filtered.len()];
+    let mut raw = scratch.take_u8(filtered.len());
+    raw.resize(filtered.len(), 0);
     for y in 0..height {
         for i in 0..stride {
             let a = if i >= bps { raw[y * stride + i - bps] as i32 } else { 0 };
@@ -99,7 +154,6 @@ pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Result<Vec<u16>> {
                 (filtered[y * stride + i] as i32 + paeth(a, b, c)) as u8;
         }
     }
-    let mut samples = vec![0u16; width * height];
     for y in 0..height {
         for x in 0..width {
             let off = y * stride + x * bps;
@@ -110,7 +164,9 @@ pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Result<Vec<u16>> {
             };
         }
     }
-    Ok(samples)
+    scratch.put_u8(filtered);
+    scratch.put_u8(raw);
+    Ok(())
 }
 
 #[cfg(test)]

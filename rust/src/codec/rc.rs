@@ -51,7 +51,15 @@ impl Default for Encoder {
 
 impl Encoder {
     pub fn new() -> Self {
-        Self { low: 0, range: u32::MAX, cache: 0, cache_size: 1, out: Vec::new() }
+        Self::with_buffer(Vec::new())
+    }
+
+    /// Like [`Encoder::new`] but writing into a recycled buffer: `buf` is
+    /// cleared and its capacity reused, so steady-state encoding does not
+    /// allocate (see [`crate::codec::scratch`]).
+    pub fn with_buffer(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        Self { low: 0, range: u32::MAX, cache: 0, cache_size: 1, out: buf }
     }
 
     #[inline]

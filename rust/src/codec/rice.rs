@@ -120,6 +120,24 @@ pub fn decode(r: &mut BitReader, st: &mut RiceState) -> Result<u32> {
     Ok(u)
 }
 
+/// Encode a block of values with one shared adaptive state — the
+/// stripe-sized unit of work in the parallel codec path (each stripe
+/// owns its own writer and state, so blocks are re-entrant by
+/// construction).
+pub fn encode_block(w: &mut BitWriter, st: &mut RiceState, vals: &[u32]) {
+    for &u in vals {
+        encode(w, st, u);
+    }
+}
+
+/// Decode a block into a caller-owned slice (mirrors [`encode_block`]).
+pub fn decode_block_into(r: &mut BitReader, st: &mut RiceState, out: &mut [u32]) -> Result<()> {
+    for slot in out.iter_mut() {
+        *slot = decode(r, st)?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     #![allow(clippy::unwrap_used, clippy::expect_used)]
@@ -195,6 +213,25 @@ mod tests {
         let mut st = RiceState::default();
         for &v in &vals {
             assert_eq!(decode(&mut rd, &mut st).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn block_helpers_mirror_scalar_coding() {
+        let mut r = SplitMix64::new(13);
+        let vals: Vec<u32> = (0..2_000).map(|_| (r.next_u64() % 300) as u32).collect();
+        // two independent blocks, each with its own state and writer —
+        // exactly the per-stripe re-entrancy the parallel path relies on
+        for chunk in vals.chunks(700) {
+            let mut w = BitWriter::new();
+            let mut st = RiceState::default();
+            encode_block(&mut w, &mut st, chunk);
+            let bytes = w.finish();
+            let mut rd = BitReader::new(&bytes);
+            let mut st = RiceState::default();
+            let mut out = vec![0u32; chunk.len()];
+            decode_block_into(&mut rd, &mut st, &mut out).unwrap();
+            assert_eq!(out, chunk);
         }
     }
 

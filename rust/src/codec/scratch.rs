@@ -1,0 +1,240 @@
+//! Reusable scratch-buffer pool: zero per-frame heap allocation in the
+//! codec layer at steady state.
+//!
+//! Entropy coding a frame needs a handful of working buffers — the tiled
+//! sample plane, per-stripe bitstreams, filter/pack intermediates, the
+//! decoded sample plane. Their sizes are stable across frames of one
+//! stream, so instead of `vec![0; ..]` per frame, callers `take_*` a
+//! buffer here (cleared, with at least the requested capacity) and
+//! `put_*` it back when done. After a short warmup every take is a hit
+//! and the codec layer stops allocating.
+//!
+//! The pool is `Sync` (internally `Mutex`ed) so one instance can be
+//! shared by the edge encoder, the decode workers, and the stripe
+//! fan-out threads. Reuse is observable through [`ScratchPool::stats`]
+//! — the bench and the steady-state test assert misses stay flat once
+//! warm, which is the "zero allocations per frame" acceptance check.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Keep at most this many parked buffers per type; beyond it, returned
+/// buffers are dropped (bounds worst-case memory if a caller leaks takes
+/// and puts asymmetrically).
+const MAX_POOLED: usize = 64;
+
+/// Reuse counters for one pool (monotonic since construction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScratchStats {
+    /// Takes satisfied by a parked buffer of sufficient capacity.
+    pub hits: u64,
+    /// Takes that had to allocate (or grow a smaller parked buffer).
+    pub misses: u64,
+    /// Buffers handed back via `put_*`.
+    pub returned: u64,
+}
+
+/// A shared pool of `Vec<u16>` / `Vec<u8>` working buffers.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    u16s: Mutex<Vec<Vec<u16>>>,
+    u8s: Mutex<Vec<Vec<u8>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    returned: AtomicU64,
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // a panicked taker cannot corrupt a Vec-of-Vecs; recover and go on
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Pop the best-fitting parked buffer: the smallest one with at least
+/// `min_cap` capacity, else the largest available (which will be grown
+/// by the caller-side `reserve`, counting as a miss).
+fn take_best<T>(pool: &mut Vec<Vec<T>>, min_cap: usize) -> Option<(Vec<T>, bool)> {
+    if pool.is_empty() {
+        return None;
+    }
+    let mut best: Option<(usize, usize)> = None; // (index, capacity)
+    let mut largest = (0usize, 0usize);
+    for (i, b) in pool.iter().enumerate() {
+        let cap = b.capacity();
+        if cap >= min_cap && best.map_or(true, |(_, c)| cap < c) {
+            best = Some((i, cap));
+        }
+        if cap >= largest.1 {
+            largest = (i, cap);
+        }
+    }
+    let (idx, fits) = match best {
+        Some((i, _)) => (i, true),
+        None => (largest.0, false),
+    };
+    Some((pool.swap_remove(idx), fits))
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An empty `Vec<u16>` with capacity at least `min_cap`.
+    pub fn take_u16(&self, min_cap: usize) -> Vec<u16> {
+        match take_best(&mut lock(&self.u16s), min_cap) {
+            Some((mut buf, fits)) => {
+                buf.clear();
+                if fits {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    buf.reserve(min_cap);
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                }
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(min_cap)
+            }
+        }
+    }
+
+    /// An empty `Vec<u8>` with capacity at least `min_cap`.
+    pub fn take_u8(&self, min_cap: usize) -> Vec<u8> {
+        match take_best(&mut lock(&self.u8s), min_cap) {
+            Some((mut buf, fits)) => {
+                buf.clear();
+                if fits {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    buf.reserve(min_cap);
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                }
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(min_cap)
+            }
+        }
+    }
+
+    /// Park a buffer for reuse (its contents are discarded).
+    pub fn put_u16(&self, mut buf: Vec<u16>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        let mut pool = lock(&self.u16s);
+        if pool.len() < MAX_POOLED {
+            pool.push(buf);
+            self.returned.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Park a buffer for reuse (its contents are discarded).
+    pub fn put_u8(&self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        let mut pool = lock(&self.u8s);
+        if pool.len() < MAX_POOLED {
+            pool.push(buf);
+            self.returned.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn stats(&self) -> ScratchStats {
+        ScratchStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            returned: self.returned.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn first_take_misses_then_reuse_hits() {
+        let pool = ScratchPool::new();
+        let buf = pool.take_u16(100);
+        assert!(buf.capacity() >= 100 && buf.is_empty());
+        assert_eq!(pool.stats().misses, 1);
+        pool.put_u16(buf);
+        let buf = pool.take_u16(80);
+        assert!(buf.capacity() >= 80);
+        assert_eq!(pool.stats(), ScratchStats { hits: 1, misses: 1, returned: 1 });
+    }
+
+    #[test]
+    fn returned_buffers_come_back_cleared() {
+        let pool = ScratchPool::new();
+        let mut buf = pool.take_u8(8);
+        buf.extend_from_slice(&[1, 2, 3]);
+        pool.put_u8(buf);
+        assert!(pool.take_u8(4).is_empty());
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate_buffer() {
+        let pool = ScratchPool::new();
+        pool.put_u16(Vec::with_capacity(1000));
+        pool.put_u16(Vec::with_capacity(100));
+        let buf = pool.take_u16(50);
+        assert!(buf.capacity() >= 50 && buf.capacity() < 1000, "{}", buf.capacity());
+        // the big one is still parked for big requests
+        assert!(pool.take_u16(900).capacity() >= 900);
+        assert_eq!(pool.stats().hits, 2);
+    }
+
+    #[test]
+    fn undersized_buffer_is_grown_and_counted_as_miss() {
+        let pool = ScratchPool::new();
+        pool.put_u8(Vec::with_capacity(16));
+        let buf = pool.take_u8(4096);
+        assert!(buf.capacity() >= 4096);
+        assert_eq!(pool.stats().misses, 1);
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_not_pooled() {
+        let pool = ScratchPool::new();
+        pool.put_u8(Vec::new());
+        assert_eq!(pool.stats().returned, 0);
+    }
+
+    #[test]
+    fn pool_size_is_bounded() {
+        let pool = ScratchPool::new();
+        for _ in 0..(MAX_POOLED + 10) {
+            pool.put_u16(Vec::with_capacity(8));
+        }
+        assert_eq!(pool.stats().returned, MAX_POOLED as u64);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let pool = std::sync::Arc::new(ScratchPool::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = std::sync::Arc::clone(&pool);
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let b = pool.take_u16(256);
+                        pool.put_u16(b);
+                    }
+                });
+            }
+        });
+        let st = pool.stats();
+        assert_eq!(st.hits + st.misses, 200);
+        // once each thread has seeded a buffer, everything is a hit
+        assert!(st.misses <= 4, "misses = {}", st.misses);
+    }
+}

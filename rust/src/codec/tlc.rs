@@ -82,8 +82,17 @@ fn encode_residual(enc: &mut Encoder, models: &mut Models, ctx: usize, r: i32) {
 /// 128x128 micro-bench: ~15% encode speedup at n=4, within noise at n=8
 /// (the adaptive range coder dominates there) — EXPERIMENTS.md §Perf.
 pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_into(samples, width, height, n, &mut out);
+    out
+}
+
+/// Re-entrant [`encode`]: writes the stream into `out` (cleared first),
+/// reusing its capacity so steady-state encoding does not allocate. The
+/// stripe fan-out runs one of these per stripe on its own scratch buffer.
+pub fn encode_into(samples: &[u16], width: usize, height: usize, n: u8, out: &mut Vec<u8>) {
     assert_eq!(samples.len(), width * height);
-    let mut enc = Encoder::new();
+    let mut enc = Encoder::with_buffer(std::mem::take(out));
     let mut models = Models::new();
     let half = 1i32 << (n - 1);
     // first row (and the y=0 corner) via the general path
@@ -111,7 +120,7 @@ pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
             encode_residual(&mut enc, &mut models, ctx, cur_row[x] as i32 - med(a, b, c));
         }
     }
-    enc.finish()
+    *out = enc.finish();
 }
 
 /// Decode a TLC stream back to samples.
@@ -122,10 +131,25 @@ pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
 /// panics or allocates beyond the validated geometry.
 pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Result<Vec<u16>> {
     let samples_len = meta.checked_samples()?;
+    let mut samples = vec![0u16; samples_len];
+    decode_into(bytes, meta, &mut samples)?;
+    Ok(samples)
+}
+
+/// Re-entrant [`decode`]: writes into a caller-owned slice of exactly
+/// `meta.width * meta.height` samples (a mismatch is [`Error::Corrupt`],
+/// keeping the total-decode contract — no panic on bad plumbing either).
+pub fn decode_into(bytes: &[u8], meta: &ImageMeta, samples: &mut [u16]) -> Result<()> {
+    let samples_len = meta.checked_samples()?;
+    if samples.len() != samples_len {
+        return Err(Error::Corrupt(format!(
+            "tlc output slice is {} samples, geometry says {samples_len}",
+            samples.len()
+        )));
+    }
     let (width, height, n) = (meta.width, meta.height, meta.n);
     let mut dec = Decoder::new(bytes);
     let mut models = Models::new();
-    let mut samples = vec![0u16; samples_len];
     let half = 1i32 << (n - 1);
     let maxv = (1i32 << n) - 1;
     let mut decode_at = |dec: &mut Decoder,
@@ -174,7 +198,7 @@ pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Result<Vec<u16>> {
             got: dec.byte_len(),
         });
     }
-    Ok(samples)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -265,6 +289,27 @@ mod tests {
                 "cut at {cut} not reported"
             );
         }
+    }
+
+    #[test]
+    fn into_apis_reuse_buffers_and_check_lengths() {
+        let mut r = SplitMix64::new(8);
+        let samples: Vec<u16> = (0..24 * 24).map(|_| (r.next_u64() & 255) as u16).collect();
+        let meta = ImageMeta { width: 24, height: 24, n: 8 };
+        let mut bytes = Vec::new();
+        encode_into(&samples, 24, 24, 8, &mut bytes);
+        let cap = bytes.capacity();
+        let mut out = vec![0u16; 24 * 24];
+        decode_into(&bytes, &meta, &mut out).unwrap();
+        assert_eq!(out, samples);
+        // wrong-size slice is a typed error, not a panic
+        let mut short = vec![0u16; 10];
+        assert!(matches!(decode_into(&bytes, &meta, &mut short), Err(Error::Corrupt(_))));
+        // re-encoding into the same buffer reuses its capacity exactly
+        encode_into(&samples, 24, 24, 8, &mut bytes);
+        assert_eq!(bytes.capacity(), cap);
+        decode_into(&bytes, &meta, &mut out).unwrap();
+        assert_eq!(out, samples);
     }
 
     #[test]

@@ -172,8 +172,17 @@ fn code_plane_dec(
 
 /// Encode C channel planes of (h, w) samples at depth n.
 pub fn encode_planes(bins: &[u16], c: usize, h: usize, w: usize, n: u8) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_planes_into(bins, c, h, w, n, &mut out);
+    out
+}
+
+/// Re-entrant [`encode_planes`]: writes the stream into `out` (cleared
+/// first), reusing its capacity. One of these runs per stripe of
+/// channels in the striped container path.
+pub fn encode_planes_into(bins: &[u16], c: usize, h: usize, w: usize, n: u8, out: &mut Vec<u8>) {
     assert_eq!(bins.len(), c * h * w);
-    let mut enc = Encoder::new();
+    let mut enc = Encoder::with_buffer(std::mem::take(out));
     let mut models = Models::new();
     for ch in 0..c {
         let cur = &bins[ch * h * w..(ch + 1) * h * w];
@@ -184,7 +193,7 @@ pub fn encode_planes(bins: &[u16], c: usize, h: usize, w: usize, n: u8) -> Vec<u
         };
         code_plane_enc(&mut enc, &mut models, cur, prev, w, h, n);
     }
-    enc.finish()
+    *out = enc.finish();
 }
 
 /// Decode C channel planes.
@@ -194,21 +203,45 @@ pub fn encode_planes(bins: &[u16], c: usize, h: usize, w: usize, n: u8) -> Vec<u
 /// counter; corrupt (non-truncated) bytes decode to clamped garbage —
 /// integrity is the container CRC's job.
 pub fn decode_planes(bytes: &[u8], c: usize, h: usize, w: usize, n: u8) -> Result<Vec<u16>> {
+    let total = checked_total(c, h, w, n)?;
+    let mut out = vec![0u16; total];
+    decode_planes_into(bytes, c, h, w, n, &mut out)?;
+    Ok(out)
+}
+
+fn checked_total(c: usize, h: usize, w: usize, n: u8) -> Result<usize> {
     if !(1..=16).contains(&n) {
         return Err(Error::Corrupt(format!("bit depth {n} outside 1..=16")));
     }
-    let total = c
-        .checked_mul(h)
+    c.checked_mul(h)
         .and_then(|v| v.checked_mul(w))
         .filter(|&v| v <= MAX_DECODED_SAMPLES)
         .ok_or(Error::LimitExceeded {
             what: "decoded samples",
             requested: usize::MAX,
             limit: MAX_DECODED_SAMPLES,
-        })?;
+        })
+}
+
+/// Re-entrant [`decode_planes`]: writes into a caller-owned slice of
+/// exactly `c * h * w` samples (a mismatch is [`Error::Corrupt`]).
+pub fn decode_planes_into(
+    bytes: &[u8],
+    c: usize,
+    h: usize,
+    w: usize,
+    n: u8,
+    out: &mut [u16],
+) -> Result<()> {
+    let total = checked_total(c, h, w, n)?;
+    if out.len() != total {
+        return Err(Error::Corrupt(format!(
+            "tlc-ic output slice is {} samples, geometry says {total}",
+            out.len()
+        )));
+    }
     let mut dec = Decoder::new(bytes);
     let mut models = Models::new();
-    let mut out = vec![0u16; total];
     for ch in 0..c {
         let (done, rest) = out.split_at_mut(ch * h * w);
         let cur = &mut rest[..h * w];
@@ -226,7 +259,7 @@ pub fn decode_planes(bytes: &[u8], c: usize, h: usize, w: usize, n: u8) -> Resul
             got: dec.byte_len(),
         });
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

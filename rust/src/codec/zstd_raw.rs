@@ -4,20 +4,44 @@
 //! compares against.
 
 use super::bitio::{BitReader, BitWriter};
+use super::scratch::ScratchPool;
 use super::{Error, ImageMeta, Result};
 
 /// Bit-pack to ceil(n) bits/sample, then zstd level 19.
-pub fn encode(samples: &[u16], _width: usize, _height: usize, n: u8) -> Vec<u8> {
-    let mut w = BitWriter::new();
+pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
+    let scratch = ScratchPool::new();
+    let mut out = Vec::new();
+    encode_into(samples, width, height, n, &scratch, &mut out);
+    out
+}
+
+/// Re-entrant [`encode`]: the bit-packed intermediate comes from
+/// `scratch` and goes back when done; the compressed stream lands in
+/// `out`. zstd's context and output buffer are its own allocations —
+/// documented exception to the zero-alloc claim (see `codec::scratch`).
+pub fn encode_into(
+    samples: &[u16],
+    _width: usize,
+    _height: usize,
+    n: u8,
+    scratch: &ScratchPool,
+    out: &mut Vec<u8>,
+) {
+    let packed_cap = (samples.len() * n as usize).div_ceil(8);
+    let mut w = BitWriter::with_buffer(scratch.take_u8(packed_cap));
     for &s in samples {
         w.put_bits(s as u32, n);
     }
+    let packed = w.finish();
     // in-memory compression of a sane buffer cannot fail; a failure here
     // is a programming error, not an input error
-    match zstd::bulk::compress(&w.finish(), 19) {
-        Ok(out) => out,
+    let compressed = match zstd::bulk::compress(&packed, 19) {
+        Ok(c) => c,
         Err(e) => panic!("zstd compress failed: {e}"),
-    }
+    };
+    scratch.put_u8(packed);
+    out.clear();
+    out.extend_from_slice(&compressed);
 }
 
 /// Inverse of `encode`.
@@ -28,6 +52,21 @@ pub fn encode(samples: &[u16], _width: usize, _height: usize, n: u8) -> Vec<u8> 
 /// [`Error::Truncated`].
 pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Result<Vec<u16>> {
     let count = meta.checked_samples()?;
+    let mut samples = vec![0u16; count];
+    decode_into(bytes, meta, &mut samples)?;
+    Ok(samples)
+}
+
+/// Re-entrant [`decode`]: writes into a caller-owned slice of exactly
+/// `width * height` samples (a mismatch is [`Error::Corrupt`]).
+pub fn decode_into(bytes: &[u8], meta: &ImageMeta, samples: &mut [u16]) -> Result<()> {
+    let count = meta.checked_samples()?;
+    if samples.len() != count {
+        return Err(Error::Corrupt(format!(
+            "zstd output slice is {} samples, geometry says {count}",
+            samples.len()
+        )));
+    }
     let packed_len = (count * meta.n as usize).div_ceil(8);
     // `decompress` caps its output at `packed_len` bytes; an over-long
     // stream errors inside zstd rather than growing the buffer
@@ -41,7 +80,10 @@ pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Result<Vec<u16>> {
         });
     }
     let mut r = BitReader::new(&raw);
-    Ok((0..count).map(|_| r.get_bits(meta.n) as u16).collect())
+    for s in samples.iter_mut() {
+        *s = r.get_bits(meta.n) as u16;
+    }
+    Ok(())
 }
 
 #[cfg(test)]

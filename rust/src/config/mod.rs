@@ -25,6 +25,10 @@ pub struct PipelineConfig {
     pub policy: Policy,
     /// Apply Eq. 6 consolidation (paper = true; ablation E6 flips it).
     pub consolidate: bool,
+    /// Stripe count K for the v2 striped container (1 = classic v1
+    /// single-stream frames). Clamped to the available stripe units at
+    /// pack time; stripes encode/decode concurrently.
+    pub stripes: usize,
 }
 
 impl Default for PipelineConfig {
@@ -37,6 +41,7 @@ impl Default for PipelineConfig {
             qp: 0,
             policy: Policy::Correlation,
             consolidate: true,
+            stripes: 1,
         }
     }
 }
@@ -122,6 +127,12 @@ impl PipelineConfig {
             self.policy = Policy::parse(s)?;
         }
         set_if(&mut self.consolidate, v.get("consolidate").and_then(Value::as_bool));
+        if let Some(k) = v.get("stripes").and_then(Value::as_i64) {
+            if !(1..=1024).contains(&k) {
+                bail!("config field 'stripes': must be in 1..=1024, got {k}");
+            }
+            self.stripes = k as usize;
+        }
         Ok(())
     }
 
@@ -188,7 +199,7 @@ mod tests {
     #[test]
     fn pipeline_overlay() {
         let mut cfg = PipelineConfig::default();
-        let v = parse(r#"{"c": 32, "n": 6, "codec": "mic", "qp": 20, "policy": "variance", "consolidate": false}"#).unwrap();
+        let v = parse(r#"{"c": 32, "n": 6, "codec": "mic", "qp": 20, "policy": "variance", "consolidate": false, "stripes": 4}"#).unwrap();
         cfg.apply(&v).unwrap();
         assert_eq!(cfg.c, 32);
         assert_eq!(cfg.n, 6);
@@ -196,6 +207,18 @@ mod tests {
         assert_eq!(cfg.qp, 20);
         assert_eq!(cfg.policy, Policy::Variance);
         assert!(!cfg.consolidate);
+        assert_eq!(cfg.stripes, 4);
+    }
+
+    #[test]
+    fn stripes_validated() {
+        let mut cfg = PipelineConfig::default();
+        assert_eq!(cfg.stripes, 1);
+        let err = cfg.apply(&parse(r#"{"stripes": 0}"#).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("'stripes'"), "{err}");
+        assert!(cfg.apply(&parse(r#"{"stripes": 4096}"#).unwrap()).is_err());
+        assert!(cfg.apply(&parse(r#"{"stripes": 8}"#).unwrap()).is_ok());
+        assert_eq!(cfg.stripes, 8);
     }
 
     #[test]

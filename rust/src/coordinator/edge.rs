@@ -6,14 +6,17 @@
 //!       -> tile + entropy-code + frame (container)
 
 use crate::codec::container;
+use crate::codec::scratch::ScratchPool;
 use crate::config::PipelineConfig;
 use crate::quant;
+use crate::runtime::pool::WorkerPool;
 use crate::runtime::{Engine, Executable};
 use crate::selection::ChannelStats;
 use crate::tensor::{gather_channels_hwc_to_chw, Tensor};
 use crate::util::StageClock;
 use anyhow::Result;
 use std::rc::Rc;
+use std::sync::Arc;
 
 /// Edge-side stage outputs (for diagnostics and tests).
 #[derive(Debug, Clone)]
@@ -22,27 +25,45 @@ pub struct EdgeTrace {
     pub z: Tensor,
     /// Compressed frame size in bytes (the quantity Fig. 4 plots).
     pub frame_bytes: usize,
+    /// Stripe count actually packed into the frame (after clamping to
+    /// the available stripe units); 1 means a classic v1 frame.
+    pub stripes: usize,
     /// Per-stage latency, microseconds.
     pub stages: Vec<(&'static str, f64)>,
 }
 
-/// The edge node. Thread-confined (owns PJRT state via `Engine`).
+/// The edge node. Thread-confined (owns PJRT state via `Engine`); the
+/// encode stage itself fans stripes out over `pool` when
+/// `cfg.stripes > 1`.
 pub struct EdgeNode {
     engine: Rc<Engine>,
     frontend: Rc<Executable>,
     pub sel: Vec<usize>,
     pub cfg: PipelineConfig,
+    /// Worker pool for intra-frame (striped) encode parallelism.
+    pool: WorkerPool,
+    /// Reusable encode buffers; share one across stages via
+    /// [`Self::use_scratch`] to recycle frame buffers process-wide.
+    scratch: Arc<ScratchPool>,
 }
 
 impl EdgeNode {
     pub fn new(engine: Rc<Engine>, stats: &ChannelStats, cfg: PipelineConfig) -> Result<Self> {
         let frontend = engine.load("frontend_b1")?;
         let sel = stats.select(cfg.policy, cfg.c);
-        Ok(EdgeNode { engine, frontend, sel, cfg })
+        let pool = WorkerPool::new(cfg.stripes.max(1));
+        let scratch = Arc::new(ScratchPool::new());
+        Ok(EdgeNode { engine, frontend, sel, cfg, pool, scratch })
     }
 
     pub fn engine(&self) -> &Rc<Engine> {
         &self.engine
+    }
+
+    /// Swap in a shared scratch pool (e.g. the server's, so frame
+    /// buffers recycled by the decode stage flow back into encode).
+    pub fn use_scratch(&mut self, scratch: Arc<ScratchPool>) {
+        self.scratch = scratch;
     }
 
     /// Run the full edge pipeline on one image (H, W, 3).
@@ -62,12 +83,36 @@ impl EdgeNode {
         let q = quant::quantize(&planes, self.cfg.n);
         clock.lap("edge_quant");
 
-        let frame = container::pack(&q, self.cfg.codec, self.cfg.qp);
+        // stripes > 1 selects the v2 striped container: each stripe is
+        // entropy-coded concurrently on the pool, buffers from scratch
+        let stripes = if self.cfg.stripes > 1 {
+            let units = if self.cfg.codec == crate::codec::CodecKind::TlcIc {
+                q.c
+            } else {
+                crate::tile::grid_for(q.c).1
+            };
+            self.cfg.stripes.clamp(1, units.max(1))
+        } else {
+            1
+        };
+        let frame = if stripes > 1 {
+            container::pack_v2_with(
+                &q,
+                self.cfg.codec,
+                self.cfg.qp,
+                stripes,
+                &self.pool,
+                &self.scratch,
+            )
+        } else {
+            container::pack(&q, self.cfg.codec, self.cfg.qp)
+        };
         clock.lap("edge_encode");
 
         let trace = EdgeTrace {
             z,
             frame_bytes: frame.len(),
+            stripes,
             stages: clock.stages().to_vec(),
         };
         Ok((frame, trace))

@@ -24,12 +24,15 @@
 //! See DESIGN.md for the architecture and experiment index, and
 //! EXPERIMENTS.md for reproduction results.
 
-// The decode path (codec) and the serving stack (coordinator) carry a
-// no-panic contract: attacker-controlled bytes must never unwrap. Tier-1
-// CI enforces it with `cargo clippy --all-targets -- -D clippy::unwrap_used
+// The decode path (codec, including the `codec::scratch` buffer pool)
+// and the serving stack (coordinator) carry a no-panic contract:
+// attacker-controlled bytes must never unwrap. Tier-1 CI enforces it
+// with `cargo clippy --all-targets -- -D clippy::unwrap_used
 // -D clippy::expect_used`; the modules outside that contract opt out
 // explicitly below (their inputs are trusted, produced by this crate).
-// Test modules everywhere opt back in via inner `#![allow]`.
+// `runtime` opts out as a whole, but `runtime::pool` — which runs codec
+// work and must never poison its scope — opts back IN via an inner
+// `#![deny]`. Test modules everywhere opt back in via inner `#![allow]`.
 
 #[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod bench;

@@ -21,7 +21,7 @@ COMMANDS
   run        run the split pipeline over the eval set; report mAP + rate
              --c N --n BITS --codec tlc|png|zstd|mic --qp QP
              --policy corr|variance|first|random:SEED --no-consolidate
-             --images N
+             --images N --stripes K (striped v2 frames, parallel codec)
   baseline   cloud-only (unmodified detector) mAP over the eval set
   channels   E1 / Fig.3: mAP vs C sweep             [--images N]
   sweep      E2/E3 / Fig.4: rate–mAP curves + headline savings
@@ -30,10 +30,12 @@ COMMANDS
   ablate     E6: consolidation + selection-policy ablations
   serve      E5: pipelined serving demo with Poisson arrivals
              --rate RPS --requests N --batch-cap B --deadline-us US
-             --decode-workers N --corrupt-rate P (inject faults; frames
-             that fail to decode are dropped and counted, not fatal)
+             --decode-workers N (stripe-decode pool width)
+             --corrupt-rate P (inject faults; frames that fail to decode
+             are dropped and counted, not fatal) --stripes K
   encode     compress a CHW f32 .npy tensor into a .baf frame
              <in.npy> <out.baf> [--n BITS] [--codec NAME] [--qp QP]
+             [--stripes K]
   decode     decompress a .baf frame back to a CHW f32 .npy
              <in.baf> <out.npy>
   report     per-class AP breakdown + PR-curve JSON   [--images N] [--out F]
@@ -78,6 +80,13 @@ fn pipeline_cfg(args: &Args) -> Result<PipelineConfig> {
     if args.has_flag("no-consolidate") {
         cfg.consolidate = false;
     }
+    if let Some(k) = args.opt_parse::<usize>("stripes")? {
+        anyhow::ensure!(
+            (1..=1024).contains(&k),
+            "--stripes: must be in 1..=1024, got {k}"
+        );
+        cfg.stripes = k;
+    }
     Ok(cfg)
 }
 
@@ -88,17 +97,19 @@ fn images(args: &Args) -> Result<usize> {
 fn cmd_run(args: &Args) -> Result<()> {
     args.expect_known(&[
         "artifacts", "c", "n", "codec", "qp", "policy", "no-consolidate", "images",
+        "stripes",
     ])?;
     let cfg = pipeline_cfg(args)?;
     let n_img = images(args)?;
     println!(
-        "pipeline: C={} n={} codec={} qp={} policy={} consolidate={}",
+        "pipeline: C={} n={} codec={} qp={} policy={} consolidate={} stripes={}",
         cfg.c,
         cfg.n,
         cfg.codec.name(),
         cfg.qp,
         cfg.policy.name(),
-        cfg.consolidate
+        cfg.consolidate,
+        cfg.stripes
     );
     let pipe = Pipeline::open(cfg)?;
     let samples = baf::data::eval_set(n_img);
@@ -180,7 +191,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
         "artifacts", "c", "n", "codec", "qp", "policy", "no-consolidate", "rate",
         "requests", "batch-cap", "deadline-us", "decode-workers", "burst",
-        "corrupt-rate",
+        "corrupt-rate", "stripes",
     ])?;
     let pcfg = pipeline_cfg(args)?;
     let mut scfg = ServerConfig::default();
@@ -234,7 +245,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_encode(args: &Args) -> Result<()> {
-    args.expect_known(&["n", "codec", "qp"])?;
+    args.expect_known(&["n", "codec", "qp", "stripes"])?;
     let [input, output] = args.positional.as_slice() else {
         anyhow::bail!("usage: baf encode <in.npy> <out.baf> [--n BITS] [--codec NAME]");
     };
@@ -243,8 +254,17 @@ fn cmd_encode(args: &Args) -> Result<()> {
     let n = args.opt_parse::<u8>("n")?.unwrap_or(8);
     let codec = CodecKind::from_name(args.opt("codec").unwrap_or("tlc"))?;
     let qp = args.opt_parse::<u8>("qp")?.unwrap_or(0);
+    let stripes = args.opt_parse::<usize>("stripes")?.unwrap_or(1);
+    anyhow::ensure!(
+        (1..=1024).contains(&stripes),
+        "--stripes: must be in 1..=1024, got {stripes}"
+    );
     let q = baf::quant::quantize(&t, n);
-    let frame = baf::codec::container::pack(&q, codec, qp);
+    let frame = if stripes > 1 {
+        baf::codec::container::pack_v2(&q, codec, qp, stripes)
+    } else {
+        baf::codec::container::pack(&q, codec, qp)
+    };
     let raw = t.len() * 4;
     std::fs::write(output, &frame)?;
     println!(
@@ -280,7 +300,7 @@ fn cmd_decode(args: &Args) -> Result<()> {
 fn cmd_report(args: &Args) -> Result<()> {
     args.expect_known(&[
         "artifacts", "c", "n", "codec", "qp", "policy", "no-consolidate", "images",
-        "out",
+        "out", "stripes",
     ])?;
     let cfg = pipeline_cfg(args)?;
     let pipe = Pipeline::open(cfg)?;
@@ -308,7 +328,7 @@ fn cmd_report(args: &Args) -> Result<()> {
 fn cmd_render(args: &Args) -> Result<()> {
     args.expect_known(&[
         "artifacts", "c", "n", "codec", "qp", "policy", "no-consolidate", "count",
-        "out-dir",
+        "out-dir", "stripes",
     ])?;
     let cfg = pipeline_cfg(args)?;
     let pipe = Pipeline::open(cfg)?;

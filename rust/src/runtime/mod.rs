@@ -6,6 +6,7 @@
 
 mod artifact;
 mod engine;
+pub mod pool;
 
 pub use artifact::{ArtifactSpec, Manifest};
 pub use engine::{Engine, Executable};

@@ -1,0 +1,135 @@
+//! Scoped worker pool for intra-frame parallelism (the striped codec).
+//!
+//! Deliberately tiny: no queues, no long-lived threads, no dependencies —
+//! just `std::thread::scope` fan-out over a slice of jobs. That matches
+//! the workload exactly: a frame arrives, its K stripes are known up
+//! front, each stripe is coded independently, and the frame is done when
+//! the scope joins. Spawning a scoped thread is cheap relative to the
+//! entropy-coding work of a stripe (tens of microseconds vs milliseconds
+//! for realistic tensors), so a persistent pool would buy nothing while
+//! costing shutdown and lifetime complexity.
+//!
+//! The pool carries a no-panic contract like the decode path it serves
+//! (the inner deny below overrides the crate-level allow on `runtime`):
+//! jobs communicate failure by writing a `Result` into their own job
+//! struct, never by panicking across the scope boundary.
+
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+/// A scoped fan-out executor with a fixed degree of parallelism.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool that runs jobs on up to `threads` concurrent scoped
+    /// threads. `threads == 1` means run inline on the caller's thread
+    /// (zero spawn overhead), which is also the fallback for `0`.
+    pub fn new(threads: usize) -> Self {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// Sized to the machine: one thread per available core.
+    pub fn with_default_parallelism() -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(std::num::NonZeroUsize::get)
+            .unwrap_or(1);
+        Self::new(threads)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(index, &mut item)` for every item, fanning the slice out
+    /// across up to `threads` scoped threads. Items never move: each
+    /// thread owns a disjoint `chunks_mut` slice, so `T` needs `Send`
+    /// but not `Sync`, and results are written in place.
+    ///
+    /// With one thread (or one item) this runs inline with no spawn.
+    pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        if self.threads <= 1 || n <= 1 {
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let chunk = n.div_ceil(self.threads.min(n));
+        std::thread::scope(|scope| {
+            for (c, items) in items.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                scope.spawn(move || {
+                    for (i, item) in items.iter_mut().enumerate() {
+                        f(c * chunk + i, item);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Produce `n` values by running `f(index)` across the pool.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        self.for_each_mut(&mut slots, |i, slot| *slot = Some(f(i)));
+        slots.into_iter().flatten().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn for_each_visits_every_item_once_with_its_index() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let pool = WorkerPool::new(threads);
+            let mut items: Vec<(usize, usize)> = (0..17).map(|i| (i, 0)).collect();
+            pool.for_each_mut(&mut items, |i, item| {
+                assert_eq!(i, item.0, "index must match slot");
+                item.1 += 1;
+            });
+            assert!(items.iter().all(|&(_, hits)| hits == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = WorkerPool::new(4);
+        let out = pool.map(23, |i| i * i);
+        assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_threads_and_empty_input_are_fine() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let mut empty: Vec<u8> = Vec::new();
+        pool.for_each_mut(&mut empty, |_, _| {});
+        assert!(pool.map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items_still_covers_all() {
+        let pool = WorkerPool::new(16);
+        let mut items = vec![0u32; 3];
+        pool.for_each_mut(&mut items, |i, item| *item = i as u32 + 1);
+        assert_eq!(items, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn default_parallelism_is_at_least_one() {
+        assert!(WorkerPool::with_default_parallelism().threads() >= 1);
+    }
+}

@@ -29,20 +29,33 @@ pub struct TiledImage {
 }
 
 /// Tile geometry per §3.2: cols = 2^ceil(log2 C / 2), rows = 2^floor(...).
+///
+/// Exact integer bit math: the old `(c as f64).log2().ceil()` loses
+/// precision once `c` no longer fits a f64 mantissa (e.g. `2^53 + 1`
+/// rounds to 53.0 and yields a grid with fewer cells than channels).
 pub fn grid_for(c: usize) -> (usize, usize) {
     assert!(c > 0);
-    let lg = (c as f64).log2().ceil() as u32; // exact for powers of two
+    // ceil(log2 c) without floats: ilog2 is floor(log2 c)
+    let lg = if c.is_power_of_two() { c.ilog2() } else { c.ilog2() + 1 };
     let cols = 1usize << lg.div_ceil(2);
     let rows = 1usize << (lg / 2);
-    debug_assert!(cols * rows >= c);
+    debug_assert!(cols.checked_mul(rows).is_some_and(|cells| cells >= c));
     (cols, rows)
 }
 
 /// Arrange quantized channel planes into the tiled image.
 pub fn tile(q: &QuantizedTensor) -> TiledImage {
+    tile_with_buffer(q, Vec::new())
+}
+
+/// Like [`tile`] but building the sample plane in a recycled buffer
+/// (cleared and zero-filled here), so steady-state encoding does not
+/// allocate — pair with [`crate::codec::scratch::ScratchPool`].
+pub fn tile_with_buffer(q: &QuantizedTensor, mut samples: Vec<u16>) -> TiledImage {
     let (cols, rows) = grid_for(q.c);
     let (tw, th) = (q.w, q.h);
-    let mut samples = vec![0u16; cols * tw * rows * th];
+    samples.clear();
+    samples.resize(cols * tw * rows * th, 0);
     let width = cols * tw;
     for ch in 0..q.c {
         let (ty, tx) = (ch / cols, ch % cols);
@@ -69,6 +82,15 @@ pub fn tile(q: &QuantizedTensor) -> TiledImage {
 /// travel separately as container side info).
 pub fn untile(img: &TiledImage) -> Vec<u16> {
     let mut bins = vec![0u16; img.channels * img.tile_h * img.tile_w];
+    untile_into(img, &mut bins);
+    bins
+}
+
+/// [`untile`] into a caller-owned slice of exactly
+/// `channels * tile_h * tile_w` samples (trusted local plumbing — a
+/// mismatch is a programming error, hence the assert).
+pub fn untile_into(img: &TiledImage, bins: &mut [u16]) {
+    assert_eq!(bins.len(), img.channels * img.tile_h * img.tile_w);
     for ch in 0..img.channels {
         let (ty, tx) = (ch / img.cols, ch % img.cols);
         for y in 0..img.tile_h {
@@ -78,7 +100,6 @@ pub fn untile(img: &TiledImage) -> Vec<u16> {
                 .copy_from_slice(&img.samples[src_row..src_row + img.tile_w]);
         }
     }
-    bins
 }
 
 #[cfg(test)]
@@ -106,6 +127,38 @@ mod tests {
         assert_eq!(grid_for(128), (16, 8));
         assert_eq!(grid_for(4), (2, 2));
         assert_eq!(grid_for(1), (1, 1));
+    }
+
+    #[test]
+    fn grid_is_exact_beyond_f64_mantissa() {
+        // non-powers-of-two round up
+        assert_eq!(grid_for(5), (4, 2));
+        assert_eq!(grid_for(9), (4, 4));
+        assert_eq!(grid_for(65), (16, 8));
+        // 2^53 + 1: the old float path computed ceil(log2) = 53 (the +1
+        // is below f64 resolution) and produced a grid with fewer cells
+        // than channels; integer math rounds up to 54 bits
+        #[cfg(target_pointer_width = "64")]
+        {
+            let c = (1usize << 53) + 1;
+            let (cols, rows) = grid_for(c);
+            assert_eq!((cols, rows), (1 << 27, 1 << 27));
+            assert!(cols * rows >= c);
+        }
+    }
+
+    #[test]
+    fn tile_with_buffer_reuses_capacity() {
+        let q = random_quant(8, 8, 8, 8, 11);
+        let img = tile(&q);
+        let buf = Vec::with_capacity(img.samples.len());
+        let cap = buf.capacity();
+        let img2 = tile_with_buffer(&q, buf);
+        assert_eq!(img2, img);
+        assert_eq!(img2.samples.capacity(), cap);
+        let mut bins = vec![0u16; q.bins.len()];
+        untile_into(&img2, &mut bins);
+        assert_eq!(bins, q.bins);
     }
 
     #[test]

@@ -2,6 +2,13 @@
 //!
 //! Only what the golden files and tools need: little-endian `<f4` / `<i4`
 //! / `<i8`, C-order. Anything else is rejected loudly.
+//!
+//! Allocation bounds: the declared header length is capped at
+//! [`MAX_HEADER_LEN`] and the declared element count (shape product,
+//! computed with overflow checks) at [`crate::codec::MAX_DECODED_SAMPLES`]
+//! — a corrupt or hostile header errors with a typed
+//! [`crate::codec::Error::LimitExceeded`] instead of driving a huge `vec!`
+//! allocation.
 
 use crate::tensor::Tensor;
 use anyhow::{anyhow, bail, Context, Result};
@@ -9,6 +16,10 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Upper bound on the declared npy header length (the real headers this
+/// crate writes/reads are < 1 KiB; 1 MiB leaves huge margin).
+pub const MAX_HEADER_LEN: usize = 1 << 20;
 
 /// Typed payload of an `.npy` file.
 #[derive(Debug, Clone)]
@@ -59,6 +70,14 @@ pub fn read(path: &Path) -> Result<Npy> {
         f.read_exact(&mut b)?;
         u32::from_le_bytes(b) as usize
     };
+    if header_len > MAX_HEADER_LEN {
+        return Err(crate::codec::Error::LimitExceeded {
+            what: "npy header bytes",
+            requested: header_len,
+            limit: MAX_HEADER_LEN,
+        }
+        .into());
+    }
     let mut header = vec![0u8; header_len];
     f.read_exact(&mut header)?;
     let header = String::from_utf8(header)?;
@@ -69,7 +88,22 @@ pub fn read(path: &Path) -> Result<Npy> {
         bail!("{}: fortran order unsupported", path.display());
     }
     let shape = parse_shape(&header)?;
-    let count: usize = shape.iter().product();
+    let count = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or(crate::codec::Error::LimitExceeded {
+            what: "npy shape product",
+            requested: usize::MAX,
+            limit: crate::codec::MAX_DECODED_SAMPLES,
+        })?;
+    if count > crate::codec::MAX_DECODED_SAMPLES {
+        return Err(crate::codec::Error::LimitExceeded {
+            what: "npy element count",
+            requested: count,
+            limit: crate::codec::MAX_DECODED_SAMPLES,
+        }
+        .into());
+    }
 
     let mut payload = Vec::new();
     f.read_to_end(&mut payload)?;
@@ -202,5 +236,75 @@ mod tests {
         let path = dir.join("junk.npy");
         std::fs::write(&path, b"not numpy at all").unwrap();
         assert!(read(&path).is_err());
+    }
+
+    /// Hand-build an npy v2.0 file with an arbitrary declared header
+    /// length and header text (v2 uses a u32 length, so it can declare
+    /// absurd values).
+    fn hostile_npy(declared_header_len: u32, header: &str) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&[2, 0]);
+        out.extend_from_slice(&declared_header_len.to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out
+    }
+
+    #[test]
+    fn oversized_header_len_is_a_typed_limit_error() {
+        let dir = std::env::temp_dir().join("baf_tio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bigheader.npy");
+        // declares a 1 GiB header; the file itself stays tiny
+        std::fs::write(&path, hostile_npy(1 << 30, "")).unwrap();
+        let err = read(&path).expect_err("must reject");
+        let codec_err = err
+            .downcast_ref::<crate::codec::Error>()
+            .expect("typed codec error");
+        assert!(matches!(
+            codec_err,
+            crate::codec::Error::LimitExceeded { what: "npy header bytes", .. }
+        ));
+    }
+
+    #[test]
+    fn oversized_shape_is_a_typed_limit_error() {
+        let dir = std::env::temp_dir().join("baf_tio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bigshape.npy");
+        // shape product (2^30) is far over MAX_DECODED_SAMPLES but does
+        // not overflow usize — hits the element-count cap
+        let header =
+            "{'descr': '<f4', 'fortran_order': False, 'shape': (32768, 32768), }\n";
+        std::fs::write(
+            &path,
+            hostile_npy(header.len() as u32, header),
+        )
+        .unwrap();
+        let err = read(&path).expect_err("must reject");
+        let codec_err = err
+            .downcast_ref::<crate::codec::Error>()
+            .expect("typed codec error");
+        assert!(matches!(
+            codec_err,
+            crate::codec::Error::LimitExceeded { what: "npy element count", .. }
+        ));
+    }
+
+    #[test]
+    fn overflowing_shape_product_is_a_typed_limit_error() {
+        let dir = std::env::temp_dir().join("baf_tio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("overflowshape.npy");
+        // product overflows usize; checked_mul must catch it, not wrap
+        let header = "{'descr': '<f4', 'fortran_order': False, \
+                      'shape': (18446744073709551615, 16), }\n";
+        std::fs::write(
+            &path,
+            hostile_npy(header.len() as u32, header),
+        )
+        .unwrap();
+        let err = read(&path).expect_err("must reject");
+        assert!(err.downcast_ref::<crate::codec::Error>().is_some());
     }
 }

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (see ROADMAP.md). Run from the repo root.
+#
+#   build + tests + the scoped clippy no-panic gate, then a smoke run of
+#   bench_codec with JSON emission so the striped-codec acceptance
+#   assertions (size parity, zero steady-state allocations, K=4 speedup
+#   on >=4-core machines) and the BENCH_*.json emitter can't rot.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+cargo clippy --all-targets -- -D clippy::unwrap_used -D clippy::expect_used
+cargo bench --bench bench_codec -- --smoke --json-out target/bench-json
+test -f target/bench-json/BENCH_codec.json
+echo "tier-1 OK"

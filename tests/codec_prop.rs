@@ -5,8 +5,10 @@
 
 #![allow(clippy::unwrap_used, clippy::expect_used)]
 
+use baf::codec::scratch::ScratchPool;
 use baf::codec::{container, CodecKind, ImageMeta};
 use baf::quant::{consolidate, dequantize, quantize};
+use baf::runtime::pool::WorkerPool;
 use baf::tensor::Tensor;
 use baf::tile::{tile, untile};
 use baf::util::SplitMix64;
@@ -46,6 +48,98 @@ fn prop_lossless_container_roundtrip() {
             assert_eq!(back.bins, q.bins, "case {case} {codec:?} n={n} c={c}");
             assert_eq!(back.ranges, q.ranges, "case {case} {codec:?} ranges");
             assert_eq!((back.c, back.h, back.w, back.n), (c, h, w, n));
+        }
+    }
+}
+
+/// PROPERTY: the striped v2 container roundtrips every tensor exactly
+/// for every lossless codec and every stripe count — including K=1 and
+/// K far beyond the number of stripeable units (which must clamp, not
+/// fail).
+#[test]
+fn prop_striped_container_roundtrip() {
+    let mut r = SplitMix64::new(0x5712ED);
+    for case in 0..80 {
+        let c = [1usize, 3, 4, 8, 16][(r.next_u64() % 5) as usize];
+        let h = [4usize, 8, 16][(r.next_u64() % 3) as usize];
+        let w = [4usize, 8, 16][(r.next_u64() % 3) as usize];
+        let n = (r.next_u64() % 16 + 1) as u8;
+        let k = [1usize, 2, 3, 7, 999][(r.next_u64() % 5) as usize];
+        let z = random_tensor(&mut r, c, h, w);
+        let q = quantize(&z, n);
+        for codec in [
+            CodecKind::Tlc,
+            CodecKind::PngLike,
+            CodecKind::ZstdRaw,
+            CodecKind::TlcIc,
+        ] {
+            let frame = container::pack_v2(&q, codec, 0, k);
+            let parsed = container::parse(&frame)
+                .unwrap_or_else(|e| panic!("case {case} {codec:?} k={k}: {e}"));
+            assert_eq!(parsed.version, container::VERSION2);
+            assert!(
+                !parsed.stripes.is_empty() && parsed.stripes.len() <= k.max(1),
+                "case {case} {codec:?}: bad stripe count {}",
+                parsed.stripes.len()
+            );
+            let back = container::unpack(&parsed)
+                .unwrap_or_else(|e| panic!("case {case} {codec:?} k={k}: {e}"));
+            assert_eq!(back.bins, q.bins, "case {case} {codec:?} n={n} k={k}");
+            assert_eq!(back.ranges, q.ranges, "case {case} {codec:?} ranges");
+            assert_eq!((back.c, back.h, back.w, back.n), (c, h, w, n));
+        }
+    }
+}
+
+/// PROPERTY: decoding a striped frame on a multi-thread pool with a
+/// shared scratch pool agrees bit-for-bit with the serial decode.
+#[test]
+fn prop_striped_parallel_decode_agrees_with_serial() {
+    let mut r = SplitMix64::new(0x9A4A11E1);
+    let pool = WorkerPool::new(4);
+    let scratch = ScratchPool::new();
+    for case in 0..40 {
+        let c = [2usize, 8, 16][(r.next_u64() % 3) as usize];
+        let n = (r.next_u64() % 12 + 1) as u8;
+        let k = (r.next_u64() % 6 + 1) as usize;
+        let z = random_tensor(&mut r, c, 8, 8);
+        let q = quantize(&z, n);
+        for codec in [CodecKind::Tlc, CodecKind::TlcIc] {
+            let frame = container::pack_v2_with(&q, codec, 0, k, &pool, &scratch);
+            let parsed = container::parse(&frame)
+                .unwrap_or_else(|e| panic!("case {case} {codec:?}: {e}"));
+            let serial = container::unpack(&parsed)
+                .unwrap_or_else(|e| panic!("case {case} {codec:?}: {e}"));
+            let par = container::unpack_with(&parsed, &pool, &scratch)
+                .unwrap_or_else(|e| panic!("case {case} {codec:?}: {e}"));
+            assert_eq!(par.bins, serial.bins, "case {case} {codec:?} k={k}");
+            scratch.put_u16(par.bins);
+            scratch.put_u8(frame);
+        }
+    }
+}
+
+/// PROPERTY: a single-stripe v2 frame carries the exact v1 payload —
+/// striping at K=1 is pure framing, zero entropy-coding change.
+#[test]
+fn prop_k1_v2_payload_matches_v1() {
+    let mut r = SplitMix64::new(0x0F4A);
+    for case in 0..40 {
+        let c = [1usize, 4, 8][(r.next_u64() % 3) as usize];
+        let n = (r.next_u64() % 16 + 1) as u8;
+        let z = random_tensor(&mut r, c, 8, 8);
+        let q = quantize(&z, n);
+        for codec in [
+            CodecKind::Tlc,
+            CodecKind::PngLike,
+            CodecKind::ZstdRaw,
+            CodecKind::TlcIc,
+        ] {
+            let v1 = container::parse(&container::pack(&q, codec, 0))
+                .unwrap_or_else(|e| panic!("case {case} {codec:?}: {e}"));
+            let v2 = container::parse(&container::pack_v2(&q, codec, 0, 1))
+                .unwrap_or_else(|e| panic!("case {case} {codec:?}: {e}"));
+            assert_eq!(v2.payload, v1.payload, "case {case} {codec:?} n={n}");
         }
     }
 }

@@ -18,7 +18,9 @@
 
 #![allow(clippy::unwrap_used, clippy::expect_used)]
 
-use baf::codec::faultgen::{all_bit_flips, all_truncations, header_mutations, Corruptor};
+use baf::codec::faultgen::{
+    all_bit_flips, all_truncations, header_mutations, stripe_table_mutations, Corruptor,
+};
 use baf::codec::{container, CodecKind, ImageMeta, ALL_CODECS};
 use baf::quant::{quantize, QuantizedTensor};
 use baf::tensor::Tensor;
@@ -106,6 +108,102 @@ fn header_mutations_never_panic_and_stay_consistent() {
                         codec.name()
                     );
                 }
+            }
+        }
+    }
+}
+
+/// Striped (v2) frames inherit the full truncation contract: every
+/// prefix is rejected.
+#[test]
+fn every_truncation_of_striped_frames_is_rejected() {
+    for codec in ALL_CODECS {
+        let q = sample_quant(4, 8, 8, 6, 0x57B0 + codec as u64);
+        let frame = container::pack_v2(&q, codec, qp_for(codec), 3);
+        for fault in all_truncations(frame.len()) {
+            let bad = fault.apply(&frame);
+            assert!(
+                container::parse(&bad).is_err(),
+                "{}: v2 truncation to {} of {} bytes accepted",
+                codec.name(),
+                bad.len(),
+                frame.len()
+            );
+        }
+    }
+}
+
+/// Striped (v2) frames inherit the bit-flip contract: detected (frame
+/// CRC or per-stripe CRC) or decoded bit-exact.
+#[test]
+fn every_bit_flip_of_striped_frames_is_detected_or_harmless() {
+    for codec in ALL_CODECS {
+        let q = sample_quant(4, 8, 8, 6, 0x57B1 + codec as u64);
+        let frame = container::pack_v2(&q, codec, qp_for(codec), 3);
+        let reference = container::unpack(&container::parse(&frame).unwrap()).unwrap();
+        for fault in all_bit_flips(frame.len()) {
+            let bad = fault.apply(&frame);
+            match container::parse(&bad).and_then(|f| container::unpack(&f)) {
+                Err(_) => {}
+                Ok(back) => assert_eq!(
+                    back.bins,
+                    reference.bins,
+                    "{}: v2 {fault:?} yielded wrong data without an error",
+                    codec.name()
+                ),
+            }
+        }
+    }
+}
+
+/// The targeted stripe-table fault generator (K field + every stripe
+/// len/CRC byte, CRC refreshed so validation is reached): the decoder
+/// may reject or decode bit-exact, never panic, never silent garbage —
+/// and at least some mutations must actually be rejected (the table is
+/// validated, not trusted).
+#[test]
+fn stripe_table_mutation_sweep_never_panics() {
+    for codec in ALL_CODECS {
+        let q = sample_quant(4, 8, 8, 6, 0x57B2 + codec as u64);
+        let frame = container::pack_v2(&q, codec, qp_for(codec), 4);
+        let reference = container::unpack(&container::parse(&frame).unwrap()).unwrap();
+        let muts = stripe_table_mutations(&frame);
+        assert!(!muts.is_empty(), "{}: generator found no targets", codec.name());
+        let mut rejected = 0usize;
+        for bad in muts {
+            match container::parse(&bad).and_then(|f| container::unpack(&f)) {
+                Err(_) => rejected += 1,
+                Ok(back) => assert_eq!(
+                    back.bins,
+                    reference.bins,
+                    "{}: stripe-table mutation decoded to wrong data",
+                    codec.name()
+                ),
+            }
+        }
+        assert!(rejected > 0, "{}: no stripe-table mutation was rejected", codec.name());
+    }
+}
+
+/// The E5 fault model against striped frames: thousands of random
+/// corruption rounds must be survivable, same as v1.
+#[test]
+fn random_corruption_fuzz_on_striped_frames_never_panics() {
+    let mut corruptor = Corruptor::new(0x57F2);
+    for codec in ALL_CODECS {
+        let q = sample_quant(3, 8, 8, 6, 0x57F3 + codec as u64);
+        let frame = container::pack_v2(&q, codec, qp_for(codec), 3);
+        let reference = container::unpack(&container::parse(&frame).unwrap()).unwrap();
+        for round in 0..2_000 {
+            let bad = corruptor.corrupt(&frame);
+            match container::parse(&bad).and_then(|f| container::unpack(&f)) {
+                Err(_) => {}
+                Ok(back) => assert_eq!(
+                    back.bins,
+                    reference.bins,
+                    "{} round {round}: corrupted v2 frame decoded to wrong data",
+                    codec.name()
+                ),
             }
         }
     }
