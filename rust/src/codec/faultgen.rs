@@ -14,6 +14,9 @@
 //! * [`stripe_table_mutations`] — v2-specific corruption of the stripe
 //!   count and stripe table (lengths and per-stripe CRCs), again with
 //!   the frame CRC refreshed;
+//! * [`wire_mutations`] — transport-message corruption (truncated
+//!   length prefix, hostile `frame_len`, header bit flips) for the
+//!   loopback TCP fault suite in `tests/transport_robustness.rs`;
 //! * [`Corruptor`] — a seeded random fault source for end-to-end runs
 //!   (the E5 server's `--corrupt-rate` injection).
 //!
@@ -109,6 +112,51 @@ pub fn stripe_table_mutations(frame: &[u8]) -> Vec<Vec<u8>> {
             container::refresh_crc(&mut bad);
             out.push(bad);
         }
+    }
+    out
+}
+
+/// Wire-level corruptions of a complete transport message (see
+/// [`crate::net::wire`] for the layout): header truncations (cut length
+/// prefix), a few payload cuts, hostile `frame_len` overwrites (zero,
+/// short, just past [`crate::net::wire::MAX_FRAME_LEN`], `u32::MAX`)
+/// with the message CRC refreshed so the length check itself is
+/// reached, and every single-bit flip of the 9-byte header (CRC left
+/// stale — the receiver must catch these by checksum or field
+/// validation). `tests/transport_robustness.rs` replays each returned
+/// byte string over a loopback socket and requires a typed
+/// `net::Error` or byte-identical delivery — never a panic, never an
+/// allocation beyond the wire cap.
+pub fn wire_mutations(msg: &[u8]) -> Vec<Vec<u8>> {
+    use crate::net::wire;
+
+    let mut out = Vec::new();
+    // truncations: every header prefix, then a few cuts inside the body
+    let header = wire::HEADER_LEN.min(msg.len());
+    for len in 0..header {
+        out.push(Fault::Truncate { len }.apply(msg));
+    }
+    if msg.len() > wire::HEADER_LEN + wire::CRC_LEN {
+        for len in [
+            wire::HEADER_LEN + 1,
+            (wire::HEADER_LEN + msg.len()) / 2,
+            msg.len() - 1,
+        ] {
+            out.push(Fault::Truncate { len }.apply(msg));
+        }
+    }
+    // hostile length prefixes, CRC refreshed so validation is reached
+    if msg.len() >= wire::HEADER_LEN + wire::CRC_LEN {
+        for len in [0u32, 1, (wire::MAX_FRAME_LEN as u32) + 1, u32::MAX] {
+            let mut bad = msg.to_vec();
+            bad[5..9].copy_from_slice(&len.to_le_bytes());
+            wire::refresh_msg_crc(&mut bad);
+            out.push(bad);
+        }
+    }
+    // every single-bit flip of the header, CRC left stale on purpose
+    for f in all_bit_flips(header) {
+        out.push(f.apply(msg));
     }
     out
 }
@@ -223,6 +271,33 @@ mod tests {
             }
         }
         assert!(rejected > 0, "some mutation must invalidate the table");
+    }
+
+    #[test]
+    fn wire_mutations_cover_truncation_length_and_bitflips() {
+        use crate::net::wire;
+
+        let msg = wire::encode_msg(&[5u8; 40]);
+        let muts = wire_mutations(&msg);
+        // 9 header truncations + 3 body cuts + 4 length overwrites
+        // + 72 header bit flips
+        assert_eq!(muts.len(), wire::HEADER_LEN + 3 + 4 + 8 * wire::HEADER_LEN);
+        assert!(muts.iter().all(|m| m != &msg), "every mutation differs");
+        // the hostile-length mutations carry a *valid* message CRC, so
+        // they exercise the length validation rather than the checksum
+        let oversize = muts
+            .iter()
+            .filter(|m| m.len() == msg.len())
+            .filter(|m| {
+                let body = &m[..m.len() - wire::CRC_LEN];
+                let mut t = [0u8; wire::CRC_LEN];
+                t.copy_from_slice(&m[m.len() - wire::CRC_LEN..]);
+                wire::check_crc(body, &t).is_ok()
+                    && u32::from_le_bytes([m[5], m[6], m[7], m[8]]) as usize
+                        > wire::MAX_FRAME_LEN
+            })
+            .count();
+        assert_eq!(oversize, 2, "MAX+1 and u32::MAX variants present");
     }
 
     #[test]

@@ -69,6 +69,12 @@ pub struct ServerConfig {
     /// robustness demo; 0.0 disables). Corrupt frames must be dropped
     /// and counted, never crash the server.
     pub corrupt_rate: f64,
+    /// TCP serving mode, cloud side: accept edge frames on this address
+    /// (e.g. `127.0.0.1:7878`). `None` keeps the in-process mpsc edge.
+    pub listen: Option<String>,
+    /// TCP serving mode, edge side: ship frames to a listening server
+    /// at this address instead of running the local pipeline.
+    pub connect: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -82,6 +88,8 @@ impl Default for ServerConfig {
             queue_depth: 64,
             burst_factor: 1.0,
             corrupt_rate: 0.0,
+            listen: None,
+            connect: None,
         }
     }
 }
@@ -178,7 +186,33 @@ impl ServerConfig {
             }
             self.corrupt_rate = r;
         }
+        if let Some(s) = v.get("listen").and_then(Value::as_str) {
+            self.listen = Some(s.to_string());
+        }
+        if let Some(s) = v.get("connect").and_then(Value::as_str) {
+            self.connect = Some(s.to_string());
+        }
         Ok(())
+    }
+
+    /// Instantaneous arrival rate for request `id` under the MMPP-2
+    /// arrival process: alternate ON phases at `burst_factor` x rate
+    /// with OFF phases every 16 requests, the OFF rate chosen so the
+    /// harmonic mean of the two phase rates equals `arrival_rate`.
+    /// `burst_factor <= 1.0` degenerates to plain Poisson. Shared by
+    /// the in-process edge thread and the TCP edge client so both
+    /// serving modes present identical load.
+    pub fn arrival_rate_for(&self, id: usize) -> f64 {
+        let bf = self.burst_factor;
+        if bf <= 1.0 {
+            return self.arrival_rate;
+        }
+        let on_phase = (id / 16) % 2 == 0;
+        if on_phase {
+            self.arrival_rate * bf
+        } else {
+            self.arrival_rate * bf / (2.0 * bf - 1.0)
+        }
     }
 
     pub fn load(path: &Path) -> Result<Self> {
@@ -245,6 +279,31 @@ mod tests {
         assert_eq!(cfg.arrival_rate, 50.5);
         assert_eq!(cfg.num_requests, 512);
         assert_eq!(cfg.corrupt_rate, 0.0);
+    }
+
+    #[test]
+    fn transport_addresses_overlay() {
+        let mut cfg = ServerConfig::default();
+        assert!(cfg.listen.is_none() && cfg.connect.is_none());
+        cfg.apply(&parse(r#"{"listen": "0.0.0.0:7878"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.listen.as_deref(), Some("0.0.0.0:7878"));
+        cfg.apply(&parse(r#"{"connect": "10.0.0.2:7878"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.connect.as_deref(), Some("10.0.0.2:7878"));
+    }
+
+    #[test]
+    fn mmpp_rate_alternates_and_degenerates_to_poisson() {
+        let mut cfg = ServerConfig { arrival_rate: 100.0, ..Default::default() };
+        assert_eq!(cfg.arrival_rate_for(0), 100.0);
+        assert_eq!(cfg.arrival_rate_for(999), 100.0);
+        cfg.burst_factor = 4.0;
+        let on = cfg.arrival_rate_for(0); // ids 0..16 are the ON phase
+        let off = cfg.arrival_rate_for(16);
+        assert_eq!(on, 400.0);
+        assert!(off < 100.0, "OFF phase must run below the mean rate");
+        // harmonic mean of the phase rates equals the configured mean
+        let hm = 2.0 / (1.0 / on + 1.0 / off);
+        assert!((hm - 100.0).abs() < 1e-9, "harmonic mean {hm}");
     }
 
     #[test]

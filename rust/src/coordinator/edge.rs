@@ -7,7 +7,8 @@
 
 use crate::codec::container;
 use crate::codec::scratch::ScratchPool;
-use crate::config::PipelineConfig;
+use crate::config::{PipelineConfig, ServerConfig};
+use crate::metrics::Registry;
 use crate::quant;
 use crate::runtime::pool::WorkerPool;
 use crate::runtime::{Engine, Executable};
@@ -17,6 +18,7 @@ use crate::util::StageClock;
 use anyhow::Result;
 use std::rc::Rc;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Edge-side stage outputs (for diagnostics and tests).
 #[derive(Debug, Clone)]
@@ -117,4 +119,114 @@ impl EdgeNode {
         };
         Ok((frame, trace))
     }
+}
+
+/// Summary of one TCP edge-client run (`baf serve --connect ADDR`).
+#[derive(Debug)]
+pub struct EdgeClientReport {
+    /// Frames acked by the server.
+    pub sent: usize,
+    /// Frames the server rejected at the wire layer (NACK). Only
+    /// non-zero when `corrupt_rate` injects wire faults.
+    pub rejected: usize,
+    /// Wire bytes shipped (acked messages only).
+    pub bytes: u64,
+    /// Reconnect attempts performed by the sender.
+    pub reconnects: u64,
+    pub wall_seconds: f64,
+    pub metrics: crate::json::Value,
+    pub table: String,
+}
+
+/// Run the edge half of the split pipeline against a remote server:
+/// the same arrival process, frontend inference, and encode stage as
+/// the in-process edge thread in [`super::server::run_server`], but
+/// frames leave over a [`crate::net::FrameSender`] instead of an mpsc
+/// channel. The counterpart server runs with `ServerConfig::listen`
+/// set.
+///
+/// `corrupt_rate` here mangles frames *before* the wire layer wraps
+/// them, so the container CRC (not the wire CRC) is what the server's
+/// decode stage trips on — exactly the lossy-channel scenario of the
+/// paper. A server NACK (wire-level reject) or decode-stage drop both
+/// consume the request id, keeping both ends' accounting aligned.
+pub fn run_edge_client(
+    pcfg: &PipelineConfig,
+    scfg: &ServerConfig,
+    connect: &str,
+) -> Result<EdgeClientReport> {
+    let stats = ChannelStats::load(&pcfg.artifact_dir)?;
+    let registry = Registry::default();
+    let engine = Rc::new(Engine::new(&pcfg.artifact_dir)?);
+    let mut edge = EdgeNode::new(engine, &stats, pcfg.clone())?;
+    edge.use_scratch(Arc::new(ScratchPool::new()));
+
+    let pool = crate::data::eval_set(64.min(scfg.num_requests.max(1)));
+    let images: Vec<Tensor> = pool.iter().map(|s| s.image.clone()).collect();
+
+    let mut tx = crate::net::FrameSender::connect(connect, crate::net::NetConfig::default())
+        .map_err(|e| anyhow::anyhow!("connecting to {connect}: {e}"))?;
+
+    let mut rng = crate::util::SplitMix64::new(0xA221);
+    let mut fault_rng = crate::util::SplitMix64::new(0xFA11);
+    let mut corruptor = crate::codec::faultgen::Corruptor::new(0xC011A95E);
+    let injected_c = registry.counter("frames_corrupted_injected");
+    let rejected_c = registry.counter("net_frames_nacked");
+    let edge_h = registry.histogram("1_edge_total");
+    let send_h = registry.histogram("1_net_send");
+
+    let t_start = Instant::now();
+    let mut sent = 0usize;
+    let mut rejected = 0usize;
+    let mut next_arrival = Instant::now();
+    for id in 0..scfg.num_requests {
+        next_arrival +=
+            Duration::from_secs_f64(rng.next_exp(scfg.arrival_rate_for(id)));
+        let now = Instant::now();
+        if next_arrival > now {
+            std::thread::sleep(next_arrival - now);
+        }
+        let t_arrival = Instant::now();
+        let img = &images[id % images.len()];
+        let (mut frame, _trace) = edge.process(img)?;
+        if scfg.corrupt_rate > 0.0 && fault_rng.next_f64() < scfg.corrupt_rate {
+            frame = corruptor.corrupt(&frame);
+            injected_c.inc();
+        }
+        let t_edge_done = Instant::now();
+        edge_h.record_us((t_edge_done - t_arrival).as_secs_f64() * 1e6);
+        match tx.send(&frame) {
+            Ok(()) => {
+                sent += 1;
+                send_h.record_us(t_edge_done.elapsed().as_secs_f64() * 1e6);
+            }
+            // the server refused the message at the wire layer (NACK —
+            // something between the sockets mangled it): its decode
+            // stage never sees the frame, but the request id is spent
+            // on both ends, keeping the accounting aligned
+            Err(crate::net::Error::Protocol(e)) => {
+                log::warn!("edge client: frame {id} rejected: {e}");
+                rejected += 1;
+                rejected_c.inc();
+            }
+            Err(e) => {
+                return Err(anyhow::anyhow!(
+                    "edge client: giving up on frame {id}: {e}"
+                ));
+            }
+        }
+    }
+    tx.stats().export_sender_into(&registry);
+
+    let wall = t_start.elapsed().as_secs_f64();
+    let st = tx.stats();
+    Ok(EdgeClientReport {
+        sent,
+        rejected,
+        bytes: st.bytes,
+        reconnects: st.reconnects,
+        wall_seconds: wall,
+        metrics: registry.export(),
+        table: registry.table(),
+    })
 }

@@ -6,6 +6,11 @@
 //! * `batcher` — deadline+capacity dynamic batching.
 //! * `server` — the pipelined multi-threaded serving demo with Poisson
 //!   arrivals, decode workers, batched cloud inference and backpressure.
+//!
+//! The edge→cloud hop runs in-process (mpsc) by default; with
+//! `ServerConfig::listen` / `::connect` set, the same stages talk over
+//! the `crate::net` TCP transport instead (`run_server` accepts frames,
+//! `run_edge_client` produces and ships them).
 
 pub mod batcher;
 pub mod cloud;
@@ -14,6 +19,6 @@ pub mod pipeline;
 pub mod server;
 
 pub use cloud::{CloudNode, CloudTrace};
-pub use edge::{EdgeNode, EdgeTrace};
+pub use edge::{run_edge_client, EdgeClientReport, EdgeNode, EdgeTrace};
 pub use pipeline::{CloudOnly, Pipeline, PipelineOutput};
 pub use server::{run_server, ServerReport};

@@ -1,6 +1,13 @@
 //! Single-threaded composition of edge + cloud for the accuracy/rate
 //! experiments (E1/E2/E6), plus the cloud-only baseline the paper
 //! compares against.
+//!
+//! This in-process composition is the accuracy ground truth; the same
+//! edge and cloud nodes also run split across two processes with the
+//! `crate::net` TCP transport between them (see
+//! [`super::server::run_server`] with `ServerConfig::listen` and
+//! [`super::edge::run_edge_client`]) — the frames on the wire are
+//! byte-identical to the ones handed over in memory here.
 
 use super::cloud::CloudNode;
 use super::edge::EdgeNode;

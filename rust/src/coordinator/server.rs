@@ -24,6 +24,14 @@
 //! the edge, decode, and cloud stages, so steady-state serving does not
 //! allocate per frame in the codec layer (`scratch_hits` /
 //! `scratch_misses` in the exported metrics show the reuse rate).
+//!
+//! With `ServerConfig::listen` set, the first stage is replaced by a
+//! [`crate::net::FrameReceiver`] thread: frames arrive over TCP from a
+//! remote edge ([`super::edge::run_edge_client`]) instead of being
+//! produced in-process, `t_arrival` becomes the first wire byte of each
+//! message (so the reported p50/p95 *include* transport time), and
+//! wire-rejected messages are accounted as `frames_dropped`. The decode
+//! dispatcher, batcher, and collector are identical in both modes.
 
 use super::batcher::{next_batch, BatchOutcome};
 use crate::codec::scratch::ScratchPool;
@@ -48,7 +56,10 @@ struct FrameMsg {
     id: usize,
     frame: Vec<u8>,
     t_arrival: Instant,
-    #[allow(dead_code)]
+    /// When the frame finished the edge stage (in-process mode) or was
+    /// fully received off the wire (TCP mode). The decode dispatcher
+    /// charges `t0 - t_edge_done` to the `2_decode_wait` histogram —
+    /// the time a frame sat in the bounded queue before decoding.
     t_edge_done: Instant,
 }
 
@@ -95,8 +106,85 @@ pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerRe
 
     let t_start = Instant::now();
     std::thread::scope(|scope| -> Result<()> {
-        // ---- edge thread: arrivals + frontend + encode ----
-        {
+        if let Some(listen) = scfg.listen.clone() {
+            // ---- net receiver thread: frames arrive over TCP ----
+            // Replaces the in-process edge stage: a remote edge client
+            // (`run_edge_client`, `baf serve --connect`) does frontend
+            // inference + encode on its side of the wire. t_arrival is
+            // the first wire byte, so the collector's p50/p95 include
+            // transport time.
+            let scfg = scfg.clone();
+            let registry = Arc::clone(&registry);
+            scope.spawn(move || {
+                let cfg = crate::net::NetConfig::default();
+                let dropped_c = registry.counter("frames_dropped");
+                let mut rx = match crate::net::FrameReceiver::bind(&listen, cfg) {
+                    Ok(rx) => rx,
+                    Err(e) => {
+                        log::error!("net: bind {listen} failed: {e}");
+                        // nothing can arrive: account every request as
+                        // dropped so the collector terminates
+                        dropped_c.add(scfg.num_requests as u64);
+                        return;
+                    }
+                };
+                let recv_h = registry.histogram("0_net_recv");
+                let mut accounted = 0usize;
+                let mut strikes = 0u32;
+                while accounted < scfg.num_requests {
+                    match rx.recv() {
+                        Ok(r) => {
+                            strikes = 0;
+                            recv_h.record_us(
+                                r.t_done
+                                    .saturating_duration_since(r.t_first_byte)
+                                    .as_secs_f64()
+                                    * 1e6,
+                            );
+                            frame_tx
+                                .send(FrameMsg {
+                                    id: accounted,
+                                    frame: r.frame,
+                                    t_arrival: r.t_first_byte,
+                                    t_edge_done: r.t_done,
+                                })
+                                .ok();
+                            accounted += 1;
+                        }
+                        // a wire-rejected message consumed a request slot
+                        // on the edge (the sender sees the NACK): count
+                        // it as a drop so the run stays fully accounted
+                        Err(e @ crate::net::Error::Protocol(_))
+                        | Err(e @ crate::net::Error::TooLarge { .. }) => {
+                            log::warn!("net: rejecting frame: {e}");
+                            dropped_c.inc();
+                            accounted += 1;
+                        }
+                        // the edge disconnected (done, or reconnecting
+                        // after a fault): the next recv re-accepts
+                        Err(crate::net::Error::ConnClosed { .. }) => {}
+                        Err(e) => {
+                            // accept/read timeouts and socket errors: a
+                            // few in a row mean the edge is gone for good
+                            strikes += 1;
+                            if strikes >= 3 {
+                                log::warn!(
+                                    "net: idle after {e}; abandoning {} request(s)",
+                                    scfg.num_requests - accounted
+                                );
+                                break;
+                            }
+                        }
+                    }
+                }
+                if accounted < scfg.num_requests {
+                    dropped_c.add((scfg.num_requests - accounted) as u64);
+                }
+                rx.stats().export_receiver_into(&registry);
+                // frame_tx dropped here -> decode workers drain and stop
+            });
+        } else {
+            // ---- edge thread: arrivals + frontend + encode ----
             let pcfg = pcfg.clone();
             let scfg = scfg.clone();
             let stats = &stats;
@@ -118,20 +206,11 @@ pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerRe
                     let injected_c = registry.counter("frames_corrupted_injected");
                     let edge_h = registry.histogram("1_edge_total");
                     let mut next_arrival = Instant::now();
-                    // MMPP-2: alternate ON (burst_factor x rate) and OFF
-                    // phases every ~16 requests so the mean stays near
-                    // arrival_rate; burst_factor 1.0 degenerates to Poisson.
-                    let bf = scfg.burst_factor.max(1.0);
                     for id in 0..scfg.num_requests {
-                        let on_phase = (id / 16) % 2 == 0;
-                        let rate = if bf <= 1.0 {
-                            scfg.arrival_rate
-                        } else if on_phase {
-                            scfg.arrival_rate * bf
-                        } else {
-                            // harmonic mean of the two phase rates = mean rate
-                            scfg.arrival_rate * bf / (2.0 * bf - 1.0)
-                        };
+                        // MMPP-2 (or Poisson) arrivals; the rate schedule
+                        // lives in ServerConfig so the TCP edge client
+                        // presents identical load
+                        let rate = scfg.arrival_rate_for(id);
                         next_arrival += Duration::from_secs_f64(rng.next_exp(rate));
                         let now = Instant::now();
                         if next_arrival > now {
@@ -178,11 +257,18 @@ pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerRe
             let workers = WorkerPool::new(scfg.decode_workers.max(1));
             scope.spawn(move || {
                 let h = registry.histogram("2_decode");
+                let wait_h = registry.histogram("2_decode_wait");
                 let dropped_c = registry.counter("frames_dropped");
                 let frames_c = registry.counter("frames_decoded");
                 let stripes_c = registry.counter("stripes_decoded");
                 while let Ok(msg) = frame_rx.recv() {
                     let t0 = Instant::now();
+                    // time spent queued between edge/receive and decode
+                    wait_h.record_us(
+                        t0.saturating_duration_since(msg.t_edge_done)
+                            .as_secs_f64()
+                            * 1e6,
+                    );
                     // a corrupt or truncated frame is dropped and counted
                     // — the server keeps serving
                     let q = match crate::codec::container::parse(&msg.frame)

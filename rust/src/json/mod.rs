@@ -9,7 +9,7 @@
 mod parse;
 mod value;
 
-pub use parse::{parse, ParseError};
+pub use parse::{parse, ParseError, MAX_DEPTH};
 pub use value::Value;
 
 /// Parse a JSON file from disk.

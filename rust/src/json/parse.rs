@@ -1,8 +1,17 @@
 //! Recursive-descent JSON parser (RFC 8259).
+//!
+//! Parsing is total over arbitrary input bytes: every malformed input
+//! yields a [`ParseError`], never a panic. Nesting is bounded by
+//! [`MAX_DEPTH`] so a hostile `[[[[…` config cannot overflow the parse
+//! stack (found by `tests/json_fuzz.rs`).
 
 use super::Value;
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Maximum container nesting depth. 128 is far beyond any real config
+/// (ours nest 3-4 deep) while keeping worst-case stack use small.
+pub const MAX_DEPTH: usize = 128;
 
 #[derive(Debug)]
 pub struct ParseError {
@@ -19,7 +28,7 @@ impl fmt::Display for ParseError {
 impl std::error::Error for ParseError {}
 
 pub fn parse(text: &str) -> Result<Value, ParseError> {
-    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -32,6 +41,7 @@ pub fn parse(text: &str) -> Result<Value, ParseError> {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -80,7 +90,32 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Guard one level of container nesting; callers must pair this
+    /// with a `depth -= 1` on every exit path (the `object`/`array`
+    /// wrappers do).
+    fn descend(&mut self) -> Result<(), ParseError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Value, ParseError> {
+        self.descend()?;
+        let r = self.object_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn array(&mut self) -> Result<Value, ParseError> {
+        self.descend()?;
+        let r = self.array_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn object_inner(&mut self) -> Result<Value, ParseError> {
         self.expect(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
@@ -108,7 +143,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Value, ParseError> {
+    fn array_inner(&mut self) -> Result<Value, ParseError> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -161,6 +196,15 @@ impl<'a> Parser<'a> {
                                     self.pos += 1;
                                     self.expect(b'u')?;
                                     let lo = self.hex4()?;
+                                    // the second escape must be a low
+                                    // surrogate, or `lo - 0xdc00`
+                                    // underflows — a fuzz finding:
+                                    // an escaped high surrogate
+                                    // followed by an escaped 'A'
+                                    // panicked with overflow checks on
+                                    if !(0xdc00..0xe000).contains(&lo) {
+                                        return Err(self.err("bad \\u escape"));
+                                    }
                                     let combined = 0x10000
                                         + ((cp - 0xd800) << 10)
                                         + (lo - 0xdc00);
@@ -267,6 +311,33 @@ mod tests {
         assert!(parse("01a").is_err());
         assert!(parse("\"unterminated").is_err());
         assert!(parse("{}extra").is_err());
+    }
+
+    #[test]
+    fn lone_or_mismatched_surrogates_are_errors_not_panics() {
+        // high surrogate followed by a non-low-surrogate escape used to
+        // underflow `lo - 0xdc00` under overflow checks
+        assert!(parse("\"\\ud800\\u0041\"").is_err());
+        assert!(parse(r#""\ud800A""#).is_err());
+        assert!(parse(r#""\ud800\ud800""#).is_err());
+        assert!(parse(r#""\ud800x""#).is_err());
+        assert!(parse(r#""\udc00""#).is_err());
+        // a real pair still decodes
+        assert_eq!(parse(r#""😀""#).unwrap().as_str(), Some("😀"));
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded() {
+        // comfortably inside the limit
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH - 1), "]".repeat(MAX_DEPTH - 1));
+        assert!(parse(&ok).is_ok());
+        // one past it: typed error, not a stack overflow
+        let deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let err = parse(&deep).unwrap_err();
+        assert!(err.message.contains("nesting"), "{err}");
+        // alternating containers count too
+        let alt = "[{\"k\":".repeat(MAX_DEPTH) + "1" + &"}]".repeat(MAX_DEPTH);
+        assert!(parse(&alt).is_err());
     }
 
     #[test]

@@ -24,7 +24,8 @@
 //! See DESIGN.md for the architecture and experiment index, and
 //! EXPERIMENTS.md for reproduction results.
 
-// The decode path (codec, including the `codec::scratch` buffer pool)
+// The decode path (codec, including the `codec::scratch` buffer pool),
+// the network transport (net — it reads attacker-controlled wire bytes)
 // and the serving stack (coordinator) carry a no-panic contract:
 // attacker-controlled bytes must never unwrap. Tier-1 CI enforces it
 // with `cargo clippy --all-targets -- -D clippy::unwrap_used
@@ -56,6 +57,8 @@ pub mod eval;
 pub mod json;
 #[deny(clippy::unwrap_used, clippy::expect_used)]
 pub mod metrics;
+#[deny(clippy::unwrap_used, clippy::expect_used)]
+pub mod net;
 #[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod quant;
 #[allow(clippy::unwrap_used, clippy::expect_used)]

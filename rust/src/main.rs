@@ -33,6 +33,10 @@ COMMANDS
              --decode-workers N (stripe-decode pool width)
              --corrupt-rate P (inject faults; frames that fail to decode
              are dropped and counted, not fatal) --stripes K
+             --listen ADDR (cloud side: accept edge frames over TCP,
+             e.g. --listen 0.0.0.0:7878; default is the in-process edge)
+             --connect ADDR (edge side: run only the edge stage and ship
+             frames to a --listen server over TCP)
   encode     compress a CHW f32 .npy tensor into a .baf frame
              <in.npy> <out.baf> [--n BITS] [--codec NAME] [--qp QP]
              [--stripes K]
@@ -191,7 +195,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
         "artifacts", "c", "n", "codec", "qp", "policy", "no-consolidate", "rate",
         "requests", "batch-cap", "deadline-us", "decode-workers", "burst",
-        "corrupt-rate", "stripes",
+        "corrupt-rate", "stripes", "listen", "connect",
     ])?;
     let pcfg = pipeline_cfg(args)?;
     let mut scfg = ServerConfig::default();
@@ -220,6 +224,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         scfg.corrupt_rate = v;
     }
+    scfg.listen = args.opt("listen").map(str::to_string);
+    scfg.connect = args.opt("connect").map(str::to_string);
+    anyhow::ensure!(
+        scfg.listen.is_none() || scfg.connect.is_none(),
+        "--listen and --connect are mutually exclusive (one process is \
+         either the cloud side or the edge side)"
+    );
+    if let Some(connect) = scfg.connect.clone() {
+        println!(
+            "edge client: {} requests @ {}/s -> {connect}",
+            scfg.num_requests, scfg.arrival_rate
+        );
+        let report = baf::coordinator::run_edge_client(&pcfg, &scfg, &connect)?;
+        println!(
+            "\nsent {} frames ({} B on the wire) in {:.2}s, {} rejected, {} reconnects",
+            report.sent,
+            report.bytes,
+            report.wall_seconds,
+            report.rejected,
+            report.reconnects
+        );
+        println!("\n{}", report.table);
+        return Ok(());
+    }
     println!(
         "serving: {} requests @ {}/s, batch cap {}, deadline {} us, {} decode workers",
         scfg.num_requests,
@@ -230,6 +258,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if scfg.corrupt_rate > 0.0 {
         println!("fault injection: corrupting ~{:.1}% of frames", scfg.corrupt_rate * 100.0);
+    }
+    if let Some(listen) = &scfg.listen {
+        println!("transport: accepting edge frames over TCP on {listen}");
     }
     let report = run_server(&pcfg, &scfg)?;
     println!(

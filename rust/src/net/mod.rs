@@ -1,0 +1,234 @@
+//! The edge→cloud network transport: container frames over TCP.
+//!
+//! Until now the E5 pipeline moved frames between the edge and cloud
+//! stages over an in-process `mpsc` channel — the lossy
+//! bandwidth-constrained link the paper's whole premise rests on was
+//! simulated. This module makes it real with a dependency-free
+//! `std::net` transport:
+//!
+//! * [`wire`] — the length-prefixed message layout (magic + version +
+//!   frame_len + container frame + per-message CRC32, then a one-byte
+//!   ACK/NACK from the receiver);
+//! * [`FrameSender`] — the edge side: connects, sends framed messages,
+//!   waits for the ACK, and survives disconnects with bounded
+//!   exponential backoff (jittered via [`crate::util::SplitMix64`]);
+//! * [`FrameReceiver`] — the cloud side: accepts, reads and validates
+//!   messages with read timeouts, acks good frames, nacks and drops the
+//!   connection on wire corruption (framing can't be trusted after a
+//!   bad message).
+//!
+//! # Error handling & robustness
+//!
+//! The receiver is fed bytes it does not control, so the same totality
+//! contract as [`crate::codec`] applies: every failure is a typed
+//! [`Error`] — [`Error::Timeout`], [`Error::ConnClosed`],
+//! [`Error::Protocol`], [`Error::TooLarge`] (checked against
+//! [`wire::MAX_FRAME_LEN`], derived from
+//! [`crate::codec::MAX_DECODED_SAMPLES`], *before* any allocation), or
+//! [`Error::Codec`] wrapping the container decode error — never a
+//! panic, never an unbounded allocation. `tests/transport_robustness.rs`
+//! drives the wire-level fault generators
+//! ([`crate::codec::faultgen::wire_mutations`]) plus mid-stream
+//! disconnects and stalls over a loopback socket to enforce it.
+
+pub mod receiver;
+pub mod sender;
+pub mod wire;
+
+pub use receiver::{FrameReceiver, Received};
+pub use sender::FrameSender;
+
+use std::fmt;
+use std::time::Duration;
+
+/// Typed transport error taxonomy. Mirrors [`crate::codec::Error`]'s
+/// role for the decode path: the serving loop matches on the variant to
+/// decide between retrying, re-accepting, and dropping a frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// A read or write did not complete within the configured timeout.
+    Timeout { what: &'static str },
+    /// The peer closed the connection (cleanly between messages, or
+    /// mid-message — `what` says which).
+    ConnClosed { what: &'static str },
+    /// Structurally invalid wire bytes: bad magic, unknown version,
+    /// message CRC mismatch, or a rejected (NACKed) frame.
+    Protocol(String),
+    /// The length prefix asks for more than [`wire::MAX_FRAME_LEN`];
+    /// rejected before any allocation.
+    TooLarge { requested: usize, limit: usize },
+    /// The wire message was intact but the container frame inside it
+    /// failed to decode.
+    Codec(crate::codec::Error),
+    /// Any other socket-level failure (resolve, bind, connect refused).
+    Io(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Timeout { what } => write!(f, "net timeout: {what}"),
+            Error::ConnClosed { what } => write!(f, "connection closed: {what}"),
+            Error::Protocol(msg) => write!(f, "wire protocol error: {msg}"),
+            Error::TooLarge { requested, limit } => {
+                write!(f, "wire frame too large: {requested} > {limit}")
+            }
+            Error::Codec(e) => write!(f, "frame decode failed: {e}"),
+            Error::Io(msg) => write!(f, "net i/o error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<crate::codec::Error> for Error {
+    fn from(e: crate::codec::Error) -> Self {
+        Error::Codec(e)
+    }
+}
+
+/// Transport result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Classify an `std::io::Error` into the transport taxonomy.
+pub(crate) fn classify_io(what: &'static str, e: &std::io::Error) -> Error {
+    use std::io::ErrorKind;
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => Error::Timeout { what },
+        ErrorKind::UnexpectedEof
+        | ErrorKind::ConnectionReset
+        | ErrorKind::ConnectionAborted
+        | ErrorKind::BrokenPipe
+        | ErrorKind::NotConnected => Error::ConnClosed { what },
+        _ => Error::Io(format!("{what}: {e}")),
+    }
+}
+
+/// Transport tunables. One struct serves both ends; the receiver only
+/// reads the `*_timeout` fields, the sender also uses the reconnect
+/// policy.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Per-attempt TCP connect timeout (sender).
+    pub connect_timeout: Duration,
+    /// Socket read timeout: ack reads on the sender, message reads on
+    /// the receiver. An idle receiver surfaces this as
+    /// [`Error::Timeout`] without dropping the connection.
+    pub read_timeout: Duration,
+    /// Socket write timeout.
+    pub write_timeout: Duration,
+    /// How long the receiver polls for an incoming connection before
+    /// reporting [`Error::Timeout`].
+    pub accept_timeout: Duration,
+    /// Maximum reconnect attempts per send before the typed error is
+    /// returned to the caller (bounds the retry loop).
+    pub max_reconnects: u32,
+    /// First reconnect delay; doubles per attempt (exponential backoff).
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_max: Duration,
+    /// Seed for the jitter PRNG (deterministic backoff in tests).
+    pub seed: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            accept_timeout: Duration::from_secs(10),
+            max_reconnects: 8,
+            backoff_base: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(2),
+            seed: 0xBAF_0E7,
+        }
+    }
+}
+
+/// Transport-side counters, exported by the coordinator as `net_*`
+/// metrics. Plain values (single-threaded owners); snapshot with
+/// [`FrameSender::stats`] / [`FrameReceiver::stats`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NetStats {
+    /// Frames successfully transferred (acked).
+    pub frames: u64,
+    /// Wire bytes moved (header + payload + CRC, both directions' view
+    /// of its own side).
+    pub bytes: u64,
+    /// Sender: reconnect attempts performed.
+    pub reconnects: u64,
+    /// Read/write timeouts observed.
+    pub timeouts: u64,
+    /// Receiver: messages rejected at the wire layer (bad magic/CRC/
+    /// oversized length).
+    pub rejected: u64,
+}
+
+impl NetStats {
+    /// Publish the sender-side view into a metrics registry.
+    pub fn export_sender_into(&self, r: &crate::metrics::Registry) {
+        r.counter("net_frames_out").add(self.frames);
+        r.counter("net_bytes_out").add(self.bytes);
+        r.counter("net_reconnects").add(self.reconnects);
+        r.counter("net_timeouts").add(self.timeouts);
+    }
+
+    /// Publish the receiver-side view into a metrics registry.
+    pub fn export_receiver_into(&self, r: &crate::metrics::Registry) {
+        r.counter("net_frames_in").add(self.frames);
+        r.counter("net_bytes_in").add(self.bytes);
+        r.counter("net_frames_rejected").add(self.rejected);
+        r.counter("net_timeouts").add(self.timeouts);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn error_display_names_the_failure() {
+        assert!(Error::Timeout { what: "ack" }.to_string().contains("ack"));
+        assert!(Error::TooLarge { requested: 9, limit: 4 }
+            .to_string()
+            .contains("9 > 4"));
+        let e: Error = crate::codec::Error::Corrupt("x".into()).into();
+        assert!(matches!(e, Error::Codec(_)));
+        assert!(e.to_string().contains("decode failed"));
+    }
+
+    #[test]
+    fn io_classification() {
+        use std::io::{Error as IoError, ErrorKind};
+        assert!(matches!(
+            classify_io("read", &IoError::new(ErrorKind::TimedOut, "t")),
+            Error::Timeout { .. }
+        ));
+        assert!(matches!(
+            classify_io("read", &IoError::new(ErrorKind::ConnectionReset, "r")),
+            Error::ConnClosed { .. }
+        ));
+        assert!(matches!(
+            classify_io("bind", &IoError::new(ErrorKind::AddrInUse, "a")),
+            Error::Io(_)
+        ));
+    }
+
+    #[test]
+    fn stats_export_uses_net_prefix() {
+        let r = crate::metrics::Registry::default();
+        let st = NetStats { frames: 3, bytes: 100, reconnects: 1, timeouts: 2, rejected: 4 };
+        st.export_sender_into(&r);
+        st.export_receiver_into(&r);
+        let v = r.export();
+        let c = v.get("counters").unwrap();
+        assert_eq!(c.get("net_frames_out").unwrap().as_usize(), Some(3));
+        assert_eq!(c.get("net_bytes_in").unwrap().as_usize(), Some(100));
+        assert_eq!(c.get("net_reconnects").unwrap().as_usize(), Some(1));
+        assert_eq!(c.get("net_frames_rejected").unwrap().as_usize(), Some(4));
+        assert_eq!(c.get("net_timeouts").unwrap().as_usize(), Some(4));
+    }
+}

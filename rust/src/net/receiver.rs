@@ -1,0 +1,295 @@
+//! The cloud side of the transport: accept, read one validated message
+//! at a time, ACK good frames, NACK-and-drop on wire corruption.
+
+use super::{wire, Error, NetConfig, NetStats, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// One successfully received frame, with the receive-side timestamps
+/// the serving collector folds into its latency percentiles (so e2e
+/// latency in TCP mode *includes* transport time).
+#[derive(Debug)]
+pub struct Received {
+    /// The container frame bytes, verbatim as sent.
+    pub frame: Vec<u8>,
+    /// When the first header byte of this message was read.
+    pub t_first_byte: Instant,
+    /// When the message was fully read and validated.
+    pub t_done: Instant,
+}
+
+/// Receives container frames from a [`super::FrameSender`].
+///
+/// [`Self::recv`] blocks for one message: it accepts a connection if
+/// none is live (bounded by `accept_timeout`), reads and validates one
+/// wire message (bounded by `read_timeout`), and answers ACK or NACK.
+/// Error policy:
+///
+/// * idle timeouts (no connection, or a live but silent connection)
+///   keep the connection and return [`Error::Timeout`];
+/// * a clean close between messages drops the connection and returns
+///   [`Error::ConnClosed`] — the next `recv` re-accepts, which is what
+///   lets a sender reconnect mid-run;
+/// * wire corruption ([`Error::Protocol`] / [`Error::TooLarge`]) and
+///   mid-message truncation NACK (best effort) and drop the connection:
+///   after a bad message the stream's framing cannot be trusted.
+#[derive(Debug)]
+pub struct FrameReceiver {
+    listener: TcpListener,
+    conn: Option<TcpStream>,
+    cfg: NetConfig,
+    stats: NetStats,
+}
+
+/// Outcome of an exact read: how many bytes landed before the error.
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], what: &'static str) -> (usize, Option<Error>) {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return (filled, Some(Error::ConnClosed { what })),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return (filled, Some(super::classify_io(what, &e))),
+        }
+    }
+    (filled, None)
+}
+
+impl FrameReceiver {
+    /// Bind the listening socket (use port 0 for an ephemeral port; see
+    /// [`Self::local_addr`]).
+    pub fn bind(addr: &str, cfg: NetConfig) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Io(format!("binding {addr}: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::Io(format!("listener options: {e}")))?;
+        Ok(FrameReceiver { listener, conn: None, cfg, stats: NetStats::default() })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener
+            .local_addr()
+            .map_err(|e| Error::Io(format!("local_addr: {e}")))
+    }
+
+    /// Counter snapshot (frames/bytes in, rejects, timeouts).
+    pub fn stats(&self) -> NetStats {
+        self.stats
+    }
+
+    /// Drop the live connection (the next [`Self::recv`] re-accepts).
+    /// Tests use this to force a sender into its reconnect path.
+    pub fn disconnect(&mut self) {
+        self.conn = None;
+    }
+
+    /// Poll-accept until a connection arrives or `accept_timeout` runs
+    /// out. The listener stays non-blocking so shutdown never hangs in
+    /// the kernel.
+    fn accept(&mut self) -> Result<()> {
+        let deadline = Instant::now() + self.cfg.accept_timeout;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    stream
+                        .set_read_timeout(Some(self.cfg.read_timeout))
+                        .and_then(|()| stream.set_write_timeout(Some(self.cfg.write_timeout)))
+                        .and_then(|()| stream.set_nodelay(true))
+                        .map_err(|e| Error::Io(format!("socket options: {e}")))?;
+                    self.conn = Some(stream);
+                    return Ok(());
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        self.stats.timeouts += 1;
+                        return Err(Error::Timeout { what: "accept" });
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(Error::Io(format!("accept: {e}"))),
+            }
+        }
+    }
+
+    /// Best-effort verdict byte; failures are ignored (the connection is
+    /// being dropped anyway on NACK, and an unreadable ACK is the
+    /// sender's timeout to handle).
+    fn verdict(conn: &mut TcpStream, byte: u8) {
+        let _ = conn.write_all(&[byte]);
+    }
+
+    /// Receive one frame. See the type-level docs for the error policy.
+    pub fn recv(&mut self) -> Result<Received> {
+        if self.conn.is_none() {
+            self.accept()?;
+        }
+        let Some(mut conn) = self.conn.take() else {
+            return Err(Error::ConnClosed { what: "no connection" });
+        };
+        match self.read_one(&mut conn) {
+            Ok(r) => {
+                Self::verdict(&mut conn, wire::ACK);
+                self.conn = Some(conn);
+                self.stats.frames += 1;
+                self.stats.bytes +=
+                    (wire::HEADER_LEN + r.frame.len() + wire::CRC_LEN) as u64;
+                Ok(r)
+            }
+            Err(e) => {
+                match &e {
+                    // idle is benign: keep the connection for the next call
+                    Error::Timeout { what } if *what == "message header" => {
+                        self.stats.timeouts += 1;
+                        self.conn = Some(conn);
+                    }
+                    Error::Timeout { .. } => {
+                        // mid-message stall: framing lost, drop the conn
+                        self.stats.timeouts += 1;
+                        Self::verdict(&mut conn, wire::NACK);
+                    }
+                    Error::Protocol(_) | Error::TooLarge { .. } => {
+                        self.stats.rejected += 1;
+                        Self::verdict(&mut conn, wire::NACK);
+                    }
+                    // closed (cleanly or mid-message): nothing to answer
+                    _ => {}
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Read and validate exactly one wire message from `conn`.
+    fn read_one(&mut self, conn: &mut TcpStream) -> Result<Received> {
+        let mut hdr = [0u8; wire::HEADER_LEN];
+        match read_full(conn, &mut hdr, "message header") {
+            (_, None) => {}
+            // zero bytes read: the connection was merely idle (benign
+            // timeout) or closed cleanly between messages
+            (0, Some(Error::ConnClosed { .. })) => {
+                return Err(Error::ConnClosed { what: "between messages" });
+            }
+            (0, Some(Error::Timeout { .. })) => {
+                return Err(Error::Timeout { what: "message header" });
+            }
+            // a partial header means framing is lost: recv() must drop
+            // the connection, so these must NOT look like idle errors
+            (_, Some(Error::ConnClosed { .. })) => {
+                return Err(Error::ConnClosed { what: "mid-message" });
+            }
+            (_, Some(Error::Timeout { .. })) => {
+                return Err(Error::Timeout { what: "mid-header" });
+            }
+            (_, Some(e)) => return Err(e),
+        }
+        // the header is in hand just now: this timestamps the start of
+        // the message for the transport-inclusive latency accounting
+        let t_first_byte = Instant::now();
+        let len = wire::validate_header(&hdr)?;
+        // bounded by MAX_FRAME_LEN (validate_header) before this alloc
+        let mut payload = vec![0u8; len];
+        if let (_, Some(e)) = read_full(conn, &mut payload, "message payload") {
+            return Err(match e {
+                Error::ConnClosed { .. } => Error::ConnClosed { what: "mid-message" },
+                Error::Timeout { .. } => Error::Timeout { what: "message payload" },
+                other => other,
+            });
+        }
+        let mut trailer = [0u8; wire::CRC_LEN];
+        if let (_, Some(e)) = read_full(conn, &mut trailer, "message crc") {
+            return Err(match e {
+                Error::ConnClosed { .. } => Error::ConnClosed { what: "mid-message" },
+                Error::Timeout { .. } => Error::Timeout { what: "message crc" },
+                other => other,
+            });
+        }
+        let mut body = Vec::with_capacity(wire::HEADER_LEN + len);
+        body.extend_from_slice(&hdr);
+        body.extend_from_slice(&payload);
+        wire::check_crc(&body, &trailer)?;
+        Ok(Received { frame: payload, t_first_byte, t_done: Instant::now() })
+    }
+
+    /// [`Self::recv`] plus container parsing: the typed
+    /// [`Error::Codec`] path for callers that want the frame validated
+    /// end to end. A codec-level failure does *not* drop the connection
+    /// (the wire framing was intact), so streaming continues.
+    pub fn recv_parsed(&mut self) -> Result<(Received, crate::codec::container::Frame)> {
+        let r = self.recv()?;
+        let frame = crate::codec::container::parse(&r.frame)?;
+        Ok((r, frame))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::net::FrameSender;
+
+    fn fast_cfg() -> NetConfig {
+        NetConfig {
+            connect_timeout: Duration::from_millis(200),
+            read_timeout: Duration::from_millis(200),
+            write_timeout: Duration::from_millis(200),
+            accept_timeout: Duration::from_millis(200),
+            max_reconnects: 2,
+            backoff_base: Duration::from_millis(5),
+            backoff_max: Duration::from_millis(20),
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn accept_timeout_is_typed_and_keeps_listening() {
+        let mut rx = FrameReceiver::bind("127.0.0.1:0", fast_cfg()).unwrap();
+        let err = rx.recv().unwrap_err();
+        assert!(matches!(err, Error::Timeout { what: "accept" }), "{err}");
+        assert_eq!(rx.stats().timeouts, 1);
+        // the listener is still usable afterwards
+        assert!(rx.local_addr().is_ok());
+    }
+
+    #[test]
+    fn one_frame_roundtrip_with_timestamps() {
+        let mut rx = FrameReceiver::bind("127.0.0.1:0", fast_cfg()).unwrap();
+        let addr = rx.local_addr().unwrap().to_string();
+        let payload: Vec<u8> = (0..200u8).collect();
+        let sent = payload.clone();
+        let tx_thread = std::thread::spawn(move || {
+            let mut tx = FrameSender::connect(&addr, fast_cfg()).unwrap();
+            tx.send(&sent).unwrap();
+            tx.stats()
+        });
+        let got = rx.recv().unwrap();
+        assert_eq!(got.frame, payload);
+        assert!(got.t_done >= got.t_first_byte);
+        let st = tx_thread.join().unwrap();
+        assert_eq!(st.frames, 1);
+        assert_eq!(rx.stats().frames, 1);
+        assert_eq!(rx.stats().bytes, st.bytes, "both sides count the same wire bytes");
+    }
+
+    #[test]
+    fn idle_connection_timeout_does_not_drop_the_conn() {
+        let mut rx = FrameReceiver::bind("127.0.0.1:0", fast_cfg()).unwrap();
+        let addr = rx.local_addr().unwrap().to_string();
+        let (stop_tx, stop_rx) = std::sync::mpsc::channel::<()>();
+        let tx_thread = std::thread::spawn(move || {
+            let mut tx = FrameSender::connect(&addr, fast_cfg()).unwrap();
+            // stay connected but silent past the read timeout, then send
+            stop_rx.recv().unwrap();
+            tx.send(&[9u8; 16]).unwrap();
+        });
+        let err = rx.recv().unwrap_err();
+        assert!(matches!(err, Error::Timeout { what: "message header" }), "{err}");
+        stop_tx.send(()).unwrap();
+        let got = rx.recv().unwrap();
+        assert_eq!(got.frame, vec![9u8; 16]);
+        tx_thread.join().unwrap();
+    }
+}

@@ -1,0 +1,269 @@
+//! The edge side of the transport: connect, send, wait for the ACK,
+//! reconnect with bounded jittered exponential backoff.
+
+use super::{classify_io, wire, Error, NetConfig, NetStats, Result};
+use crate::util::SplitMix64;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Sends container frames to a [`super::FrameReceiver`].
+///
+/// Delivery is at-least-once: a frame is only counted sent once its ACK
+/// arrives, and a connection failure anywhere in the write→ack window
+/// triggers reconnect-and-resend (bounded by
+/// [`NetConfig::max_reconnects`], delayed by exponential backoff with
+/// jitter from [`SplitMix64`] so a fleet of edges doesn't reconnect in
+/// lockstep). A NACK is returned as [`Error::Protocol`] without retry —
+/// the receiver rejected the bytes deterministically.
+#[derive(Debug)]
+pub struct FrameSender {
+    addr: String,
+    cfg: NetConfig,
+    stream: Option<TcpStream>,
+    rng: SplitMix64,
+    stats: NetStats,
+}
+
+impl FrameSender {
+    /// Resolve `addr` and establish the first connection (retrying with
+    /// backoff like any later reconnect).
+    pub fn connect(addr: &str, cfg: NetConfig) -> Result<Self> {
+        let rng = SplitMix64::new(cfg.seed);
+        let mut s = FrameSender {
+            addr: addr.to_string(),
+            cfg,
+            stream: None,
+            rng,
+            stats: NetStats::default(),
+        };
+        let mut last = Error::Io(format!("never attempted {}", s.addr));
+        for attempt in 0..=s.cfg.max_reconnects {
+            if attempt > 0 {
+                s.stats.reconnects += 1;
+                let d = s.backoff_delay(attempt - 1);
+                std::thread::sleep(d);
+            }
+            match s.ensure_connected() {
+                Ok(()) => return Ok(s),
+                Err(e) => {
+                    if matches!(e, Error::Timeout { .. }) {
+                        s.stats.timeouts += 1;
+                    }
+                    last = e;
+                }
+            }
+        }
+        Err(last)
+    }
+
+    /// Counter snapshot (frames/bytes out, reconnects, timeouts).
+    pub fn stats(&self) -> NetStats {
+        self.stats
+    }
+
+    fn resolve(&self) -> Result<SocketAddr> {
+        self.addr
+            .to_socket_addrs()
+            .map_err(|e| Error::Io(format!("resolving {}: {e}", self.addr)))?
+            .next()
+            .ok_or_else(|| Error::Io(format!("{} resolves to no address", self.addr)))
+    }
+
+    fn dial(&self) -> Result<TcpStream> {
+        let sa = self.resolve()?;
+        let stream = TcpStream::connect_timeout(&sa, self.cfg.connect_timeout)
+            .map_err(|e| classify_io("connect", &e))?;
+        stream
+            .set_read_timeout(Some(self.cfg.read_timeout))
+            .and_then(|()| stream.set_write_timeout(Some(self.cfg.write_timeout)))
+            .and_then(|()| stream.set_nodelay(true))
+            .map_err(|e| Error::Io(format!("socket options: {e}")))?;
+        Ok(stream)
+    }
+
+    /// Backoff delay before reconnect attempt `attempt` (0-based):
+    /// `base * 2^attempt`, capped at `backoff_max`, jittered by a factor
+    /// in [0.5, 1.5).
+    fn backoff_delay(&mut self, attempt: u32) -> Duration {
+        let exp = self.cfg.backoff_base.saturating_mul(1u32 << attempt.min(16));
+        let capped = exp.min(self.cfg.backoff_max);
+        let jitter = 0.5 + self.rng.next_f64();
+        Duration::from_secs_f64(capped.as_secs_f64() * jitter)
+    }
+
+    /// One connect attempt if currently disconnected. The retry/backoff
+    /// loops live in [`Self::connect`] and [`Self::send`], so the retry
+    /// budget is never nested.
+    fn ensure_connected(&mut self) -> Result<()> {
+        if self.stream.is_some() {
+            return Ok(());
+        }
+        let s = self.dial()?;
+        self.stream = Some(s);
+        Ok(())
+    }
+
+    /// One write→ack exchange on the current connection.
+    fn try_send(&mut self, msg: &[u8]) -> Result<()> {
+        let stream = self.stream.as_mut().ok_or(Error::ConnClosed { what: "no connection" })?;
+        stream.write_all(msg).map_err(|e| classify_io("frame write", &e))?;
+        let mut verdict = [0u8; 1];
+        // a clean EOF here means the receiver died between write and ack
+        match stream.read(&mut verdict) {
+            Ok(0) => Err(Error::ConnClosed { what: "awaiting ack" }),
+            Ok(_) => match verdict[0] {
+                wire::ACK => Ok(()),
+                wire::NACK => Err(Error::Protocol(
+                    "receiver rejected the frame (NACK)".to_string(),
+                )),
+                other => Err(Error::Protocol(format!("unknown ack byte {other:#04x}"))),
+            },
+            Err(e) => Err(classify_io("ack read", &e)),
+        }
+    }
+
+    /// Send one container frame and wait for the receiver's ACK.
+    ///
+    /// Connection-level failures (closed, reset, timed out) drop the
+    /// socket and retry through the reconnect/backoff loop; after
+    /// `max_reconnects` failed attempts the last typed error is
+    /// returned. [`Error::Protocol`] (NACK) is returned immediately.
+    pub fn send(&mut self, frame: &[u8]) -> Result<()> {
+        let msg = wire::encode_msg(frame);
+        let mut last = Error::ConnClosed { what: "never attempted" };
+        for attempt in 0..=self.cfg.max_reconnects {
+            if attempt > 0 {
+                self.stats.reconnects += 1;
+                std::thread::sleep(self.backoff_delay(attempt - 1));
+            }
+            if let Err(e) = self.ensure_connected() {
+                // receiver may be mid-restart: keep retrying on backoff
+                if matches!(e, Error::Timeout { .. }) {
+                    self.stats.timeouts += 1;
+                }
+                last = e;
+                continue;
+            }
+            match self.try_send(&msg) {
+                Ok(()) => {
+                    self.stats.frames += 1;
+                    self.stats.bytes += msg.len() as u64;
+                    return Ok(());
+                }
+                Err(Error::Protocol(p)) => {
+                    // deterministic rejection: resending the same bytes
+                    // cannot succeed, surface it to the caller
+                    self.stream = None;
+                    return Err(Error::Protocol(p));
+                }
+                Err(e) => {
+                    if matches!(e, Error::Timeout { .. }) {
+                        self.stats.timeouts += 1;
+                    }
+                    self.stream = None;
+                    last = e;
+                }
+            }
+        }
+        Err(last)
+    }
+
+    /// Drop the current connection (next send reconnects).
+    pub fn disconnect(&mut self) {
+        self.stream = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use std::net::TcpListener;
+
+    fn fast_cfg() -> NetConfig {
+        NetConfig {
+            connect_timeout: Duration::from_millis(200),
+            read_timeout: Duration::from_millis(300),
+            write_timeout: Duration::from_millis(300),
+            accept_timeout: Duration::from_millis(300),
+            max_reconnects: 2,
+            backoff_base: Duration::from_millis(5),
+            backoff_max: Duration::from_millis(20),
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn connect_to_dead_port_fails_with_typed_error_after_bounded_retries() {
+        // bind then drop: the port is (almost certainly) closed
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let t0 = std::time::Instant::now();
+        let err = FrameSender::connect(&addr, fast_cfg()).unwrap_err();
+        assert!(
+            matches!(err, Error::Io(_) | Error::Timeout { .. } | Error::ConnClosed { .. }),
+            "unexpected error class: {err}"
+        );
+        // 3 attempts with ~5/10ms backoffs: well under a second
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn unresolvable_address_is_io_error() {
+        let err = FrameSender::connect("definitely-not-a-host-xyz:1", fast_cfg());
+        assert!(matches!(err, Err(Error::Io(_))));
+    }
+
+    #[test]
+    fn nack_is_protocol_error_without_retry() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let mut buf = vec![0u8; wire::HEADER_LEN + 3 + wire::CRC_LEN];
+            conn.read_exact(&mut buf).unwrap();
+            conn.write_all(&[wire::NACK]).unwrap();
+        });
+        let mut tx = FrameSender::connect(&addr, fast_cfg()).unwrap();
+        let err = tx.send(&[1, 2, 3]).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        assert_eq!(tx.stats().frames, 0, "a NACKed frame must not count as sent");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn backoff_grows_and_is_jittered_within_bounds() {
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mut s = FrameSender {
+            addr,
+            cfg: NetConfig {
+                backoff_base: Duration::from_millis(100),
+                backoff_max: Duration::from_secs(60),
+                ..fast_cfg()
+            },
+            stream: None,
+            rng: SplitMix64::new(7),
+            stats: NetStats::default(),
+        };
+        for attempt in 0..6u32 {
+            let nominal = 100.0e-3 * f64::from(1u32 << attempt);
+            let d = s.backoff_delay(attempt).as_secs_f64();
+            assert!(
+                d >= nominal * 0.5 && d < nominal * 1.5,
+                "attempt {attempt}: {d}s outside [{:.3}, {:.3})",
+                nominal * 0.5,
+                nominal * 1.5
+            );
+        }
+        // the cap holds even for absurd attempt counts (no overflow)
+        let capped = s.backoff_delay(40);
+        assert!(capped < Duration::from_secs(91));
+    }
+}

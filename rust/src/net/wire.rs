@@ -1,0 +1,175 @@
+//! The length-prefixed wire layout for one edge→cloud message.
+//!
+//! ```text
+//! offset size  field
+//! 0      4     magic "BAFN"
+//! 4      1     wire version (1)
+//! 5      4     frame_len (u32 LE, <= MAX_FRAME_LEN)
+//! 9      len   container frame (the codec::container bytes, verbatim)
+//! 9+len  4     CRC32 over everything above (header + frame)
+//! ```
+//!
+//! After reading and validating a message the receiver answers with one
+//! byte: [`ACK`] (frame accepted) or [`NACK`] (wire-level rejection; the
+//! receiver drops the connection right after, because framing downstream
+//! of a corrupt message cannot be trusted). The sender treats a NACK as
+//! a non-retryable [`super::Error::Protocol`] — resending the same bytes
+//! would fail the same way.
+//!
+//! The message CRC is deliberately redundant with the container's own
+//! trailing CRC32: the wire check localizes corruption to the transport
+//! (and covers the length prefix, which the container CRC cannot), while
+//! the container check keeps protecting frames at rest.
+
+use super::{Error, Result};
+use crate::codec::MAX_DECODED_SAMPLES;
+
+pub const MAGIC: &[u8; 4] = b"BAFN";
+pub const VERSION: u8 = 1;
+/// magic + version + frame_len.
+pub const HEADER_LEN: usize = 9;
+/// Trailing message CRC32.
+pub const CRC_LEN: usize = 4;
+
+/// Receiver's one-byte verdict on a message.
+pub const ACK: u8 = 0xA5;
+pub const NACK: u8 = 0x5A;
+
+/// Hard cap on the transported frame length, derived from the decode
+/// cap: a frame decodes to at most [`MAX_DECODED_SAMPLES`] u16 samples
+/// (32 MiB), and no registered codec expands the entropy-coded payload
+/// past 2x the raw sample bytes, so 4 bytes/sample bounds every real
+/// frame with headroom. A hostile length prefix beyond this is rejected
+/// before any allocation.
+pub const MAX_FRAME_LEN: usize = 4 * MAX_DECODED_SAMPLES;
+
+/// Serialize one container frame into a complete wire message.
+/// Panics if the frame exceeds [`MAX_FRAME_LEN`] (trusted, locally
+/// produced input — a violation is a bug, not an input error).
+pub fn encode_msg(frame: &[u8]) -> Vec<u8> {
+    assert!(
+        frame.len() <= MAX_FRAME_LEN,
+        "frame of {} bytes exceeds the wire cap {MAX_FRAME_LEN}",
+        frame.len()
+    );
+    let mut out = Vec::with_capacity(HEADER_LEN + frame.len() + CRC_LEN);
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    out.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+    out.extend_from_slice(frame);
+    let crc = crc32fast::hash(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Validate a message header; returns the declared frame length.
+/// Total: bad magic / version is [`Error::Protocol`], an oversized
+/// length is [`Error::TooLarge`] — checked before the caller allocates.
+pub fn validate_header(hdr: &[u8; HEADER_LEN]) -> Result<usize> {
+    if &hdr[0..4] != MAGIC {
+        return Err(Error::Protocol(format!(
+            "bad wire magic {:02x?} (want {MAGIC:02x?})",
+            &hdr[0..4]
+        )));
+    }
+    if hdr[4] != VERSION {
+        return Err(Error::Protocol(format!(
+            "wire version {} (this build speaks {VERSION})",
+            hdr[4]
+        )));
+    }
+    let len = u32::from_le_bytes([hdr[5], hdr[6], hdr[7], hdr[8]]) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(Error::TooLarge { requested: len, limit: MAX_FRAME_LEN });
+    }
+    Ok(len)
+}
+
+/// Verify the trailing CRC32 of a complete message body (header +
+/// frame) against the stored trailer.
+pub fn check_crc(body: &[u8], trailer: &[u8; CRC_LEN]) -> Result<()> {
+    let want = u32::from_le_bytes(*trailer);
+    let got = crc32fast::hash(body);
+    if want != got {
+        return Err(Error::Protocol(format!(
+            "message CRC mismatch: stored {want:#010x}, computed {got:#010x}"
+        )));
+    }
+    Ok(())
+}
+
+/// Recompute the trailing CRC32 of a (possibly mutated) wire message in
+/// place — the fault-injection harness uses this to reach validation
+/// logic behind the checksum, mirroring `container::refresh_crc`.
+/// Messages shorter than the CRC field are returned unchanged.
+pub fn refresh_msg_crc(msg: &mut [u8]) {
+    if msg.len() < CRC_LEN {
+        return;
+    }
+    let body_len = msg.len() - CRC_LEN;
+    let crc = crc32fast::hash(&msg[..body_len]);
+    msg[body_len..].copy_from_slice(&crc.to_le_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    fn header_of(msg: &[u8]) -> [u8; HEADER_LEN] {
+        let mut h = [0u8; HEADER_LEN];
+        h.copy_from_slice(&msg[..HEADER_LEN]);
+        h
+    }
+
+    #[test]
+    fn encode_validate_roundtrip() {
+        let frame = vec![7u8; 33];
+        let msg = encode_msg(&frame);
+        assert_eq!(msg.len(), HEADER_LEN + 33 + CRC_LEN);
+        assert_eq!(validate_header(&header_of(&msg)).unwrap(), 33);
+        let (body, crc) = msg.split_at(msg.len() - CRC_LEN);
+        let mut trailer = [0u8; CRC_LEN];
+        trailer.copy_from_slice(crc);
+        check_crc(body, &trailer).unwrap();
+        assert_eq!(&body[HEADER_LEN..], frame.as_slice());
+    }
+
+    #[test]
+    fn bad_magic_version_and_length_rejected() {
+        let msg = encode_msg(&[1, 2, 3]);
+        let mut h = header_of(&msg);
+        h[0] = b'X';
+        assert!(matches!(validate_header(&h), Err(Error::Protocol(_))));
+        let mut h = header_of(&msg);
+        h[4] = 9;
+        assert!(matches!(validate_header(&h), Err(Error::Protocol(_))));
+        let mut h = header_of(&msg);
+        h[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            validate_header(&h),
+            Err(Error::TooLarge { requested, .. }) if requested == u32::MAX as usize
+        ));
+        // the cap itself is accepted (allocation stays bounded)
+        let mut h = header_of(&msg);
+        h[5..9].copy_from_slice(&(MAX_FRAME_LEN as u32).to_le_bytes());
+        assert_eq!(validate_header(&h).unwrap(), MAX_FRAME_LEN);
+    }
+
+    #[test]
+    fn crc_refresh_matches_encode() {
+        let mut msg = encode_msg(&[9u8; 10]);
+        let orig = msg.clone();
+        // mutate + refresh: the CRC must track the new bytes
+        msg[HEADER_LEN] ^= 0xFF;
+        refresh_msg_crc(&mut msg);
+        assert_ne!(msg, orig);
+        let (body, crc) = msg.split_at(msg.len() - CRC_LEN);
+        let mut trailer = [0u8; CRC_LEN];
+        trailer.copy_from_slice(crc);
+        check_crc(body, &trailer).unwrap();
+        // short slices are a no-op, not a panic
+        refresh_msg_crc(&mut [0u8; 2]);
+    }
+}

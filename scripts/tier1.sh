@@ -10,6 +10,10 @@ cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
+# the transport + fuzz suites are part of `cargo test`, but name them
+# explicitly so a test-harness filter or target rename can't silently
+# drop them from the gate (they enforce the no-panic wire contract)
+cargo test -q --test net_loopback --test transport_robustness --test json_fuzz
 cargo clippy --all-targets -- -D clippy::unwrap_used -D clippy::expect_used
 cargo bench --bench bench_codec -- --smoke --json-out target/bench-json
 test -f target/bench-json/BENCH_codec.json

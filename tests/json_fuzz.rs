@@ -1,0 +1,147 @@
+//! Property/fuzz tests for the JSON config parser (ROADMAP open item):
+//! `json::parse` is fed prng-mutated valid configs plus targeted
+//! corpora (deep nesting, huge numbers, truncations, surrogate
+//! escapes). Every input must return `Ok` or a typed `ParseError` —
+//! never panic, never overflow the stack, never hang.
+//!
+//! Two real bugs were found by this harness and fixed in `json::parse`:
+//!
+//! * unbounded recursion — `[[[[…` with ~100k brackets overflowed the
+//!   parse stack; now bounded by `json::MAX_DEPTH` with a typed error;
+//! * surrogate-pair underflow — `"\ud800\u0041"` computed `lo - 0xdc00`
+//!   on a non-low-surrogate and panicked under `overflow-checks = true`
+//!   (the test/dev profile); now rejected as a bad escape.
+//!
+//! The parsed values are additionally pushed through the
+//! `PipelineConfig`/`ServerConfig` overlay (`apply`), since that is the
+//! path untrusted config files actually take into the system.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use baf::config::{PipelineConfig, ServerConfig};
+use baf::json::{parse, MAX_DEPTH};
+use baf::util::SplitMix64;
+
+/// A realistic config the mutators start from (covers both sections and
+/// every value type the overlay reads).
+const SEED_CONFIG: &str = r#"{
+  "c": 16, "n": 8, "codec": "tlc", "qp": 0,
+  "policy": "corr", "consolidate": true, "stripes": 4,
+  "server": {
+    "batch_cap": 8, "batch_deadline_us": 2000, "arrival_rate": 200.0,
+    "num_requests": 512, "decode_workers": 2, "queue_depth": 64,
+    "burst_factor": 1.0, "corrupt_rate": 0.05,
+    "listen": "127.0.0.1:7878", "connect": "10.0.0.2:7878"
+  }
+}"#;
+
+/// Parse, and if it parses, run it through both config overlays — the
+/// full untrusted path. Only the absence of panics is asserted.
+fn exercise(input: &str) {
+    if let Ok(v) = parse(input) {
+        let _ = PipelineConfig::default().apply(&v);
+        let _ = ServerConfig::default().apply(v.get("server").unwrap_or(&v));
+    }
+}
+
+#[test]
+fn deep_nesting_is_a_typed_error_not_a_stack_overflow() {
+    for depth in [MAX_DEPTH + 1, 1_000, 100_000] {
+        let arrays = format!("{}1{}", "[".repeat(depth), "]".repeat(depth));
+        assert!(parse(&arrays).is_err(), "depth {depth} must be rejected");
+        let objects = "{\"k\":".repeat(depth) + "1" + &"}".repeat(depth);
+        assert!(parse(&objects).is_err(), "depth {depth} must be rejected");
+    }
+    // unclosed variants hit the limit before the missing-bracket error
+    assert!(parse(&"[".repeat(100_000)).is_err());
+    // and the limit is not off by much: real configs are untouched
+    assert!(parse(SEED_CONFIG).is_ok());
+}
+
+#[test]
+fn huge_and_degenerate_numbers_do_not_panic() {
+    let long_int = "9".repeat(10_000);
+    let long_frac = format!("0.{}1", "0".repeat(10_000));
+    for s in [
+        "1e308", "-1e308", "1e309", "-1e309", "1e99999", "-1e99999",
+        "0.00000000000000000000000000000000000001",
+        "123456789012345678901234567890123456789012345678901234567890",
+        long_int.as_str(), long_frac.as_str(),
+        "1e", "1e+", "1e-", "-", "-.", ".5", "00", "01", "1.", "--1",
+    ] {
+        exercise(s);
+    }
+    // overflow saturates to f64 infinity (std parse semantics) — the
+    // point is that it is a value or an error, not a crash
+    if let Ok(v) = parse("1e999") {
+        assert!(v.as_f64().unwrap().is_infinite());
+    }
+}
+
+#[test]
+fn surrogate_escape_corpus_never_panics() {
+    for s in [
+        r#""\ud800""#,          // lone high surrogate
+        r#""\udfff""#,          // lone low surrogate
+        r#""\ud800\ud800""#,    // high + high
+        "\"\\ud800\\u0041\"",   // high + non-surrogate (the underflow bug)
+        "\"\\ud800\\udc00\"",   // a valid pair (U+10000)
+        r#""\ud800"#,           // truncated mid-pair
+        r#""\ud800\u"#,         // truncated second escape
+        r#""\ud800\u00"#,       // truncated second escape digits
+        r#""\uD83D\uDE00""#,    // uppercase hex valid pair
+        r#""\u0000""#,          // NUL is fine in JSON
+    ] {
+        exercise(s);
+    }
+    assert_eq!(parse("\"\\ud83d\\ude00\"").unwrap().as_str(), Some("😀"));
+}
+
+#[test]
+fn every_prefix_of_a_valid_config_is_handled() {
+    for end in 0..SEED_CONFIG.len() {
+        if SEED_CONFIG.is_char_boundary(end) {
+            exercise(&SEED_CONFIG[..end]);
+        }
+    }
+}
+
+#[test]
+fn prng_mutated_configs_never_panic() {
+    let mut rng = SplitMix64::new(0xF422);
+    let seed_bytes = SEED_CONFIG.as_bytes();
+    for _ in 0..10_000 {
+        let mut bytes = seed_bytes.to_vec();
+        // 1..=8 byte-level mutations: overwrite, insert, delete
+        let edits = rng.next_u64() % 8 + 1;
+        for _ in 0..edits {
+            if bytes.is_empty() {
+                break;
+            }
+            let pos = (rng.next_u64() as usize) % bytes.len();
+            match rng.next_u64() % 3 {
+                0 => bytes[pos] = rng.next_u64() as u8,
+                1 => bytes.insert(pos, rng.next_u64() as u8),
+                _ => {
+                    bytes.remove(pos);
+                }
+            }
+        }
+        // the parser takes &str: lossy-decode like a config loader would
+        let text = String::from_utf8_lossy(&bytes);
+        exercise(&text);
+    }
+}
+
+#[test]
+fn structural_garbage_corpus() {
+    for s in [
+        "", " ", "\u{feff}{}", "{", "}", "[", "]", "{]", "[}",
+        "{\"a\"}", "{\"a\":}", "{:1}", "[,]", "[1,]", "[1 2]",
+        "\"", "\\", "\"\\\"", "\"\\x\"", "tru", "truee", "nul", "nulll",
+        "{\"a\":1}garbage", "[1][2]", "//comment", "{'a':1}",
+        "\u{0}", "\"\u{0}\"",
+    ] {
+        exercise(s);
+    }
+}

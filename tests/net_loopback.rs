@@ -1,0 +1,237 @@
+//! Loopback integration tests for the `baf::net` TCP transport: edge
+//! and cloud threads talk over `127.0.0.1:0` with real sockets.
+//!
+//! * every codec × both container versions round-trips byte-identically
+//!   (the wire must be transparent: what `container::pack` produced is
+//!   what `container::parse` sees on the far side);
+//! * a mid-run disconnect is survived via reconnect-with-backoff and
+//!   every frame still arrives, with `net_reconnects` reflecting it;
+//! * wire-rejected garbage shows up in `net_frames_rejected` while the
+//!   stream keeps serving valid frames;
+//! * a frame corrupted *inside* the container (wire CRC intact) passes
+//!   the transport and surfaces as `net::Error::Codec` from
+//!   `recv_parsed` — the layering the error taxonomy promises.
+//!
+//! Nothing here requires artifacts; the suite runs everywhere tier-1
+//! runs.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use baf::codec::{container, CodecKind, ALL_CODECS};
+use baf::metrics::Registry;
+use baf::net::{wire, Error, FrameReceiver, FrameSender, NetConfig};
+use baf::quant::{quantize, QuantizedTensor};
+use baf::tensor::Tensor;
+use baf::util::SplitMix64;
+use std::io::{Read, Write};
+use std::time::Duration;
+
+fn sample_quant(c: usize, h: usize, w: usize, n: u8, seed: u64) -> QuantizedTensor {
+    let mut r = SplitMix64::new(seed);
+    let z = Tensor::from_vec(
+        &[c, h, w],
+        (0..c * h * w).map(|_| r.next_f32() * 4.0 - 2.0).collect(),
+    );
+    quantize(&z, n)
+}
+
+fn qp_for(codec: CodecKind) -> u8 {
+    if codec == CodecKind::Mic {
+        12
+    } else {
+        0
+    }
+}
+
+fn cfg() -> NetConfig {
+    NetConfig {
+        connect_timeout: Duration::from_secs(2),
+        read_timeout: Duration::from_secs(2),
+        write_timeout: Duration::from_secs(2),
+        accept_timeout: Duration::from_secs(5),
+        max_reconnects: 6,
+        backoff_base: Duration::from_millis(5),
+        backoff_max: Duration::from_millis(50),
+        seed: 0x10CA1,
+    }
+}
+
+/// One frame per codec per container version: 5 codecs x {v1, v2/K=4}.
+fn corpus() -> Vec<(String, Vec<u8>)> {
+    let mut frames = Vec::new();
+    for codec in ALL_CODECS {
+        let q = sample_quant(8, 8, 8, 6, 0x10CA1 + codec as u64);
+        frames.push((
+            format!("{}/v1", codec.name()),
+            container::pack(&q, codec, qp_for(codec)),
+        ));
+        frames.push((
+            format!("{}/v2k4", codec.name()),
+            container::pack_v2(&q, codec, qp_for(codec), 4),
+        ));
+    }
+    frames
+}
+
+#[test]
+fn all_codecs_and_container_versions_roundtrip_byte_identically() {
+    let mut rx = FrameReceiver::bind("127.0.0.1:0", cfg()).unwrap();
+    let addr = rx.local_addr().unwrap().to_string();
+    let frames = corpus();
+    assert_eq!(frames.len(), 10, "five codecs x two container versions");
+
+    let sent = frames.clone();
+    let edge = std::thread::spawn(move || {
+        let mut tx = FrameSender::connect(&addr, cfg()).unwrap();
+        for (name, frame) in &sent {
+            tx.send(frame).unwrap_or_else(|e| panic!("sending {name}: {e}"));
+        }
+        tx.stats()
+    });
+
+    for (name, frame) in &frames {
+        // recv_parsed also validates the container end to end
+        let (got, parsed) = rx
+            .recv_parsed()
+            .unwrap_or_else(|e| panic!("receiving {name}: {e}"));
+        assert_eq!(&got.frame, frame, "{name}: wire must be transparent");
+        container::unpack(&parsed).unwrap_or_else(|e| panic!("unpacking {name}: {e}"));
+    }
+
+    let tx_stats = edge.join().unwrap();
+    assert_eq!(tx_stats.frames as usize, frames.len());
+    assert_eq!(tx_stats.reconnects, 0, "clean run needs no reconnects");
+    assert_eq!(rx.stats().frames as usize, frames.len());
+    assert_eq!(rx.stats().bytes, tx_stats.bytes);
+}
+
+#[test]
+fn mid_run_disconnect_is_survived_via_backoff_and_nothing_is_lost() {
+    let mut rx = FrameReceiver::bind("127.0.0.1:0", cfg()).unwrap();
+    let addr = rx.local_addr().unwrap().to_string();
+    const N: usize = 10;
+    let frames: Vec<Vec<u8>> = (0..N)
+        .map(|i| {
+            let q = sample_quant(4, 8, 8, 6, 0xD15C + i as u64);
+            container::pack(&q, CodecKind::Tlc, 0)
+        })
+        .collect();
+
+    let sent = frames.clone();
+    let edge = std::thread::spawn(move || {
+        let mut tx = FrameSender::connect(&addr, cfg()).unwrap();
+        for frame in &sent {
+            tx.send(frame).unwrap();
+        }
+        tx.stats()
+    });
+
+    let mut got = Vec::new();
+    while got.len() < N {
+        match rx.recv() {
+            Ok(r) => {
+                got.push(r.frame);
+                if got.len() == 3 {
+                    // sever the connection mid-run: the sender must
+                    // reconnect (with backoff) and resume where it was
+                    rx.disconnect();
+                }
+            }
+            // transient: the severed connection winding down
+            Err(Error::ConnClosed { .. }) | Err(Error::Timeout { .. }) => {}
+            Err(e) => panic!("receiver failed: {e}"),
+        }
+    }
+    assert_eq!(got, frames, "every frame arrives, in order, bit-exact");
+
+    let tx_stats = edge.join().unwrap();
+    assert_eq!(tx_stats.frames as usize, N, "all frames acked");
+    assert!(
+        tx_stats.reconnects >= 1,
+        "the injected disconnect must show up in net_reconnects"
+    );
+
+    // the metrics registry view the coordinator exports
+    let reg = Registry::default();
+    tx_stats.export_sender_into(&reg);
+    let m = reg.export();
+    let counters = m.get("counters").unwrap();
+    assert_eq!(counters.get("net_frames_out").unwrap().as_usize(), Some(N));
+    assert!(counters.get("net_reconnects").unwrap().as_usize().unwrap() >= 1);
+}
+
+#[test]
+fn wire_garbage_is_rejected_and_counted_while_valid_frames_keep_flowing() {
+    let mut rx = FrameReceiver::bind("127.0.0.1:0", cfg()).unwrap();
+    let addr = rx.local_addr().unwrap().to_string();
+    let q = sample_quant(4, 8, 8, 6, 0xBAD);
+    let frame = container::pack(&q, CodecKind::Tlc, 0);
+
+    let expect = frame.clone();
+    let edge = std::thread::spawn(move || {
+        // first a raw client that speaks garbage...
+        let mut bad = std::net::TcpStream::connect(&addr).unwrap();
+        bad.write_all(b"not the baf wire protocol at all").unwrap();
+        let mut verdict = [0u8; 1];
+        bad.read_exact(&mut verdict).unwrap();
+        assert_eq!(verdict[0], wire::NACK, "garbage must be NACKed");
+        drop(bad);
+        // ...then a well-behaved sender on a fresh connection
+        let mut tx = FrameSender::connect(&addr, cfg()).unwrap();
+        tx.send(&expect).unwrap();
+    });
+
+    let mut rejected = 0;
+    let mut received = None;
+    for _ in 0..16 {
+        match rx.recv() {
+            Ok(r) => {
+                received = Some(r.frame);
+                break;
+            }
+            Err(Error::Protocol(_)) | Err(Error::TooLarge { .. }) => rejected += 1,
+            Err(Error::ConnClosed { .. }) | Err(Error::Timeout { .. }) => {}
+            Err(e) => panic!("receiver failed: {e}"),
+        }
+    }
+    edge.join().unwrap();
+    assert_eq!(received.as_ref(), Some(&frame));
+    assert_eq!(rejected, 1, "exactly the garbage message is rejected");
+
+    let reg = Registry::default();
+    rx.stats().export_receiver_into(&reg);
+    let counters = reg.export();
+    let counters = counters.get("counters").unwrap();
+    assert_eq!(counters.get("net_frames_rejected").unwrap().as_usize(), Some(1));
+    assert_eq!(counters.get("net_frames_in").unwrap().as_usize(), Some(1));
+}
+
+#[test]
+fn container_corruption_passes_the_wire_and_fails_typed_at_parse() {
+    let mut rx = FrameReceiver::bind("127.0.0.1:0", cfg()).unwrap();
+    let addr = rx.local_addr().unwrap().to_string();
+    let q = sample_quant(4, 8, 8, 6, 0xC0DE);
+    let mut corrupt = container::pack(&q, CodecKind::Tlc, 0);
+    // break the *container* CRC; the wire layer will wrap these bytes
+    // with its own (valid) message CRC, so the transport accepts them
+    let last = corrupt.len() - 1;
+    corrupt[last] ^= 0xFF;
+
+    let payload = corrupt.clone();
+    let edge = std::thread::spawn(move || {
+        let mut tx = FrameSender::connect(&addr, cfg()).unwrap();
+        // the transport acks: wire-level integrity is its whole contract
+        tx.send(&payload).unwrap();
+    });
+
+    let err = rx.recv_parsed().unwrap_err();
+    assert!(
+        matches!(err, Error::Codec(_)),
+        "container corruption must surface as Error::Codec, got: {err}"
+    );
+    edge.join().unwrap();
+    // the wire itself was fine: the message counts as received, and the
+    // connection survives (framing was never in doubt)
+    assert_eq!(rx.stats().frames, 1);
+    assert_eq!(rx.stats().rejected, 0);
+}
