@@ -1,0 +1,69 @@
+//! `baf_lint` — the repo's static analysis gate (see `baf::lint`).
+//!
+//! Usage: `baf_lint [ROOT] [--json PATH]`
+//!
+//! Walks `ROOT/rust/src` (default: the current directory), prints a
+//! human report, writes the machine-readable report (default
+//! `ROOT/target/lint-report.json`), and exits nonzero on any
+//! unsuppressed finding or ROADMAP constant drift. Run it from the repo
+//! root as `cargo run --release --bin baf_lint`.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: baf_lint [ROOT] [--json PATH]\n\
+  ROOT         repo root to lint (default: .)\n\
+  --json PATH  where to write the JSON report\n\
+               (default: ROOT/target/lint-report.json)\n";
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut json_out: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_out = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("baf_lint: --json needs a path\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => root = PathBuf::from(other),
+        }
+    }
+    let json_out = json_out.unwrap_or_else(|| root.join("target").join("lint-report.json"));
+
+    let report = match baf::lint::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("baf_lint: walking {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    print!("{}", report.human());
+
+    if let Some(dir) = json_out.parent() {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("baf_lint: creating {}: {e}", dir.display());
+            return ExitCode::from(2);
+        }
+    }
+    if let Err(e) = baf::json::to_file(&json_out, &report.to_value()) {
+        eprintln!("baf_lint: writing {}: {e}", json_out.display());
+        return ExitCode::from(2);
+    }
+    println!("report: {}", json_out.display());
+
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

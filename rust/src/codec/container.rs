@@ -281,7 +281,12 @@ pub fn parse(bytes: &[u8]) -> Result<Frame> {
             got: bytes.len(),
         });
     }
-    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let body_len = bytes.len().checked_sub(4).ok_or(Error::Truncated {
+        what: "container frame",
+        needed: HEADER_LEN + 4,
+        got: bytes.len(),
+    })?;
+    let (body, crc_bytes) = bytes.split_at(body_len);
     let want = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
     let got = crc32fast::hash(body);
     if want != got {
@@ -307,12 +312,21 @@ pub fn parse(bytes: &[u8]) -> Result<Frame> {
     if !(1..=16).contains(&n) {
         return Err(Error::Corrupt(format!("bit depth {n} outside 1..=16")));
     }
-    let rd16 = |off: usize| u16::from_le_bytes([body[off], body[off + 1]]) as usize;
-    let channels = rd16(8);
-    let tile_w = rd16(10);
-    let tile_h = rd16(12);
-    let cols = rd16(14);
-    let rows = rd16(16);
+    let rd16 = |off: usize| -> Result<usize> {
+        match body.get(off..off + 2) {
+            Some(b) => Ok(u16::from_le_bytes([b[0], b[1]]) as usize),
+            None => Err(Error::Truncated {
+                what: "container header",
+                needed: off + 2,
+                got: body.len(),
+            }),
+        }
+    };
+    let channels = rd16(8)?;
+    let tile_w = rd16(10)?;
+    let tile_h = rd16(12)?;
+    let cols = rd16(14)?;
+    let rows = rd16(16)?;
     let payload_len =
         u32::from_le_bytes([body[18], body[19], body[20], body[21]]) as usize;
     if channels == 0 || tile_w == 0 || tile_h == 0 || cols == 0 || rows == 0 {
@@ -344,12 +358,20 @@ pub fn parse(bytes: &[u8]) -> Result<Frame> {
                 got: body.len(),
             });
         }
-        (rd16(HEADER_LEN), HEADER_LEN + 2)
+        (rd16(HEADER_LEN)?, HEADER_LEN + 2)
     } else {
         (1usize, HEADER_LEN)
     };
     let side_len = 4 * channels;
-    let expect = side_off + side_len + payload_len;
+    // header fields are u16/u32, so these sums cannot overflow usize on
+    // any supported target — but keep the arithmetic checked anyway: a
+    // hostile header must never wrap a length computation
+    let payload_off = side_off
+        .checked_add(side_len)
+        .ok_or_else(|| Error::Corrupt("side-info length overflow".into()))?;
+    let expect = payload_off
+        .checked_add(payload_len)
+        .ok_or_else(|| Error::Corrupt("header length overflow".into()))?;
     if body.len() < expect {
         return Err(Error::Truncated {
             what: "container body",
@@ -363,19 +385,27 @@ pub fn parse(bytes: &[u8]) -> Result<Frame> {
             body.len()
         )));
     }
+    let side = body.get(side_off..payload_off).ok_or(Error::Truncated {
+        what: "container side info",
+        needed: payload_off,
+        got: body.len(),
+    })?;
     let mut ranges = Vec::with_capacity(channels);
-    for ch in 0..channels {
-        let off = side_off + 4 * ch;
-        let min = f16_bits_to_f32(u16::from_le_bytes([body[off], body[off + 1]]));
-        let max = f16_bits_to_f32(u16::from_le_bytes([body[off + 2], body[off + 3]]));
+    for quad in side.chunks_exact(4) {
+        let min = f16_bits_to_f32(u16::from_le_bytes([quad[0], quad[1]]));
+        let max = f16_bits_to_f32(u16::from_le_bytes([quad[2], quad[3]]));
         if !(min.is_finite() && max.is_finite()) || max < min {
             return Err(Error::Corrupt(format!("bad channel range [{min}, {max}]")));
         }
         ranges.push(ChannelRange { min, max });
     }
-    let payload_off = side_off + side_len;
+    let tail = body.get(payload_off..).ok_or(Error::Truncated {
+        what: "container payload",
+        needed: expect,
+        got: body.len(),
+    })?;
     if version != VERSION2 {
-        let payload = body[payload_off..].to_vec();
+        let payload = tail.to_vec();
         return Ok(Frame {
             version,
             codec,
@@ -405,18 +435,28 @@ pub fn parse(bytes: &[u8]) -> Result<Frame> {
             got: payload_len,
         });
     }
-    let table = &body[payload_off..payload_off + 8 * k];
-    let data = &body[payload_off + 8 * k..];
+    let table = tail.get(..8 * k).ok_or(Error::Truncated {
+        what: "stripe table",
+        needed: 8 * k,
+        got: tail.len(),
+    })?;
+    let data = tail.get(8 * k..).ok_or(Error::Truncated {
+        what: "stripe payloads",
+        needed: 8 * k,
+        got: tail.len(),
+    })?;
     let mut stripes = Vec::with_capacity(k);
     let mut off = 0usize;
-    for i in 0..k {
-        let e = &table[8 * i..8 * i + 8];
+    for (i, e) in table.chunks_exact(8).enumerate() {
         let len = u32::from_le_bytes([e[0], e[1], e[2], e[3]]) as usize;
         let want = u32::from_le_bytes([e[4], e[5], e[6], e[7]]);
         let end = off.checked_add(len).filter(|&end| end <= data.len()).ok_or_else(|| {
             Error::Corrupt(format!("stripe {i} range {off}+{len} outside payload"))
         })?;
-        let got = crc32fast::hash(&data[off..end]);
+        let stripe = data.get(off..end).ok_or_else(|| {
+            Error::Corrupt(format!("stripe {i} range {off}+{len} outside payload"))
+        })?;
+        let got = crc32fast::hash(stripe);
         if got != want {
             return Err(Error::Corrupt(format!(
                 "stripe {i} CRC mismatch: stored {want:#010x}, computed {got:#010x}"

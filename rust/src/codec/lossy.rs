@@ -150,6 +150,7 @@ pub fn encode(samples: &[u16], width: usize, height: usize, n: u8, qp: u8) -> Ve
 /// zigzag table (the bit tree is 7 bits wide, so corrupt streams can
 /// produce 64..127), DC accumulation saturates instead of wrapping, and
 /// truncation surfaces via the range decoder's overrun counter.
+// baf-lint: allow(raw-index) -- 8x8 block tables: pos<=last<64 indexes ZIGZAG/q/coef (all 64-long), sy<height/sx<width guard the plane write
 pub fn decode(bytes: &[u8], meta: &ImageMeta, qp: u8) -> Result<Vec<u16>> {
     let samples_len = meta.checked_samples()?;
     let (width, height, n) = (meta.width, meta.height, meta.n);

@@ -32,6 +32,7 @@ pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
 /// `scratch` and go back when done, and the deflate output lands in
 /// `out` (cleared first, capacity reused). DEFLATE's internal state is
 /// the one allocation this cannot pool (flate2 owns it).
+// baf-lint: allow(panic-macro) -- encoder contract (ROADMAP): trusted in-memory deflate, a write failure is a bug, not an input
 pub fn encode_into(
     samples: &[u16],
     width: usize,
@@ -101,6 +102,7 @@ pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Result<Vec<u16>> {
 /// lands in a caller-owned slice of exactly `width * height` samples (a
 /// mismatch is [`Error::Corrupt`]). Error paths still return their
 /// scratch buffers to the pool.
+// baf-lint: allow(raw-index) -- unfilter/unpack loops: y<height, i<stride, x<width bound every index into the exactly-sized planes
 pub fn decode_into(
     bytes: &[u8],
     meta: &ImageMeta,
@@ -117,7 +119,9 @@ pub fn decode_into(
     let (width, height, n) = (meta.width, meta.height, meta.n);
     let bps = bytes_per_sample(n);
     let stride = width * bps;
-    let expected = samples_len * bps;
+    let expected = samples_len
+        .checked_mul(bps)
+        .ok_or_else(|| Error::Corrupt("png-like plane size overflow".into()))?;
     let mut filtered = scratch.take_u8(expected);
     // `.take(expected + 1)`: enough to detect an over-long stream without
     // ever buffering an unbounded decompression

@@ -253,6 +253,7 @@ impl BitTree {
         }
     }
 
+    // baf-lint: allow(raw-index) -- ctx starts at 1 and shifts left `bits` times, staying below probs.len() == 1 << bits
     pub fn decode(&mut self, dec: &mut Decoder) -> u32 {
         let mut ctx = 1usize;
         for _ in 0..self.bits {

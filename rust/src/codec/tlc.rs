@@ -139,6 +139,7 @@ pub fn decode(bytes: &[u8], meta: &ImageMeta) -> Result<Vec<u16>> {
 /// Re-entrant [`decode`]: writes into a caller-owned slice of exactly
 /// `meta.width * meta.height` samples (a mismatch is [`Error::Corrupt`],
 /// keeping the total-decode contract — no panic on bad plumbing either).
+// baf-lint: allow(raw-index) -- per-pixel prediction loop: x<width and y<height index the exactly-sized sample plane
 pub fn decode_into(bytes: &[u8], meta: &ImageMeta, samples: &mut [u16]) -> Result<()> {
     let samples_len = meta.checked_samples()?;
     if samples.len() != samples_len {

@@ -225,6 +225,7 @@ fn checked_total(c: usize, h: usize, w: usize, n: u8) -> Result<usize> {
 
 /// Re-entrant [`decode_planes`]: writes into a caller-owned slice of
 /// exactly `c * h * w` samples (a mismatch is [`Error::Corrupt`]).
+// baf-lint: allow(raw-index) -- plane windows: ch<c and checked_total keep every h*w span inside `out`
 pub fn decode_planes_into(
     bytes: &[u8],
     c: usize,

@@ -19,6 +19,7 @@ pub fn encode(samples: &[u16], width: usize, height: usize, n: u8) -> Vec<u8> {
 /// `scratch` and goes back when done; the compressed stream lands in
 /// `out`. zstd's context and output buffer are its own allocations —
 /// documented exception to the zero-alloc claim (see `codec::scratch`).
+// baf-lint: allow(panic-macro) -- encoder contract (ROADMAP): trusted in-memory zstd compress, a failure is a bug, not an input
 pub fn encode_into(
     samples: &[u16],
     _width: usize,
@@ -67,7 +68,10 @@ pub fn decode_into(bytes: &[u8], meta: &ImageMeta, samples: &mut [u16]) -> Resul
             samples.len()
         )));
     }
-    let packed_len = (count * meta.n as usize).div_ceil(8);
+    let packed_len = count
+        .checked_mul(meta.n as usize)
+        .ok_or_else(|| Error::Corrupt("zstd packed size overflow".into()))?
+        .div_ceil(8);
     // `decompress` caps its output at `packed_len` bytes; an over-long
     // stream errors inside zstd rather than growing the buffer
     let raw = zstd::bulk::decompress(bytes, packed_len)

@@ -21,6 +21,7 @@ pub enum BatchOutcome<T> {
 }
 
 /// Pull the next dynamic batch from a channel.
+// baf-lint: allow(unbounded-alloc) -- cap is the server's own batching config (trusted, small), not wire input
 pub fn next_batch<T>(
     rx: &Receiver<T>,
     cap: usize,

@@ -55,6 +55,9 @@ pub mod data;
 pub mod eval;
 #[allow(clippy::unwrap_used, clippy::expect_used)]
 pub mod json;
+// the lint walks untrusted-ish source text; hold it to its own standard
+#[deny(clippy::unwrap_used, clippy::expect_used)]
+pub mod lint;
 #[deny(clippy::unwrap_used, clippy::expect_used)]
 pub mod metrics;
 #[deny(clippy::unwrap_used, clippy::expect_used)]

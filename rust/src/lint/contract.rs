@@ -1,0 +1,295 @@
+//! The per-module contract map and the ROADMAP constant-drift check.
+//!
+//! The map mirrors the clippy scoping in `rust/src/lib.rs`: the modules
+//! that deny `unwrap_used`/`expect_used` there — `codec` (including
+//! `codec::scratch`), `net`, `coordinator`, `metrics`, and
+//! `runtime::pool` — are exactly the modules whose decode functions the
+//! structural rules (raw-index, unchecked-len-arith, unbounded-alloc,
+//! truncating-cast) and the module-wide panic-macro rule apply to. The
+//! `unsafe`-hygiene rule runs over the whole tree regardless.
+
+use super::lexer::{self, Token};
+
+/// Directories whose `.rs` files carry the full no-panic contract.
+pub const CONTRACT_DIRS: [&str; 4] = [
+    "rust/src/codec/",
+    "rust/src/net/",
+    "rust/src/coordinator/",
+    "rust/src/metrics/",
+];
+
+/// Individual contract files outside those directories.
+pub const CONTRACT_FILES: [&str; 1] = ["rust/src/runtime/pool.rs"];
+
+/// Is this repo-relative path under the no-panic contract?
+pub fn is_contract(rel: &str) -> bool {
+    CONTRACT_DIRS.iter().any(|d| rel.starts_with(d)) || CONTRACT_FILES.contains(&rel)
+}
+
+/// Name fragments that mark a function as decode-path: it consumes
+/// bytes or messages that may be hostile.
+pub const DECODE_PATTERNS: [&str; 10] = [
+    "decode", "parse", "unpack", "validate", "check", "read", "recv",
+    "from_", "next_", "get_",
+];
+
+pub fn is_decode_fn(name: &str) -> bool {
+    DECODE_PATTERNS.iter().any(|p| name.contains(p))
+}
+
+/// Identifiers whose presence in a function counts as a size cap: the
+/// `MAX_*` limits themselves, plus the helpers that enforce them
+/// (`ImageMeta::checked_samples`, `tlc_ic::checked_total`,
+/// `wire::validate_header`).
+pub const CAP_IDENTS: [&str; 6] = [
+    "MAX_DECODED_SAMPLES",
+    "MAX_FRAME_LEN",
+    "MAX_HEADER_LEN",
+    "checked_samples",
+    "checked_total",
+    "validate_header",
+];
+
+/// Integer types an `as` cast can silently truncate a length into.
+pub const NARROW_INTS: [&str; 6] = ["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// Macros that abort instead of returning a typed error.
+pub const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+const LEN_NAMES: [&str; 3] = ["len", "count", "offset"];
+const LEN_SUFFIXES: [&str; 4] = ["_len", "_count", "_offset", "_off"];
+
+/// Is this identifier length-shaped (`len`, `payload_len`, `n_tiles`,
+/// `frame_count`, ...)? Arithmetic on these outside `checked_*` /
+/// `saturating_*` / `wrapping_*` forms is rule `unchecked-len-arith`.
+pub fn is_len_shaped(name: &str) -> bool {
+    LEN_NAMES.contains(&name)
+        || LEN_SUFFIXES.iter().any(|s| name.ends_with(s))
+        || name.starts_with("n_")
+}
+
+/// SCREAMING_CASE identifiers are compile-time constants for the
+/// const-index heuristic.
+pub fn is_const_ident(name: &str) -> bool {
+    name.len() >= 2
+        && name.starts_with(|c: char| c.is_ascii_uppercase())
+        && name
+            .chars()
+            .all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// One wire/container constant cross-checked against ROADMAP.md.
+#[derive(Debug, Clone)]
+pub struct DriftCheck {
+    pub what: String,
+    pub ok: bool,
+    pub detail: String,
+}
+
+/// Cross-check the grammar blocks in ROADMAP.md against the constants
+/// actually compiled into `codec::container` and `net::wire`: magic
+/// strings, version bytes, and the `MAX_FRAME_LEN` multiplier. A failed
+/// extraction is itself a failure — the check must never silently pass
+/// because a constant moved.
+pub fn check_drift(
+    container_src: &str,
+    wire_src: &str,
+    roadmap: &str,
+) -> Vec<DriftCheck> {
+    let mut out = Vec::new();
+    let container = lexer::code_toks(&lexer::lex(container_src));
+    let wire = lexer::code_toks(&lexer::lex(wire_src));
+
+    let c_magic = const_bytes(&container, "MAGIC");
+    let c_v1 = const_num(&container, "VERSION");
+    let c_v2 = const_num(&container, "VERSION2");
+    let w_magic = const_bytes(&wire, "MAGIC");
+    let w_v = const_num(&wire, "VERSION");
+    let frame_cap = const_init_tokens(&wire, "MAX_FRAME_LEN");
+
+    match (&c_magic, c_v1, c_v2) {
+        (Some(magic), Some(v1), Some(v2)) => {
+            for (name, ver) in [("container v1", v1), ("container v2", v2)] {
+                let needle = format!("{magic} | ver={ver}");
+                out.push(DriftCheck {
+                    what: name.to_string(),
+                    ok: roadmap.contains(&needle),
+                    detail: format!("ROADMAP grammar block must contain `{needle}`"),
+                });
+            }
+        }
+        _ => out.push(DriftCheck {
+            what: "container constants".to_string(),
+            ok: false,
+            detail: "could not extract MAGIC/VERSION/VERSION2 from codec::container"
+                .to_string(),
+        }),
+    }
+
+    match (&w_magic, w_v) {
+        (Some(magic), Some(v)) => {
+            let needle = format!("{magic} | ver={v}");
+            out.push(DriftCheck {
+                what: "wire message".to_string(),
+                ok: roadmap.contains(&needle),
+                detail: format!("ROADMAP grammar block must contain `{needle}`"),
+            });
+        }
+        _ => out.push(DriftCheck {
+            what: "wire constants".to_string(),
+            ok: false,
+            detail: "could not extract MAGIC/VERSION from net::wire".to_string(),
+        }),
+    }
+
+    // MAX_FRAME_LEN must be `<mult> * MAX_DECODED_SAMPLES` in source and
+    // ROADMAP must state the same multiplier.
+    let mult = frame_cap.as_ref().and_then(|toks| match toks.as_slice() {
+        [a, b, c]
+            if b.as_str() == "*"
+                && (a.as_str() == "MAX_DECODED_SAMPLES"
+                    || c.as_str() == "MAX_DECODED_SAMPLES") =>
+        {
+            let num = if a.as_str() == "MAX_DECODED_SAMPLES" { c } else { a };
+            num.parse::<u64>().ok()
+        }
+        _ => None,
+    });
+    match mult {
+        Some(m) => {
+            let needle = format!("MAX_FRAME_LEN = {m} * codec::MAX_DECODED_SAMPLES");
+            out.push(DriftCheck {
+                what: "wire frame cap".to_string(),
+                ok: roadmap.contains(&needle),
+                detail: format!("ROADMAP must state `{needle}`"),
+            });
+        }
+        None => out.push(DriftCheck {
+            what: "wire frame cap".to_string(),
+            ok: false,
+            detail: format!(
+                "net::wire MAX_FRAME_LEN is not `N * MAX_DECODED_SAMPLES` (tokens: {:?})",
+                frame_cap
+            ),
+        }),
+    }
+    out
+}
+
+/// The token texts of `const <name> ... = <init> ;`, between `=` and `;`.
+fn const_init_tokens(code: &[Token], name: &str) -> Option<Vec<String>> {
+    let mut x = 0usize;
+    while x + 1 < code.len() {
+        if code[x].text == "const" && code[x + 1].text == name {
+            // scan the type annotation to `=`; a `;` inside brackets is
+            // an array length (`&[u8; 4]`), only a top-level one ends
+            // the item without an initializer
+            let mut depth = 0usize;
+            let mut y = x + 2;
+            while y < code.len() && code[y].text != "=" {
+                match code[y].text.as_str() {
+                    "[" | "(" => depth += 1,
+                    "]" | ")" => depth = depth.saturating_sub(1),
+                    ";" if depth == 0 => return None,
+                    _ => {}
+                }
+                y += 1;
+            }
+            let mut init = Vec::new();
+            let mut z = y + 1;
+            while z < code.len() && code[z].text != ";" {
+                init.push(code[z].text.clone());
+                z += 1;
+            }
+            return Some(init);
+        }
+        x += 1;
+    }
+    None
+}
+
+/// A `const <name>: ... = <num>;` integer initializer.
+fn const_num(code: &[Token], name: &str) -> Option<u64> {
+    let init = const_init_tokens(code, name)?;
+    match init.as_slice() {
+        [n] => n.parse::<u64>().ok(),
+        _ => None,
+    }
+}
+
+/// A `const <name>: &[u8; N] = b"....";` byte-string initializer,
+/// returned as the inner text.
+fn const_bytes(code: &[Token], name: &str) -> Option<String> {
+    let init = const_init_tokens(code, name)?;
+    init.iter().find_map(|t| {
+        t.strip_prefix("b\"")
+            .and_then(|s| s.strip_suffix('"'))
+            .map(str::to_string)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn contract_map_mirrors_lib_rs_scoping() {
+        assert!(is_contract("rust/src/codec/rc.rs"));
+        assert!(is_contract("rust/src/codec/scratch.rs"));
+        assert!(is_contract("rust/src/net/wire.rs"));
+        assert!(is_contract("rust/src/coordinator/batcher.rs"));
+        assert!(is_contract("rust/src/metrics/mod.rs"));
+        assert!(is_contract("rust/src/runtime/pool.rs"));
+        assert!(!is_contract("rust/src/runtime/engine.rs"));
+        assert!(!is_contract("rust/src/tio/mod.rs"));
+        assert!(!is_contract("rust/src/lint/rules.rs"));
+    }
+
+    #[test]
+    fn identifier_classifiers() {
+        for n in ["len", "payload_len", "frame_len", "count", "n_tiles", "offset", "side_off"] {
+            assert!(is_len_shaped(n), "{n}");
+        }
+        for n in ["width", "channels", "cap", "filled", "k", "off", "bins"] {
+            assert!(!is_len_shaped(n), "{n}");
+        }
+        assert!(is_const_ident("MAX_FRAME_LEN"));
+        assert!(is_const_ident("OK"));
+        assert!(!is_const_ident("K"));
+        assert!(!is_const_ident("Value"));
+        assert!(is_decode_fn("parse"));
+        assert!(is_decode_fn("read_one"));
+        assert!(is_decode_fn("next_batch"));
+        assert!(!is_decode_fn("encode_into"));
+        assert!(!is_decode_fn("pack_v2_with"));
+    }
+
+    #[test]
+    fn drift_check_catches_mismatched_roadmap() {
+        let container = r#"
+            pub const MAGIC: &[u8; 4] = b"BAFT";
+            pub const VERSION: u8 = 1;
+            pub const VERSION2: u8 = 2;
+        "#;
+        let wire = r#"
+            pub const MAGIC: &[u8; 4] = b"BAFN";
+            pub const VERSION: u8 = 1;
+            pub const MAX_FRAME_LEN: usize = 4 * MAX_DECODED_SAMPLES;
+        "#;
+        let good = "BAFT | ver=1 ... BAFT | ver=2 ... BAFN | ver=1 ...\n\
+                    MAX_FRAME_LEN = 4 * codec::MAX_DECODED_SAMPLES";
+        let checks = check_drift(container, wire, good);
+        assert_eq!(checks.len(), 4);
+        assert!(checks.iter().all(|c| c.ok), "{checks:?}");
+        // a stale ROADMAP (wrong version, wrong multiplier) fails
+        let stale = "BAFT | ver=1 ... BAFN | ver=1 ...\n\
+                     MAX_FRAME_LEN = 2 * codec::MAX_DECODED_SAMPLES";
+        let checks = check_drift(container, wire, stale);
+        assert_eq!(checks.iter().filter(|c| !c.ok).count(), 2, "{checks:?}");
+        // an unextractable constant is a failure, not a silent pass
+        let checks = check_drift("", wire, good);
+        assert!(checks.iter().any(|c| !c.ok && c.what == "container constants"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Fixture: `unchecked-len-arith` must fire on bare length math.
+
+pub fn parse_stub(payload_len: usize) -> usize { payload_len + 4 }
+
+// baf-lint: allow(unchecked-len-arith) -- fixture: bounded upstream
+pub fn parse_suppressed(frame_len: usize) -> usize { frame_len * 2 }
+
+pub fn parse_checked(payload_len: usize) -> Option<usize> {
+    payload_len.checked_add(4)
+}

@@ -1,0 +1,10 @@
+//! Fixture: `panic-macro` must fire once here and be suppressible.
+
+pub fn encode_stub(x: u32) -> u32 {
+    if x > 10 { panic!("fixture violation") } else { x }
+}
+
+// baf-lint: allow(panic-macro) -- fixture: sanctioned encoder abort
+pub fn encode_suppressed(x: u32) -> u32 {
+    if x == 0 { unreachable!("fixture") } else { x }
+}

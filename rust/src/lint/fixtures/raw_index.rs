@@ -1,0 +1,8 @@
+//! Fixture: `raw-index` must fire on a non-constant decode index.
+
+pub fn decode_stub(bytes: &[u8], i: usize) -> u8 { bytes[i] }
+
+// baf-lint: allow(raw-index) -- fixture: index bounded by the caller
+pub fn decode_suppressed(bytes: &[u8], i: usize) -> u8 { bytes[i] }
+
+pub fn decode_const(bytes: &[u8]) -> u8 { bytes[0] }

@@ -1,0 +1,6 @@
+//! Fixture: reasonless allows are `bad-suppression` findings.
+// baf-lint: allow(raw-index)
+pub fn decode_reasonless(bytes: &[u8], i: usize) -> u8 { bytes[i] }
+
+// baf-lint: allow(raw-index) -- fixture: bounded by the loop condition
+pub fn decode_reasoned(bytes: &[u8], i: usize) -> u8 { bytes[i] }

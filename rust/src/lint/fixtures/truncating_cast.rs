@@ -1,0 +1,8 @@
+//! Fixture: `truncating-cast` must fire on narrowing length casts.
+
+pub fn read_stub(frame_len: usize) -> u32 { frame_len as u32 }
+
+// baf-lint: allow(truncating-cast) -- fixture: validated < 65536 upstream
+pub fn read_suppressed(body_len: usize) -> u16 { body_len as u16 }
+
+pub fn read_widening(frame_len: usize) -> u64 { frame_len as u64 }

@@ -1,0 +1,11 @@
+//! Fixture: `unbounded-alloc` must fire without a MAX_* cap in scope.
+
+pub fn decode_stub(n_items: usize) -> Vec<u8> { Vec::with_capacity(n_items) }
+
+// baf-lint: allow(unbounded-alloc) -- fixture: size from trusted config
+pub fn decode_suppressed(n_items: usize, out: &mut Vec<u8>) { out.resize(n_items, 0); }
+
+pub fn decode_capped(n_items: usize) -> Vec<u16> {
+    let n = n_items.min(MAX_DECODED_SAMPLES);
+    vec![0u16; n]
+}

@@ -1,0 +1,8 @@
+//! Fixture: the unsafe-hygiene rule must fire tree-wide.
+
+pub unsafe fn wild_write(p: *mut u8) { *p = 1; }
+
+pub fn commented_write(p: *mut u8) {
+    // SAFETY: fixture — the caller guarantees p is valid and exclusive.
+    unsafe { *p = 2 }
+}

@@ -1,0 +1,370 @@
+//! A small Rust lexer — just enough token structure for the lint rules.
+//!
+//! This is deliberately not a parser: the rules in [`super::rules`] work
+//! on token patterns (an ident followed by `[`, an operator next to a
+//! length-shaped name, ...), so all we need is a faithful token stream
+//! with line numbers: identifiers, numbers, strings (incl. raw and byte
+//! strings), char literals vs lifetimes, nested block comments, and the
+//! multi-character punctuation Rust actually has. Everything is ASCII
+//! driven; non-ASCII bytes only occur inside comments and strings in
+//! this tree, where they are consumed opaquely.
+
+/// Token classes the rules distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Comment,
+    Punct,
+}
+
+/// One lexed token with its 1-based starting line (block comments and
+/// raw strings spanning lines record the line their text *starts* on,
+/// except multi-line raw strings which record their end line — the
+/// rules only ever use lines of code tokens and line comments, where
+/// start == end).
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// Multi-character punctuation, longest-match-first.
+const MULTI_PUNCT: [&str; 23] = [
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "==", "!=", "<=", ">=",
+    "&&", "||", "+=", "-=", "*=", "/=", "%=", "^=", "|=", "&=", "<<", ">>",
+    "..",
+];
+
+/// Reserved words that can precede `[` without being an indexable value
+/// (so `match x { ... }` style patterns don't look like indexing).
+pub const KEYWORDS: [&str; 37] = [
+    "as", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "false", "fn", "for", "if", "impl", "in", "let", "loop",
+    "match", "mod", "move", "mut", "pub", "ref", "return", "self", "Self",
+    "static", "struct", "super", "trait", "true", "type", "unsafe", "use",
+    "where", "while", "async",
+];
+
+pub fn is_keyword(name: &str) -> bool {
+    KEYWORDS.contains(&name) || name == "await"
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lex a source file into a token stream. Total: any byte sequence
+/// produces *some* stream (unknown bytes become single puncts); the
+/// lexer never panics and never loses line synchronization on the
+/// comment/string classes the rules care about.
+pub fn lex(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            toks.push(tok(TokKind::Comment, src, i, j, line));
+            i = j;
+            continue;
+        }
+        // nested block comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if b[j] == b'\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            toks.push(tok(TokKind::Comment, src, i, j, start));
+            i = j;
+            continue;
+        }
+        // raw / raw-byte string: b?r#*"
+        if let Some(j) = raw_string_end(b, i) {
+            let text = &src[i..j];
+            line += text.bytes().filter(|&x| x == b'\n').count();
+            toks.push(tok(TokKind::Str, src, i, j, line));
+            i = j;
+            continue;
+        }
+        // plain or byte string
+        if c == b'"' || (c == b'b' && i + 1 < n && b[i + 1] == b'"') {
+            let start = line;
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == b'"' {
+                    j += 1;
+                    break;
+                }
+                if b[j] == b'\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            let j = j.min(n);
+            toks.push(tok(TokKind::Str, src, i, j, start));
+            i = j;
+            continue;
+        }
+        // lifetime vs char literal
+        if c == b'\'' {
+            let next_is_name = i + 1 < n && is_ident_start(b[i + 1]);
+            let closes_as_char = i + 2 < n && b[i + 2] == b'\'';
+            if next_is_name && !closes_as_char {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                toks.push(tok(TokKind::Lifetime, src, i, j, line));
+                i = j;
+                continue;
+            }
+            let mut j = i + 1;
+            if j < n && b[j] == b'\\' {
+                j += 2;
+                // \u{...}
+                if j <= n && b[j - 1] == b'u' && j < n && b[j] == b'{' {
+                    while j < n && b[j] != b'}' {
+                        j += 1;
+                    }
+                    j += 1;
+                }
+            } else {
+                j += 1;
+            }
+            if j < n && b[j] == b'\'' {
+                j += 1;
+            }
+            let j = j.min(n);
+            toks.push(tok(TokKind::Char, src, i, j, line));
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(tok(TokKind::Ident, src, i, j, line));
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            if c == b'0'
+                && i + 1 < n
+                && (b[i + 1] == b'x' || b[i + 1] == b'b' || b[i + 1] == b'o')
+            {
+                j = i + 2;
+                while j < n && (b[j].is_ascii_hexdigit() || b[j] == b'_') {
+                    j += 1;
+                }
+            } else {
+                while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+                    j += 1;
+                }
+                // fraction — but never eat the dots of a range like 0..k
+                if j < n && b[j] == b'.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                    j += 1;
+                    while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+                        j += 1;
+                    }
+                }
+                // exponent
+                if j < n
+                    && (b[j] == b'e' || b[j] == b'E')
+                    && ((j + 1 < n && b[j + 1].is_ascii_digit())
+                        || (j + 2 < n
+                            && (b[j + 1] == b'+' || b[j + 1] == b'-')
+                            && b[j + 2].is_ascii_digit()))
+                {
+                    j += 2;
+                    while j < n && b[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                }
+            }
+            // type suffix (u32, f64, ...)
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(tok(TokKind::Num, src, i, j, line));
+            i = j;
+            continue;
+        }
+        if let Some(op) = MULTI_PUNCT.iter().find(|op| src[i..].starts_with(**op)) {
+            toks.push(Token { kind: TokKind::Punct, text: (*op).to_string(), line });
+            i += op.len();
+            continue;
+        }
+        // single punct (or an opaque non-ASCII byte run collapsed to one)
+        let mut j = i + 1;
+        while j < n && !src.is_char_boundary(j) {
+            j += 1;
+        }
+        toks.push(tok(TokKind::Punct, src, i, j, line));
+        i = j;
+        continue;
+    }
+    toks
+}
+
+fn tok(kind: TokKind, src: &str, i: usize, j: usize, line: usize) -> Token {
+    let j = j.min(src.len());
+    let i = i.min(j);
+    Token { kind, text: src.get(i..j).unwrap_or_default().to_string(), line }
+}
+
+/// If `b[i..]` starts a raw (byte) string `b?r#*"`, return the index one
+/// past its closing quote+hashes (or end of input if unterminated).
+fn raw_string_end(b: &[u8], i: usize) -> Option<usize> {
+    let n = b.len();
+    let mut j = i;
+    if j < n && b[j] == b'b' {
+        j += 1;
+    }
+    if j >= n || b[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let hash_start = j;
+    while j < n && b[j] == b'#' {
+        j += 1;
+    }
+    let hashes = j - hash_start;
+    if j >= n || b[j] != b'"' {
+        return None;
+    }
+    j += 1;
+    // scan for closing `"` followed by the same number of hashes
+    while j < n {
+        if b[j] == b'"' {
+            let mut h = 0usize;
+            while h < hashes && j + 1 + h < n && b[j + 1 + h] == b'#' {
+                h += 1;
+            }
+            if h == hashes {
+                return Some(j + 1 + hashes);
+            }
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+/// The comment-free token stream the structural rules run on.
+pub fn code_toks(toks: &[Token]) -> Vec<Token> {
+    toks.iter().filter(|t| t.kind != TokKind::Comment).cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_numbers_and_suffixes() {
+        let t = kinds("let x_len = 0x1F_u32 + 2.5e-3;");
+        assert_eq!(t[0], (TokKind::Ident, "let".into()));
+        assert_eq!(t[1], (TokKind::Ident, "x_len".into()));
+        assert_eq!(t[3], (TokKind::Num, "0x1F_u32".into()));
+        assert_eq!(t[5], (TokKind::Num, "2.5e-3".into()));
+    }
+
+    #[test]
+    fn range_dots_are_not_fractions() {
+        let t = kinds("0..k");
+        assert_eq!(t[0], (TokKind::Num, "0".into()));
+        assert_eq!(t[1], (TokKind::Punct, "..".into()));
+        assert_eq!(t[2], (TokKind::Ident, "k".into()));
+    }
+
+    #[test]
+    fn strings_comments_lifetimes_chars() {
+        let t = kinds("'a 'x' b\"hi\" r#\"raw\"# // line\n/* b /* nest */ */");
+        assert_eq!(t[0], (TokKind::Lifetime, "'a".into()));
+        assert_eq!(t[1], (TokKind::Char, "'x'".into()));
+        assert_eq!(t[2], (TokKind::Str, "b\"hi\"".into()));
+        assert_eq!(t[3], (TokKind::Str, "r#\"raw\"#".into()));
+        assert_eq!(t[4].0, TokKind::Comment);
+        assert_eq!(t[5], (TokKind::Comment, "/* b /* nest */ */".into()));
+    }
+
+    #[test]
+    fn lines_are_tracked_across_comments_and_strings() {
+        let toks = lex("a\n/* x\ny */\nb \"s\ns\" c");
+        let lines: Vec<(String, usize)> = toks
+            .iter()
+            .filter(|t| t.kind != TokKind::Comment)
+            .map(|t| (t.text.clone(), t.line))
+            .collect();
+        assert_eq!(lines[0], ("a".to_string(), 1));
+        assert_eq!(lines[1], ("b".to_string(), 4));
+        // the string starts on line 4; `c` lands on line 5
+        assert_eq!(lines[3], ("c".to_string(), 5));
+    }
+
+    #[test]
+    fn multi_punct_longest_match() {
+        let t = kinds("a <<= b << c <= d < e");
+        let ops: Vec<String> = t
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Punct)
+            .map(|(_, s)| s.clone())
+            .collect();
+        assert_eq!(ops, vec!["<<=", "<<", "<=", "<"]);
+    }
+
+    #[test]
+    fn hostile_fragments_never_panic() {
+        for src in ["\"unterminated", "'", "'\\u{12", "r###\"never closed", "0x", "\u{1F600} €"] {
+            let _ = lex(src);
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! `baf-lint`: a dependency-free static analysis gate for the decode
+//! path's no-panic and bounded-allocation contracts.
+//!
+//! The repo's robustness story (ROADMAP "Error handling & robustness")
+//! promises that hostile bytes entering through `codec`, `net`,
+//! `coordinator`, `metrics`, or `runtime::pool` produce typed errors,
+//! never panics or unbounded allocations. Clippy's `unwrap_used` /
+//! `expect_used` denies (see `lib.rs`) cover only two panic vectors;
+//! this module lexes the tree itself and enforces the rest at the
+//! source level: panic macros, raw indexing, unchecked length
+//! arithmetic, uncapped allocations, truncating casts in decode
+//! functions, and `// SAFETY:` hygiene on every `unsafe` block.
+//!
+//! A finding is suppressible only by an inline annotation that names
+//! the rule *and* states a reason:
+//!
+//! ```text
+//! // baf-lint: allow(<rule>) -- <why this site is safe>
+//! ```
+//!
+//! (Angle brackets are placeholders — a real annotation names the rule,
+//! e.g. `raw-index`, and the reason is mandatory.)
+//!
+//! The annotation covers its own line, the next code line, and — when
+//! that line starts a `fn` — the whole function. Reasonless allows are
+//! themselves findings (`bad-suppression`), and the full suppression
+//! inventory (with reasons and whether each fired) lands in the JSON
+//! report, so review can audit every waiver in one place.
+//!
+//! The `baf_lint` binary (`rust/src/bin/baf_lint.rs`) walks `rust/src`,
+//! prints a human report, writes `target/lint-report.json`, and exits
+//! nonzero on any unsuppressed finding or ROADMAP constant drift.
+//! `rust/src/lint/fixtures/` holds one known violation per rule; the
+//! golden tests below fail the build if any rule stops firing.
+
+pub mod contract;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+pub use report::Report;
+
+use report::{FileFinding, Suppression};
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Lint one file's source text into `report`. `rel` is the repo-relative
+/// path (forward slashes) used for contract lookup and reporting.
+pub fn lint_source(rel: &str, src: &str, report: &mut Report) {
+    let toks = lexer::lex(src);
+    let code = lexer::code_toks(&toks);
+    let spans = rules::fn_spans(&code);
+    let tregions = rules::test_regions(&code);
+    let raw = rules::analyze(&toks, &code, &spans, &tregions, contract::is_contract(rel));
+    let anns = rules::collect_annotations(&toks, &code, &spans);
+    let mut used = vec![false; anns.len()];
+    for f in raw {
+        match anns.iter().position(|a| a.covers(f.rule, f.line)) {
+            Some(i) => {
+                used[i] = true;
+                report.suppressed.push(FileFinding {
+                    file: rel.to_string(),
+                    rule: f.rule,
+                    line: f.line,
+                    msg: f.msg,
+                    reason: anns[i].reason.clone(),
+                });
+            }
+            None => report.findings.push(FileFinding {
+                file: rel.to_string(),
+                rule: f.rule,
+                line: f.line,
+                msg: f.msg,
+                reason: None,
+            }),
+        }
+    }
+    for (i, a) in anns.iter().enumerate() {
+        if a.reason.is_none() {
+            report.findings.push(FileFinding {
+                file: rel.to_string(),
+                rule: "bad-suppression",
+                line: a.line,
+                msg: format!(
+                    "allow({}) without `-- <reason>`: every suppression must say why",
+                    a.rules.join(", ")
+                ),
+                reason: None,
+            });
+        }
+        report.suppressions.push(Suppression {
+            file: rel.to_string(),
+            line: a.line,
+            rules: a.rules.clone(),
+            reason: a.reason.clone(),
+            used: used[i],
+        });
+    }
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries = fs::read_dir(dir)?.collect::<io::Result<Vec<_>>>()?;
+    entries.sort_by_key(std::fs::DirEntry::file_name);
+    for e in entries {
+        let name = e.file_name().to_string_lossy().into_owned();
+        if e.file_type()?.is_dir() {
+            // fixture trees hold intentional violations for the golden
+            // tests — they are exercised there, not in the real run
+            if !name.contains("fixtures") {
+                walk(&e.path(), out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(e.path());
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole tree under `<root>/rust/src` and cross-check the wire
+/// and container constants against `<root>/ROADMAP.md`.
+pub fn run(root: &Path) -> io::Result<Report> {
+    let mut report = Report::default();
+    let mut files = Vec::new();
+    walk(&root.join("rust").join("src"), &mut files)?;
+    report.files_scanned = files.len();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path)?;
+        lint_source(&rel, &src, &mut report);
+    }
+    let container = fs::read_to_string(root.join("rust/src/codec/container.rs"))?;
+    let wire = fs::read_to_string(root.join("rust/src/net/wire.rs"))?;
+    let roadmap = fs::read_to_string(root.join("ROADMAP.md"))?;
+    report.drift = contract::check_drift(&container, &wire, &roadmap);
+    report
+        .findings
+        .sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+    report
+        .suppressed
+        .sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    /// Lint a fixture under a synthetic contract-module path and return
+    /// the report.
+    fn lint_fixture(src: &str) -> Report {
+        let mut report = Report::default();
+        report.files_scanned = 1;
+        lint_source("rust/src/codec/fixture.rs", src, &mut report);
+        report
+    }
+
+    fn live(report: &Report) -> Vec<(&'static str, usize)> {
+        report.findings.iter().map(|f| (f.rule, f.line)).collect()
+    }
+
+    fn suppressed(report: &Report) -> Vec<&'static str> {
+        report.suppressed.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn fixture_panic_macro() {
+        let r = lint_fixture(include_str!("fixtures/panic_macro.rs"));
+        assert_eq!(live(&r), vec![("panic-macro", 4)]);
+        assert_eq!(suppressed(&r), vec!["panic-macro"]);
+        assert!(r.suppressions.iter().all(|s| s.used && s.reason.is_some()));
+    }
+
+    #[test]
+    fn fixture_raw_index() {
+        let r = lint_fixture(include_str!("fixtures/raw_index.rs"));
+        assert_eq!(live(&r), vec![("raw-index", 3)]);
+        assert_eq!(suppressed(&r), vec!["raw-index"]);
+    }
+
+    #[test]
+    fn fixture_len_arith() {
+        let r = lint_fixture(include_str!("fixtures/len_arith.rs"));
+        assert_eq!(live(&r), vec![("unchecked-len-arith", 3)]);
+        assert_eq!(suppressed(&r), vec!["unchecked-len-arith"]);
+    }
+
+    #[test]
+    fn fixture_unbounded_alloc() {
+        let r = lint_fixture(include_str!("fixtures/unbounded_alloc.rs"));
+        assert_eq!(live(&r), vec![("unbounded-alloc", 3)]);
+        assert_eq!(suppressed(&r), vec!["unbounded-alloc"]);
+    }
+
+    #[test]
+    fn fixture_truncating_cast() {
+        let r = lint_fixture(include_str!("fixtures/truncating_cast.rs"));
+        assert_eq!(live(&r), vec![("truncating-cast", 3)]);
+        assert_eq!(suppressed(&r), vec!["truncating-cast"]);
+    }
+
+    #[test]
+    fn fixture_unsafe_hygiene() {
+        // the unsafe rule is tree-wide: lint under a non-contract path
+        let mut r = Report::default();
+        lint_source(
+            "rust/src/util/fixture.rs",
+            include_str!("fixtures/unsafe_hygiene.rs"),
+            &mut r,
+        );
+        assert_eq!(live(&r), vec![("unsafe-without-safety-comment", 3)]);
+        assert!(r.suppressed.is_empty());
+    }
+
+    #[test]
+    fn fixture_suppression_inventory() {
+        let r = lint_fixture(include_str!("fixtures/suppression.rs"));
+        // the reasonless allow still silences its raw-index but is itself
+        // a finding
+        assert_eq!(live(&r), vec![("bad-suppression", 2)]);
+        assert_eq!(suppressed(&r), vec!["raw-index", "raw-index"]);
+        assert_eq!(r.suppressions.len(), 2);
+        assert!(r.suppressions.iter().all(|s| s.used));
+        assert_eq!(
+            r.suppressions.iter().filter(|s| s.reason.is_some()).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn every_rule_fires_across_the_fixture_set() {
+        // the build-breaking backstop: if a rule stops firing on its
+        // fixture, this test names it
+        let mut r = Report::default();
+        for src in [
+            include_str!("fixtures/panic_macro.rs"),
+            include_str!("fixtures/raw_index.rs"),
+            include_str!("fixtures/len_arith.rs"),
+            include_str!("fixtures/unbounded_alloc.rs"),
+            include_str!("fixtures/truncating_cast.rs"),
+            include_str!("fixtures/unsafe_hygiene.rs"),
+            include_str!("fixtures/suppression.rs"),
+        ] {
+            lint_source("rust/src/codec/fixture.rs", src, &mut r);
+        }
+        let counts = r.rule_counts();
+        for rule in report::RULE_NAMES {
+            if rule == "roadmap-drift" {
+                continue; // exercised by contract::tests::drift_check_*
+            }
+            let (found, suppressed) = counts[rule];
+            assert!(found + suppressed > 0, "rule `{rule}` no longer fires");
+        }
+    }
+
+    #[test]
+    fn fixture_report_round_trips_through_json() {
+        let r = lint_fixture(include_str!("fixtures/suppression.rs"));
+        let v = r.to_value();
+        let back = crate::json::parse(&v.pretty(1)).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn the_real_tree_is_clean() {
+        // run the full gate in-process over the repo; CARGO_MANIFEST_DIR
+        // is the repo root
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let report = run(root).expect("lint walk failed");
+        assert!(report.files_scanned > 40, "walk found too few files");
+        let msgs: Vec<String> = report
+            .findings
+            .iter()
+            .map(|f| format!("{}:{} {} {}", f.file, f.line, f.rule, f.msg))
+            .collect();
+        assert!(report.findings.is_empty(), "unsuppressed findings: {msgs:#?}");
+        assert!(report.drift.iter().all(|d| d.ok), "{:#?}", report.drift);
+        assert!(
+            report.suppressions.iter().all(|s| s.reason.is_some()),
+            "reasonless suppression in tree"
+        );
+    }
+}

@@ -1,0 +1,268 @@
+//! The lint run's result: live findings, the suppression inventory, and
+//! the ROADMAP drift checks, renderable as a human report or as the
+//! `target/lint-report.json` document CI archives.
+
+use super::contract::DriftCheck;
+use crate::json::Value;
+use std::collections::BTreeMap;
+
+/// Every rule name, in report order. Rule counts are emitted for all of
+/// them (zeros included) so a rule that silently stops firing is visible
+/// as a diff in the JSON report.
+pub const RULE_NAMES: [&str; 8] = [
+    "panic-macro",
+    "raw-index",
+    "unchecked-len-arith",
+    "unbounded-alloc",
+    "truncating-cast",
+    "unsafe-without-safety-comment",
+    "bad-suppression",
+    "roadmap-drift",
+];
+
+/// One finding, located in a file (live or suppressed).
+#[derive(Debug, Clone)]
+pub struct FileFinding {
+    pub file: String,
+    pub rule: &'static str,
+    pub line: usize,
+    pub msg: String,
+    /// The written reason, for suppressed findings.
+    pub reason: Option<String>,
+}
+
+/// One `baf-lint: allow(...)` annotation found in the tree.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    pub file: String,
+    pub line: usize,
+    pub rules: Vec<String>,
+    pub reason: Option<String>,
+    /// Did this annotation actually suppress at least one finding?
+    pub used: bool,
+}
+
+/// The full result of a lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files_scanned: usize,
+    /// Unsuppressed findings — any entry here fails the run.
+    pub findings: Vec<FileFinding>,
+    /// Findings silenced by an annotation, kept for the inventory.
+    pub suppressed: Vec<FileFinding>,
+    /// Every annotation in the tree, with its reason and whether it fired.
+    pub suppressions: Vec<Suppression>,
+    /// ROADMAP constant cross-checks (failures also appear in `findings`
+    /// as `roadmap-drift`).
+    pub drift: Vec<DriftCheck>,
+}
+
+impl Report {
+    /// A clean run: nothing unsuppressed, every drift check green.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty() && self.drift.iter().all(|d| d.ok)
+    }
+
+    /// Per-rule (found, suppressed) counts over all known rules.
+    pub fn rule_counts(&self) -> BTreeMap<&'static str, (usize, usize)> {
+        let mut counts: BTreeMap<&'static str, (usize, usize)> =
+            RULE_NAMES.iter().map(|&r| (r, (0, 0))).collect();
+        for f in &self.findings {
+            if let Some(c) = counts.get_mut(f.rule) {
+                c.0 += 1;
+            }
+        }
+        for f in &self.suppressed {
+            if let Some(c) = counts.get_mut(f.rule) {
+                c.1 += 1;
+            }
+        }
+        // drift failures live in `drift`, not `findings`; count them here
+        // so the rule table reflects them
+        let failed_drift = self.drift.iter().filter(|d| !d.ok).count();
+        if let Some(c) = counts.get_mut("roadmap-drift") {
+            c.0 += failed_drift;
+        }
+        counts
+    }
+
+    /// The JSON document written to `target/lint-report.json`.
+    pub fn to_value(&self) -> Value {
+        let mut rules = Value::obj();
+        for (rule, (found, suppressed)) in self.rule_counts() {
+            let mut entry = Value::obj();
+            entry.set("found", found).set("suppressed", suppressed);
+            rules.set(rule, entry);
+        }
+        let findings: Vec<Value> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut v = Value::obj();
+                v.set("file", f.file.as_str())
+                    .set("line", f.line)
+                    .set("rule", f.rule)
+                    .set("message", f.msg.as_str());
+                v
+            })
+            .collect();
+        let suppressions: Vec<Value> = self
+            .suppressions
+            .iter()
+            .map(|s| {
+                let mut v = Value::obj();
+                v.set("file", s.file.as_str())
+                    .set("line", s.line)
+                    .set(
+                        "rules",
+                        s.rules.iter().map(|r| Value::from(r.as_str())).collect::<Vec<_>>(),
+                    )
+                    .set(
+                        "reason",
+                        s.reason.as_deref().map_or(Value::Null, Value::from),
+                    )
+                    .set("used", s.used);
+                v
+            })
+            .collect();
+        let drift: Vec<Value> = self
+            .drift
+            .iter()
+            .map(|d| {
+                let mut v = Value::obj();
+                v.set("what", d.what.as_str())
+                    .set("ok", d.ok)
+                    .set("detail", d.detail.as_str());
+                v
+            })
+            .collect();
+        let mut doc = Value::obj();
+        doc.set("version", 1usize)
+            .set("files_scanned", self.files_scanned)
+            .set("clean", self.clean())
+            .set("rules", rules)
+            .set("findings", findings)
+            .set("suppressions", suppressions)
+            .set("drift", drift);
+        doc
+    }
+
+    /// The human-readable report printed by `baf_lint`.
+    pub fn human(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "baf-lint: scanned {} files under rust/src\n",
+            self.files_scanned
+        ));
+        for f in &self.findings {
+            out.push_str(&format!(
+                "error[{}]: {}:{}: {}\n",
+                f.rule, f.file, f.line, f.msg
+            ));
+        }
+        for d in self.drift.iter().filter(|d| !d.ok) {
+            out.push_str(&format!("error[roadmap-drift]: {}: {}\n", d.what, d.detail));
+        }
+        out.push_str("\nrule                            found  suppressed\n");
+        for (rule, (found, suppressed)) in self.rule_counts() {
+            out.push_str(&format!("{rule:<32}{found:>5}  {suppressed:>10}\n"));
+        }
+        let unused = self.suppressions.iter().filter(|s| !s.used).count();
+        out.push_str(&format!(
+            "\n{} suppression(s) on record ({} unused), {} drift check(s)\n",
+            self.suppressions.len(),
+            unused,
+            self.drift.len()
+        ));
+        out.push_str(if self.clean() {
+            "result: CLEAN\n"
+        } else {
+            "result: FAIL\n"
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::json;
+
+    fn sample() -> Report {
+        Report {
+            files_scanned: 3,
+            findings: vec![FileFinding {
+                file: "rust/src/codec/x.rs".into(),
+                rule: "raw-index",
+                line: 10,
+                msg: "non-constant index in decode path".into(),
+                reason: None,
+            }],
+            suppressed: vec![FileFinding {
+                file: "rust/src/codec/y.rs".into(),
+                rule: "panic-macro",
+                line: 4,
+                msg: "`panic!` in no-panic module".into(),
+                reason: Some("encoder contract".into()),
+            }],
+            suppressions: vec![Suppression {
+                file: "rust/src/codec/y.rs".into(),
+                line: 3,
+                rules: vec!["panic-macro".into()],
+                reason: Some("encoder contract".into()),
+                used: true,
+            }],
+            drift: vec![DriftCheck {
+                what: "wire message".into(),
+                ok: true,
+                detail: "ROADMAP grammar block must contain `BAFN | ver=1`".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn counts_cover_every_rule_with_zeros() {
+        let counts = sample().rule_counts();
+        assert_eq!(counts.len(), RULE_NAMES.len());
+        assert_eq!(counts["raw-index"], (1, 0));
+        assert_eq!(counts["panic-macro"], (0, 1));
+        assert_eq!(counts["truncating-cast"], (0, 0));
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let v = sample().to_value();
+        let text = v.pretty(1);
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back, v);
+        assert_eq!(back.get("clean").and_then(Value::as_bool), Some(false));
+        assert_eq!(
+            back.get("rules")
+                .and_then(|r| r.get("raw-index"))
+                .and_then(|r| r.get("found"))
+                .and_then(Value::as_f64),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn clean_requires_no_findings_and_green_drift() {
+        let mut r = sample();
+        assert!(!r.clean());
+        r.findings.clear();
+        assert!(r.clean());
+        r.drift[0].ok = false;
+        assert!(!r.clean());
+        assert_eq!(r.rule_counts()["roadmap-drift"], (1, 0));
+    }
+
+    #[test]
+    fn human_report_mentions_verdict() {
+        let r = sample();
+        let text = r.human();
+        assert!(text.contains("error[raw-index]"));
+        assert!(text.contains("result: FAIL"));
+    }
+}

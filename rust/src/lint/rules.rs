@@ -1,0 +1,690 @@
+//! The rule engine: function spans, test-region detection, the five
+//! structural rules, and suppression-annotation handling.
+//!
+//! Rules (names are what `// baf-lint: allow(<rule>) -- <reason>` takes):
+//!
+//! * `panic-macro` — `panic!` / `unreachable!` / `todo!` /
+//!   `unimplemented!` anywhere in a contract module (encoders included:
+//!   their assert-style panics are sanctioned by ROADMAP but must carry
+//!   a written suppression reason).
+//! * `raw-index` — `x[...]` with a non-constant index inside a decode
+//!   function (constant = numeric literals, SCREAMING consts, `..`
+//!   ranges and arithmetic thereof).
+//! * `unchecked-len-arith` — `+ - * <<` (or their assign forms)
+//!   directly on a length-shaped identifier (`len`, `*_len`, `count`,
+//!   `offset`, `n_*`, `.len()`) inside a decode function; use
+//!   `checked_*` / `saturating_*` / `wrapping_*` method forms instead
+//!   (method calls don't trip the rule — there is no bare operator).
+//! * `unbounded-alloc` — `Vec::with_capacity(n)` / `vec![_; n]` /
+//!   `.resize(n, _)` with a non-literal size in a decode function that
+//!   never mentions a cap (`MAX_DECODED_SAMPLES`, `MAX_FRAME_LEN`,
+//!   `MAX_HEADER_LEN`, or the checked helpers that enforce them).
+//! * `truncating-cast` — `<length-shaped> as u8/u16/u32/i8/i16/i32`
+//!   inside a decode function.
+//! * `unsafe-without-safety-comment` — an `unsafe` token (block, fn, or
+//!   impl) outside test code with no comment containing `SAFETY:`
+//!   within the five lines above it. Tree-wide, not just contract
+//!   modules.
+//! * `bad-suppression` — an `allow(...)` annotation with no
+//!   `-- <reason>` text; every suppression must say *why*.
+
+use super::contract;
+use super::lexer::{is_keyword, TokKind, Token};
+
+/// One rule hit at a source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A `fn` item's location: token indices of its body braces plus the
+/// line span used for function-level suppressions.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    /// Line holding the `fn` keyword.
+    pub fn_line: usize,
+    /// Code-token index of the opening `{`.
+    pub body_start: usize,
+    /// Code-token index of the matching `}`.
+    pub body_end: usize,
+    /// Line of the matching `}`.
+    pub end_line: usize,
+}
+
+fn match_delim(code: &[Token], start: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0usize;
+    let mut x = start;
+    while x < code.len() {
+        let t = &code[x];
+        if t.kind == TokKind::Punct && t.text == open {
+            depth += 1;
+        } else if t.kind == TokKind::Punct && t.text == close {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                return x;
+            }
+        }
+        x += 1;
+    }
+    code.len().saturating_sub(1)
+}
+
+fn match_brace(code: &[Token], start: usize) -> usize {
+    match_delim(code, start, "{", "}")
+}
+
+fn match_bracket(code: &[Token], start: usize) -> usize {
+    match_delim(code, start, "[", "]")
+}
+
+fn match_paren(code: &[Token], start: usize) -> usize {
+    match_delim(code, start, "(", ")")
+}
+
+/// Every named `fn` with a body, in source order.
+pub fn fn_spans(code: &[Token]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    for x in 0..code.len() {
+        if code[x].kind != TokKind::Ident || code[x].text != "fn" {
+            continue;
+        }
+        let name = match code.get(x + 1) {
+            Some(t) if t.kind == TokKind::Ident => t.text.clone(),
+            _ => continue,
+        };
+        // find the body `{` (or `;` for trait/extern declarations)
+        let mut y = x + 1;
+        let mut body = None;
+        while y < code.len() {
+            if code[y].kind == TokKind::Punct {
+                if code[y].text == "{" {
+                    body = Some(y);
+                    break;
+                }
+                if code[y].text == ";" {
+                    break;
+                }
+            }
+            y += 1;
+        }
+        let Some(body) = body else { continue };
+        let end = match_brace(code, body);
+        spans.push(FnSpan {
+            name,
+            fn_line: code[x].line,
+            body_start: body,
+            body_end: end,
+            end_line: code.get(end).map_or(code[x].line, |t| t.line),
+        });
+    }
+    spans
+}
+
+/// The innermost function whose body contains code-token index `ci`
+/// (nested fns shadow their parents).
+pub fn innermost_fn<'a>(spans: &'a [FnSpan], ci: usize) -> Option<&'a FnSpan> {
+    spans
+        .iter()
+        .filter(|s| s.body_start <= ci && ci <= s.body_end)
+        .min_by_key(|s| s.body_end - s.body_start)
+}
+
+/// Code-token index ranges covered by `#[cfg(test)]` / `#[test]` items —
+/// test code is exempt from every rule (it builds hostile inputs and
+/// unwraps on purpose).
+pub fn test_regions(code: &[Token]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut x = 0usize;
+    while x < code.len() {
+        let starts_attr = code[x].kind == TokKind::Punct
+            && code[x].text == "#"
+            && code.get(x + 1).is_some_and(|t| t.text == "[");
+        if !starts_attr {
+            x += 1;
+            continue;
+        }
+        // collect this attribute's tokens to the matching ]
+        let mut depth = 0usize;
+        let mut y = x + 1;
+        let mut attr: Vec<&str> = Vec::new();
+        while y < code.len() {
+            let t = &code[y];
+            if t.kind == TokKind::Punct && t.text == "[" {
+                depth += 1;
+            } else if t.kind == TokKind::Punct && t.text == "]" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            attr.push(&t.text);
+            y += 1;
+        }
+        let inner: Vec<&str> = attr.iter().skip(1).copied().collect();
+        let is_test = (inner.contains(&"cfg") && inner.contains(&"test"))
+            || inner == ["test"];
+        if !is_test {
+            x += 1;
+            continue;
+        }
+        // skip any further attributes, then the item to its matching
+        // brace (or `;` for braceless items)
+        let mut z = y + 1;
+        while z + 1 < code.len()
+            && code[z].text == "#"
+            && code[z + 1].text == "["
+        {
+            let mut d2 = 0usize;
+            let mut w = z + 1;
+            while w < code.len() {
+                if code[w].text == "[" {
+                    d2 += 1;
+                } else if code[w].text == "]" {
+                    d2 -= 1;
+                    if d2 == 0 {
+                        break;
+                    }
+                }
+                w += 1;
+            }
+            z = w + 1;
+        }
+        let mut w = z;
+        while w < code.len() {
+            if code[w].kind == TokKind::Punct && code[w].text == "{" {
+                w = match_brace(code, w);
+                break;
+            }
+            if code[w].kind == TokKind::Punct && code[w].text == ";" {
+                break;
+            }
+            w += 1;
+        }
+        regions.push((x, w));
+        x = w + 1;
+    }
+    regions
+}
+
+pub fn in_test(regions: &[(usize, usize)], ci: usize) -> bool {
+    regions.iter().any(|&(a, b)| a <= ci && ci <= b)
+}
+
+/// Are the tokens strictly between indices `a` and `b` a compile-time
+/// constant expression (numbers, SCREAMING consts, ranges, arithmetic)?
+fn index_is_const(code: &[Token], a: usize, b: usize) -> bool {
+    for t in code.iter().take(b).skip(a + 1) {
+        match t.kind {
+            TokKind::Num => {}
+            TokKind::Punct
+                if matches!(
+                    t.text.as_str(),
+                    ".." | "..=" | "+" | "-" | "*" | "/" | "(" | ")"
+                ) => {}
+            TokKind::Ident if contract::is_const_ident(&t.text) => {}
+            _ => return false,
+        }
+    }
+    true
+}
+
+fn fn_has_cap(code: &[Token], f: &FnSpan) -> bool {
+    code[f.body_start..=f.body_end.min(code.len().saturating_sub(1))]
+        .iter()
+        .any(|t| t.kind == TokKind::Ident && contract::CAP_IDENTS.contains(&t.text.as_str()))
+}
+
+/// Run every rule over one file's token stream. `contract` enables the
+/// module-contract rules; the `unsafe` hygiene rule always runs.
+pub fn analyze(
+    toks: &[Token],
+    code: &[Token],
+    spans: &[FnSpan],
+    tregions: &[(usize, usize)],
+    contract_file: bool,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    // unsafe hygiene: a SAFETY: comment must appear within 5 lines above
+    // (multi-line comments count for every line they span)
+    let safety_spans: Vec<(usize, usize)> = toks
+        .iter()
+        .filter(|t| t.kind == TokKind::Comment && t.text.contains("SAFETY:"))
+        .map(|t| {
+            let extra = t.text.bytes().filter(|&b| b == b'\n').count();
+            (t.line, t.line + extra)
+        })
+        .collect();
+    for (x, t) in code.iter().enumerate() {
+        if t.kind == TokKind::Ident && t.text == "unsafe" && !in_test(tregions, x) {
+            let lo = t.line.saturating_sub(5).max(1);
+            let covered = safety_spans.iter().any(|&(a, b)| a <= t.line && b >= lo);
+            if !covered {
+                findings.push(Finding {
+                    rule: "unsafe-without-safety-comment",
+                    line: t.line,
+                    msg: "`unsafe` with no // SAFETY: comment within 5 lines above"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    if !contract_file {
+        return findings;
+    }
+
+    for (x, t) in code.iter().enumerate() {
+        if in_test(tregions, x) {
+            continue;
+        }
+        let f = innermost_fn(spans, x);
+        let in_decode = f.is_some_and(|s| contract::is_decode_fn(&s.name));
+
+        // panic-macro: module-wide in contract files
+        if t.kind == TokKind::Ident
+            && contract::PANIC_MACROS.contains(&t.text.as_str())
+            && code.get(x + 1).is_some_and(|n| n.text == "!")
+        {
+            findings.push(Finding {
+                rule: "panic-macro",
+                line: t.line,
+                msg: format!("`{}!` in no-panic module", t.text),
+            });
+        }
+
+        if !in_decode {
+            continue;
+        }
+
+        // raw-index
+        if t.kind == TokKind::Punct && t.text == "[" && x > 0 {
+            let p = &code[x - 1];
+            let is_recv = (p.kind == TokKind::Ident && !is_keyword(&p.text))
+                || (p.kind == TokKind::Punct && (p.text == "]" || p.text == ")"));
+            if is_recv {
+                let b = match_bracket(code, x);
+                if !index_is_const(code, x, b) {
+                    findings.push(Finding {
+                        rule: "raw-index",
+                        line: t.line,
+                        msg: "non-constant index in decode path".to_string(),
+                    });
+                }
+            }
+        }
+
+        // unchecked-len-arith
+        if t.kind == TokKind::Punct
+            && matches!(
+                t.text.as_str(),
+                "+" | "-" | "*" | "<<" | "+=" | "-=" | "*=" | "<<="
+            )
+        {
+            let mut hit: Option<String> = None;
+            if x > 0
+                && code[x - 1].kind == TokKind::Ident
+                && contract::is_len_shaped(&code[x - 1].text)
+            {
+                hit = Some(code[x - 1].text.clone());
+            } else if x >= 3
+                && code[x - 1].text == ")"
+                && code[x - 2].text == "("
+                && code[x - 3].kind == TokKind::Ident
+                && contract::is_len_shaped(&code[x - 3].text)
+            {
+                hit = Some(format!("{}()", code[x - 3].text));
+            } else if code.get(x + 1).is_some_and(|n| {
+                n.kind == TokKind::Ident && contract::is_len_shaped(&n.text)
+            }) {
+                hit = Some(code[x + 1].text.clone());
+            }
+            if let Some(name) = hit {
+                findings.push(Finding {
+                    rule: "unchecked-len-arith",
+                    line: t.line,
+                    msg: format!(
+                        "`{}` on length-shaped `{name}` outside checked_*",
+                        t.text
+                    ),
+                });
+            }
+        }
+
+        // unbounded-alloc: with_capacity / vec![_; n] / resize
+        if t.kind == TokKind::Ident
+            && t.text == "with_capacity"
+            && code.get(x + 1).is_some_and(|n| n.text == "(")
+        {
+            let b = match_paren(code, x + 1);
+            if !index_is_const(code, x + 1, b) {
+                if let Some(f) = f {
+                    if !fn_has_cap(code, f) {
+                        findings.push(Finding {
+                            rule: "unbounded-alloc",
+                            line: t.line,
+                            msg: "with_capacity not dominated by a MAX_* cap".to_string(),
+                        });
+                    }
+                }
+            }
+        }
+        if t.kind == TokKind::Ident
+            && t.text == "vec"
+            && code.get(x + 1).is_some_and(|n| n.text == "!")
+            && code.get(x + 2).is_some_and(|n| n.text == "[")
+        {
+            let b = match_bracket(code, x + 2);
+            let semi = (x + 3..b).find(|&y| {
+                code[y].kind == TokKind::Punct && code[y].text == ";"
+            });
+            if let (Some(semi), Some(f)) = (semi, f) {
+                if !index_is_const(code, semi, b) && !fn_has_cap(code, f) {
+                    findings.push(Finding {
+                        rule: "unbounded-alloc",
+                        line: t.line,
+                        msg: "vec![_; n] not dominated by a MAX_* cap".to_string(),
+                    });
+                }
+            }
+        }
+        if t.kind == TokKind::Ident
+            && t.text == "resize"
+            && code.get(x + 1).is_some_and(|n| n.text == "(")
+        {
+            let b = match_paren(code, x + 1);
+            let comma = (x + 2..b)
+                .find(|&y| code[y].kind == TokKind::Punct && code[y].text == ",")
+                .unwrap_or(b);
+            if !index_is_const(code, x + 1, comma) {
+                if let Some(f) = f {
+                    if !fn_has_cap(code, f) {
+                        findings.push(Finding {
+                            rule: "unbounded-alloc",
+                            line: t.line,
+                            msg: "resize not dominated by a MAX_* cap".to_string(),
+                        });
+                    }
+                }
+            }
+        }
+
+        // truncating-cast
+        if t.kind == TokKind::Ident
+            && t.text == "as"
+            && code.get(x + 1).is_some_and(|n| {
+                n.kind == TokKind::Ident
+                    && contract::NARROW_INTS.contains(&n.text.as_str())
+            })
+        {
+            let target = code[x + 1].text.clone();
+            let mut y = x;
+            let mut hops = 0usize;
+            while y > 0 && hops < 5 {
+                y -= 1;
+                let c = &code[y];
+                if c.kind == TokKind::Ident {
+                    if contract::is_len_shaped(&c.text) {
+                        findings.push(Finding {
+                            rule: "truncating-cast",
+                            line: t.line,
+                            msg: format!(
+                                "`{} as {target}` may truncate a length",
+                                c.text
+                            ),
+                        });
+                    }
+                    break;
+                }
+                if c.kind == TokKind::Punct
+                    && matches!(c.text.as_str(), "(" | ")" | ".")
+                {
+                    hops += 1;
+                    continue;
+                }
+                break;
+            }
+        }
+    }
+    findings
+}
+
+/// A `// baf-lint: allow(<rules>) -- <reason>` annotation and the lines
+/// it covers: its own line; for an own-line comment, the next code line;
+/// and if that line starts a `fn`, the whole function span.
+#[derive(Debug, Clone)]
+pub struct Annotation {
+    pub rules: Vec<String>,
+    pub reason: Option<String>,
+    pub line: usize,
+    next_code_line: Option<usize>,
+    fn_range: Option<(usize, usize)>,
+}
+
+impl Annotation {
+    pub fn covers(&self, rule: &str, line: usize) -> bool {
+        if !self.rules.iter().any(|r| r == rule) {
+            return false;
+        }
+        line == self.line
+            || self.next_code_line == Some(line)
+            || self.fn_range.is_some_and(|(a, b)| a <= line && line <= b)
+    }
+}
+
+/// Parse `baf-lint: allow(rule-a, rule-b) -- reason` out of a comment.
+fn parse_allow(comment: &str) -> Option<(Vec<String>, Option<String>)> {
+    let at = comment.find("baf-lint:")?;
+    let rest = comment[at + "baf-lint:".len()..].trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let inside = &rest[..close];
+    let valid = !inside.is_empty()
+        && inside.chars().all(|c| {
+            c.is_ascii_lowercase() || c.is_ascii_digit() || c == ',' || c == '-' || c == ' '
+        });
+    if !valid {
+        return None;
+    }
+    let rules: Vec<String> = inside
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        return None;
+    }
+    let after = rest[close + 1..].trim_start();
+    let reason = after
+        .strip_prefix("--")
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty());
+    Some((rules, reason))
+}
+
+/// Every annotation in a file, with coverage resolved against the code
+/// lines and function spans.
+pub fn collect_annotations(
+    toks: &[Token],
+    code: &[Token],
+    spans: &[FnSpan],
+) -> Vec<Annotation> {
+    let mut code_lines: Vec<usize> = code.iter().map(|t| t.line).collect();
+    code_lines.sort_unstable();
+    code_lines.dedup();
+    let mut anns = Vec::new();
+    for t in toks {
+        if t.kind != TokKind::Comment {
+            continue;
+        }
+        let Some((rules, reason)) = parse_allow(&t.text) else { continue };
+        let own_line = code_lines.binary_search(&t.line).is_err();
+        let next_code_line = if own_line {
+            code_lines
+                .iter()
+                .copied()
+                .find(|&l| l > t.line)
+        } else {
+            None
+        };
+        let fn_range = next_code_line.and_then(|nxt| {
+            spans
+                .iter()
+                .find(|s| s.fn_line == nxt)
+                .map(|s| (s.fn_line, s.end_line))
+        });
+        anns.push(Annotation { rules, reason, line: t.line, next_code_line, fn_range });
+    }
+    anns
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+    use crate::lint::lexer::{code_toks, lex};
+
+    fn run(src: &str) -> Vec<Finding> {
+        let toks = lex(src);
+        let code = code_toks(&toks);
+        let spans = fn_spans(&code);
+        let tregions = test_regions(&code);
+        analyze(&toks, &code, &spans, &tregions, true)
+    }
+
+    fn rules_of(src: &str) -> Vec<&'static str> {
+        run(src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn fn_spans_and_nesting() {
+        let code = code_toks(&lex(
+            "fn outer() { let x = 1; fn inner_decode() { x[i]; } }",
+        ));
+        let spans = fn_spans(&code);
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "outer");
+        assert_eq!(spans[1].name, "inner_decode");
+        // a token inside inner resolves to inner
+        let xi = code
+            .iter()
+            .position(|t| t.text == "[")
+            .unwrap();
+        assert_eq!(innermost_fn(&spans, xi).unwrap().name, "inner_decode");
+    }
+
+    #[test]
+    fn decode_scoping_gates_the_structural_rules() {
+        // same body: flagged in a decode fn, ignored in an encode fn
+        assert_eq!(rules_of("fn decode(i: usize) { x[i]; }"), vec!["raw-index"]);
+        assert!(rules_of("fn encode(i: usize) { x[i]; }").is_empty());
+        // constant indices pass
+        assert!(rules_of("fn decode() { x[3]; y[HEADER_LEN + 4]; z[0..4]; }").is_empty());
+    }
+
+    #[test]
+    fn len_arithmetic_and_casts() {
+        assert_eq!(
+            rules_of("fn parse(payload_len: usize) { let x = payload_len + 1; }"),
+            vec!["unchecked-len-arith"]
+        );
+        assert_eq!(
+            rules_of("fn parse(v: &[u8]) { let x = v.len() * 2; }"),
+            vec!["unchecked-len-arith"]
+        );
+        assert!(rules_of(
+            "fn parse(payload_len: usize) { let x = payload_len.checked_add(1); }"
+        )
+        .is_empty());
+        assert_eq!(
+            rules_of("fn parse(frame_len: usize) { let x = frame_len as u32; }"),
+            vec!["truncating-cast"]
+        );
+        assert!(rules_of("fn parse(frame_len: usize) { let x = frame_len as u64; }")
+            .is_empty());
+    }
+
+    #[test]
+    fn alloc_rule_respects_caps() {
+        assert_eq!(
+            rules_of("fn parse(n2: usize) { let v = Vec::with_capacity(n2); }"),
+            vec!["unbounded-alloc"]
+        );
+        assert!(rules_of(
+            "fn parse(n2: usize) { if n2 > MAX_FRAME_LEN { return; } \
+             let v = Vec::with_capacity(n2); }"
+        )
+        .is_empty());
+        assert_eq!(rules_of("fn parse(n2: usize) { let v = vec![0u8; n2]; }"),
+            vec!["unbounded-alloc"]);
+        assert!(rules_of("fn parse() { let v = vec![0u8; 16]; }").is_empty());
+        assert_eq!(
+            rules_of("fn parse(n2: usize, v: &mut Vec<u8>) { v.resize(n2, 0); }"),
+            vec!["unbounded-alloc"]
+        );
+    }
+
+    #[test]
+    fn panic_rule_is_module_wide_and_tests_are_exempt() {
+        assert_eq!(rules_of("fn encode() { panic!(\"boom\"); }"), vec!["panic-macro"]);
+        assert!(rules_of(
+            "#[cfg(test)] mod tests { fn any() { panic!(\"ok in tests\"); x[i]; } }"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn unsafe_rule_wants_safety_comments() {
+        let toks = lex("fn f() { unsafe { w(); } }");
+        let code = code_toks(&toks);
+        let f = analyze(&toks, &code, &fn_spans(&code), &[], false);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "unsafe-without-safety-comment");
+        let toks = lex("// SAFETY: w is fine\nfn f() { unsafe { w(); } }");
+        let code = code_toks(&toks);
+        assert!(analyze(&toks, &code, &fn_spans(&code), &[], false).is_empty());
+        // more than 5 lines away no longer counts
+        let toks = lex("// SAFETY: too far\n\n\n\n\n\n\nfn f() { unsafe { w(); } }");
+        let code = code_toks(&toks);
+        assert_eq!(analyze(&toks, &code, &fn_spans(&code), &[], false).len(), 1);
+    }
+
+    #[test]
+    fn annotations_cover_line_next_line_and_fn() {
+        let src = "\
+// baf-lint: allow(raw-index) -- bounded by construction
+fn decode(i: usize) {
+    x[i];
+}
+fn parse(i: usize) { y[i]; } // baf-lint: allow(raw-index) -- same line
+fn validate(i: usize) { z[i]; }
+";
+        let toks = lex(src);
+        let code = code_toks(&toks);
+        let spans = fn_spans(&code);
+        let anns = collect_annotations(&toks, &code, &spans);
+        assert_eq!(anns.len(), 2);
+        // fn-level: covers the whole decode body
+        assert!(anns[0].covers("raw-index", 3));
+        assert!(!anns[0].covers("raw-index", 6));
+        assert!(!anns[0].covers("panic-macro", 3));
+        // same-line
+        assert!(anns[1].covers("raw-index", 5));
+        assert!(anns[1].reason.is_some());
+    }
+
+    #[test]
+    fn allow_without_reason_is_parsed_but_reasonless() {
+        let (rules, reason) =
+            parse_allow("// baf-lint: allow(panic-macro, raw-index)").unwrap();
+        assert_eq!(rules, vec!["panic-macro", "raw-index"]);
+        assert!(reason.is_none());
+        let (_, reason) =
+            parse_allow("// baf-lint: allow(raw-index) -- why not").unwrap();
+        assert_eq!(reason.as_deref(), Some("why not"));
+        assert!(parse_allow("// just a comment").is_none());
+    }
+}

@@ -88,8 +88,18 @@ pub fn validate_header(hdr: &[u8; HEADER_LEN]) -> Result<usize> {
 /// Verify the trailing CRC32 of a complete message body (header +
 /// frame) against the stored trailer.
 pub fn check_crc(body: &[u8], trailer: &[u8; CRC_LEN]) -> Result<()> {
+    check_crc_parts(body, &[], trailer)
+}
+
+/// [`check_crc`] for a message body held as two pieces (header, then
+/// frame payload): the CRC is streamed over both, so the receiver can
+/// validate without concatenating them into a fresh allocation.
+pub fn check_crc_parts(head: &[u8], rest: &[u8], trailer: &[u8; CRC_LEN]) -> Result<()> {
     let want = u32::from_le_bytes(*trailer);
-    let got = crc32fast::hash(body);
+    let mut hasher = crc32fast::Hasher::new();
+    hasher.update(head);
+    hasher.update(rest);
+    let got = hasher.finalize();
     if want != got {
         return Err(Error::Protocol(format!(
             "message CRC mismatch: stored {want:#010x}, computed {got:#010x}"

@@ -48,6 +48,11 @@ impl Executable {
             }
             // §Perf: single-copy literal creation (vec1 + reshape would
             // materialize the buffer twice per input)
+            // SAFETY: the slice reinterprets t.data()'s f32 buffer as
+            // bytes: same allocation, len scaled by size_of::<f32>, and
+            // f32 has no padding or invalid bit patterns as u8. The
+            // borrow of `t` outlives `bytes` (consumed by create_* in
+            // this iteration).
             let bytes = unsafe {
                 std::slice::from_raw_parts(
                     t.data().as_ptr() as *const u8,

@@ -112,8 +112,12 @@ pub fn read(path: &Path) -> Result<Npy> {
     match descr {
         "<f4" => {
             ensure_len(&payload, count * 4, path)?;
+            // decode exactly `count` elements: a payload longer than the
+            // declared shape (corrupt header) must not yield a tensor
+            // whose data length disagrees with its shape
             let data = payload
                 .chunks_exact(4)
+                .take(count)
                 .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
                 .collect();
             Ok(Npy::F32 { shape, data })
@@ -122,6 +126,7 @@ pub fn read(path: &Path) -> Result<Npy> {
             ensure_len(&payload, count * 4, path)?;
             let data = payload
                 .chunks_exact(4)
+                .take(count)
                 .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
                 .collect();
             Ok(Npy::I32 { shape, data })
@@ -130,6 +135,7 @@ pub fn read(path: &Path) -> Result<Npy> {
             ensure_len(&payload, count * 8, path)?;
             let data = payload
                 .chunks_exact(8)
+                .take(count)
                 .map(|b| i64::from_le_bytes(b.try_into().unwrap()))
                 .collect();
             Ok(Npy::I64 { shape, data })
@@ -189,9 +195,13 @@ fn parse_shape(header: &str) -> Result<Vec<usize>> {
         .find("'shape':")
         .ok_or_else(|| anyhow!("npy header missing shape"))?;
     let rest = &header[raw + 8..];
+    // find the ')' *after* the '(' — searching the whole string could
+    // yield close < open on garbage like `'shape': )(` and panic the
+    // reversed slice below
     let open = rest.find('(').ok_or_else(|| anyhow!("bad shape"))?;
-    let close = rest.find(')').ok_or_else(|| anyhow!("bad shape"))?;
-    let inner = &rest[open + 1..close];
+    let body = &rest[open + 1..];
+    let close = body.find(')').ok_or_else(|| anyhow!("bad shape"))?;
+    let inner = &body[..close];
     let mut out = Vec::new();
     for part in inner.split(',') {
         let p = part.trim();

@@ -80,7 +80,14 @@ impl<T> SyncSlice<T> {
     }
 }
 
+// SAFETY: SyncSlice is only a channel for disjoint-slot writes — every
+// user hands each index to exactly one worker (see `write`'s contract),
+// so sharing the wrapper across threads cannot alias a slot. T: Send
+// because slot values move to the writing thread.
 unsafe impl<T: Send> Sync for SyncSlice<T> {}
+// SAFETY: the wrapper holds a raw pointer into a Vec owned by the
+// caller's stack frame, which outlives the scoped threads; moving the
+// wrapper moves only the pointer, never the allocation.
 unsafe impl<T: Send> Send for SyncSlice<T> {}
 
 #[cfg(test)]

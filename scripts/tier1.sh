@@ -13,8 +13,13 @@ cargo test -q
 # the transport + fuzz suites are part of `cargo test`, but name them
 # explicitly so a test-harness filter or target rename can't silently
 # drop them from the gate (they enforce the no-panic wire contract)
-cargo test -q --test net_loopback --test transport_robustness --test json_fuzz
+cargo test -q --test net_loopback --test transport_robustness --test json_fuzz \
+    --test npy_fuzz --test decode_robustness
 cargo clippy --all-targets -- -D clippy::unwrap_used -D clippy::expect_used
+# the source-level no-panic gate: zero unsuppressed findings, every
+# suppression reasoned, wire/container constants in sync with ROADMAP.
+# Writes target/lint-report.json (archived by CI).
+cargo run --release --bin baf_lint
 cargo bench --bench bench_codec -- --smoke --json-out target/bench-json
 test -f target/bench-json/BENCH_codec.json
 echo "tier-1 OK"

@@ -290,3 +290,47 @@ fn empty_and_tiny_frames_are_truncation_errors() {
         assert!(msg.contains("truncated"), "len={len}: {msg}");
     }
 }
+
+/// Regressions for the checked header walk in `container::parse`:
+/// hostile field values (with the CRC refreshed so validation is
+/// actually reached) produce typed errors, never slice panics.
+#[test]
+fn hostile_header_fields_are_typed_errors() {
+    use baf::codec::Error;
+
+    let q = sample_quant(2, 8, 8, 6, 0xC0DE);
+    let mut frame = container::pack(&q, CodecKind::Tlc, 0);
+    // the payload-length field claims ~4 GiB on a tiny frame
+    frame[18..22].copy_from_slice(&u32::MAX.to_le_bytes());
+    container::refresh_crc(&mut frame);
+    match container::parse(&frame) {
+        Err(Error::Truncated { .. } | Error::Corrupt(_)) => {}
+        other => panic!("oversized payload_len must be a typed error, got {other:?}"),
+    }
+
+    // every header field after the magic forced to 0xFF at once
+    let mut all_ff = container::pack(&q, CodecKind::Tlc, 0);
+    for b in &mut all_ff[4..container::HEADER_LEN] {
+        *b = 0xFF;
+    }
+    container::refresh_crc(&mut all_ff);
+    assert!(container::parse(&all_ff).is_err(), "all-0xFF header accepted");
+}
+
+/// A stripe-table entry whose length points past the stripe data region
+/// is a typed `Corrupt`, not an out-of-range slice.
+#[test]
+fn stripe_table_length_past_payload_is_corrupt() {
+    use baf::codec::Error;
+
+    let q = sample_quant(4, 8, 8, 6, 0xC0DF);
+    let mut frame = container::pack_v2(&q, CodecKind::Tlc, 0, 3);
+    // layout: header(22) + K(2) + side(4*C=16) -> first stripe len at 40
+    let table = container::HEADER_LEN + 2 + 4 * 4;
+    frame[table..table + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    container::refresh_crc(&mut frame);
+    match container::parse(&frame) {
+        Err(Error::Corrupt(_) | Error::Truncated { .. }) => {}
+        other => panic!("runaway stripe length must be a typed error, got {other:?}"),
+    }
+}

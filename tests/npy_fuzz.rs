@@ -1,0 +1,183 @@
+//! `.npy` reader fuzz harness — closes the first "remaining hardening"
+//! item from ROADMAP (fuzz the npy reader the same way the codec frames
+//! are fuzzed). Drives `tio::read` with:
+//!
+//! * every 1-byte-granular truncation of a valid file;
+//! * every single-byte header overwrite (faultgen-style values), with
+//!   the declared-length field included;
+//! * hand-built hostile headers (reversed parens, absurd declared
+//!   lengths, overflowing shape products) — each must produce a typed
+//!   error, never a panic or an unbounded allocation;
+//! * PRNG-generated garbage headers and whole-file corruption rounds
+//!   (`faultgen::Corruptor`, the same fault model as the transport
+//!   suite).
+//!
+//! A surviving `Ok` is only accepted when it decodes to a tensor whose
+//! element count matches its shape and respects
+//! `codec::MAX_DECODED_SAMPLES`.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use baf::codec::faultgen::{all_truncations, Corruptor, Fault};
+use baf::codec::MAX_DECODED_SAMPLES;
+use baf::tensor::Tensor;
+use baf::tio;
+use baf::util::SplitMix64;
+use std::path::PathBuf;
+
+const NPY_MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+fn scratch_file(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("baf_npy_fuzz");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// A valid npy file's bytes, via the crate's own writer.
+fn valid_npy(name: &str, shape: &[usize]) -> Vec<u8> {
+    let count: usize = shape.iter().product();
+    let t = Tensor::from_vec(
+        shape,
+        (0..count).map(|i| (i as f32) * 0.5 - 7.0).collect(),
+    );
+    let path = scratch_file(name);
+    tio::write_f32(&path, &t).unwrap();
+    std::fs::read(&path).unwrap()
+}
+
+/// Write `bytes` to a scratch file and run the reader; the call must
+/// return (never panic), and any `Ok` must be internally consistent.
+fn read_bytes(name: &str, bytes: &[u8]) -> anyhow::Result<tio::Npy> {
+    let path = scratch_file(name);
+    std::fs::write(&path, bytes).unwrap();
+    let got = tio::read(&path);
+    if let Ok(npy) = &got {
+        let count: usize = npy.shape().iter().product();
+        assert!(
+            count <= MAX_DECODED_SAMPLES,
+            "reader accepted an over-cap element count {count}"
+        );
+    }
+    got
+}
+
+/// A hand-built v2.0 file: u32 declared header length, arbitrary header
+/// text (mirrors the unit tests' `hostile_npy`, but with a payload).
+fn npy_v2(declared_header_len: u32, header: &str, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(NPY_MAGIC);
+    out.extend_from_slice(&[2, 0]);
+    out.extend_from_slice(&declared_header_len.to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+#[test]
+fn every_truncation_is_rejected() {
+    let bytes = valid_npy("trunc.npy", &[4, 5, 3]);
+    // sanity: the untruncated file round-trips
+    assert!(read_bytes("trunc_case.npy", &bytes).is_ok());
+    for fault in all_truncations(bytes.len()) {
+        let bad = fault.apply(&bytes);
+        assert!(
+            read_bytes("trunc_case.npy", &bad).is_err(),
+            "truncation to {} bytes must be rejected",
+            bad.len()
+        );
+    }
+}
+
+#[test]
+fn every_header_byte_overwrite_is_survivable() {
+    let bytes = valid_npy("setbyte.npy", &[2, 6]);
+    // the header region: magic(8) + u16 len(2) + header text; mutating
+    // the length field and the magic is part of the point
+    let header_end = bytes.len() - 2 * 6 * 4;
+    for pos in 0..header_end {
+        for value in [0x00, 0x01, 0x7f, 0xff] {
+            let bad = Fault::SetByte { pos, value }.apply(&bytes);
+            // must return, not panic; Ok is fine when the overwrite is
+            // benign (e.g. rewriting a pad space)
+            let _ = read_bytes("setbyte_case.npy", &bad);
+        }
+    }
+}
+
+#[test]
+fn reversed_shape_parens_are_an_error_not_a_panic() {
+    // regression: `find(')')` over the whole header used to produce
+    // close < open and panic the slice in parse_shape
+    let header = "{'descr': '<f4', 'fortran_order': False, 'shape': )(, }\n";
+    let bad = npy_v2(header.len() as u32, header, &[0u8; 16]);
+    assert!(read_bytes("parens.npy", &bad).is_err());
+}
+
+#[test]
+fn hostile_declared_lengths_and_shapes_are_typed_errors() {
+    // 1 GiB declared header on a tiny file: typed LimitExceeded before
+    // any allocation
+    let bad = npy_v2(1 << 30, "", &[]);
+    let err = read_bytes("lim_header.npy", &bad).expect_err("must reject");
+    assert!(matches!(
+        err.downcast_ref::<baf::codec::Error>(),
+        Some(baf::codec::Error::LimitExceeded { what: "npy header bytes", .. })
+    ));
+
+    // over-cap element count: typed LimitExceeded before the payload vec
+    let header = "{'descr': '<f4', 'fortran_order': False, 'shape': (32768, 32768), }\n";
+    let bad = npy_v2(header.len() as u32, header, &[0u8; 64]);
+    let err = read_bytes("lim_count.npy", &bad).expect_err("must reject");
+    assert!(matches!(
+        err.downcast_ref::<baf::codec::Error>(),
+        Some(baf::codec::Error::LimitExceeded { what: "npy element count", .. })
+    ));
+
+    // usize-overflowing shape product: checked_mul, not wraparound
+    let header = "{'descr': '<f4', 'fortran_order': False, \
+                  'shape': (18446744073709551615, 16), }\n";
+    let bad = npy_v2(header.len() as u32, header, &[0u8; 64]);
+    let err = read_bytes("lim_overflow.npy", &bad).expect_err("must reject");
+    assert!(err.downcast_ref::<baf::codec::Error>().is_some());
+}
+
+#[test]
+fn prng_garbage_headers_never_panic() {
+    let mut rng = SplitMix64::new(0x6e70795f66757a7a);
+    for round in 0..300 {
+        let len = (rng.next_u64() % 96) as usize;
+        let mut header = Vec::with_capacity(len);
+        for _ in 0..len {
+            header.push((rng.next_u64() & 0xff) as u8);
+        }
+        // half the rounds get a syntactically plausible prefix so the
+        // parser gets past the early key lookups
+        let text = if round % 2 == 0 {
+            let tail = String::from_utf8_lossy(&header).into_owned();
+            format!("{{'descr': '<f4', 'fortran_order': False, 'shape': {tail}")
+        } else {
+            String::from_utf8_lossy(&header).into_owned()
+        };
+        let bad = npy_v2(text.len() as u32, &text, &[0u8; 32]);
+        let _ = read_bytes("garbage_case.npy", &bad);
+    }
+}
+
+#[test]
+fn sustained_random_corruption_is_survivable() {
+    let bytes = valid_npy("corruptor.npy", &[3, 4, 4]);
+    let mut c = Corruptor::new(0xbaf_0601);
+    for _ in 0..500 {
+        let bad = c.corrupt(&bytes);
+        match read_bytes("corruptor_case.npy", &bad) {
+            Ok(npy) => {
+                // corruption that survives must still be self-consistent
+                let count: usize = npy.shape().iter().product();
+                if let tio::Npy::F32 { data, .. } = &npy {
+                    assert_eq!(data.len(), count);
+                }
+            }
+            Err(_) => {}
+        }
+    }
+}
