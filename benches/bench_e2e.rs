@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
             queue_depth: 64,
             burst_factor: 1.0,
             corrupt_rate: 0.0,
+            ..Default::default()
         };
         let r = run_server(&pcfg, &scfg)?;
         let lat = r.metrics.get("latencies").unwrap();
@@ -71,6 +72,7 @@ fn main() -> anyhow::Result<()> {
             queue_depth: 64,
             burst_factor: 1.0,
             corrupt_rate: 0.0,
+            ..Default::default()
         };
         let r = run_server(&pcfg, &scfg)?;
         let lat = r.metrics.get("latencies").unwrap();
@@ -99,6 +101,7 @@ fn main() -> anyhow::Result<()> {
             queue_depth: 64,
             burst_factor: bf,
             corrupt_rate: 0.0,
+            ..Default::default()
         };
         let r = run_server(&pcfg, &scfg)?;
         let lat = r.metrics.get("latencies").unwrap();
@@ -129,6 +132,7 @@ fn main() -> anyhow::Result<()> {
         queue_depth: 64,
         burst_factor: 1.0,
             corrupt_rate: 0.0,
+            ..Default::default()
     };
     let r = run_server(&pcfg, &scfg)?;
     println!("{}", r.table);

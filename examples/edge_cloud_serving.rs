@@ -24,6 +24,7 @@ fn main() -> anyhow::Result<()> {
             queue_depth: 64,
             burst_factor: 1.0,
             corrupt_rate: 0.0,
+            ..Default::default()
         };
         println!("=== {label}: {} requests @ {}/s ===", scfg.num_requests, scfg.arrival_rate);
         let report = run_server(&pcfg, &scfg)?;

@@ -17,6 +17,11 @@
 //! * [`wire_mutations`] — transport-message corruption (truncated
 //!   length prefix, hostile `frame_len`, header bit flips) for the
 //!   loopback TCP fault suite in `tests/transport_robustness.rs`;
+//!   version-aware: v2 messages (with the sequence field) get their
+//!   shifted length prefix targeted;
+//! * [`verdict_faults`] — the misbehaving-*receiver* schedule (garbage
+//!   verdict byte, truncated verdict, verdict-then-reset) the sender
+//!   must survive with a typed error and bounded retransmission;
 //! * [`Corruptor`] — a seeded random fault source for end-to-end runs
 //!   (the E5 server's `--corrupt-rate` injection).
 //!
@@ -131,25 +136,30 @@ pub fn wire_mutations(msg: &[u8]) -> Vec<Vec<u8>> {
     use crate::net::wire;
 
     let mut out = Vec::new();
+    // v2 messages carry the 8-byte sequence field, which shifts both
+    // the header end and the length prefix; target whichever layout
+    // the message actually uses
+    let hdr_len = if msg.get(4) == Some(&wire::VERSION2) {
+        wire::HEADER_V2_LEN
+    } else {
+        wire::HEADER_LEN
+    };
+    let len_off = hdr_len - 4;
     // truncations: every header prefix, then a few cuts inside the body
-    let header = wire::HEADER_LEN.min(msg.len());
+    let header = hdr_len.min(msg.len());
     for len in 0..header {
         out.push(Fault::Truncate { len }.apply(msg));
     }
-    if msg.len() > wire::HEADER_LEN + wire::CRC_LEN {
-        for len in [
-            wire::HEADER_LEN + 1,
-            (wire::HEADER_LEN + msg.len()) / 2,
-            msg.len() - 1,
-        ] {
+    if msg.len() > hdr_len + wire::CRC_LEN {
+        for len in [hdr_len + 1, (hdr_len + msg.len()) / 2, msg.len() - 1] {
             out.push(Fault::Truncate { len }.apply(msg));
         }
     }
     // hostile length prefixes, CRC refreshed so validation is reached
-    if msg.len() >= wire::HEADER_LEN + wire::CRC_LEN {
+    if msg.len() >= hdr_len + wire::CRC_LEN {
         for len in [0u32, 1, (wire::MAX_FRAME_LEN as u32) + 1, u32::MAX] {
             let mut bad = msg.to_vec();
-            bad[5..9].copy_from_slice(&len.to_le_bytes());
+            bad[len_off..len_off + 4].copy_from_slice(&len.to_le_bytes());
             wire::refresh_msg_crc(&mut bad);
             out.push(bad);
         }
@@ -159,6 +169,40 @@ pub fn wire_mutations(msg: &[u8]) -> Vec<Vec<u8>> {
         out.push(f.apply(msg));
     }
     out
+}
+
+/// One way a misbehaving *receiver* can mangle the verdict byte the
+/// sender blocks on. The complement of [`wire_mutations`]: that covers
+/// the edge→cloud direction, this covers cloud→edge. The sender must
+/// turn each of these into a typed [`crate::net::Error`] with bounded
+/// retransmission — never a panic, never an unbounded retry loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerdictFault {
+    /// Answer a byte that is none of ACK / NACK / BUSY.
+    Garbage(u8),
+    /// Close the connection without answering at all (the verdict is
+    /// truncated to zero bytes).
+    Truncated,
+    /// Answer ACK, then immediately reset the connection — the message
+    /// *was* delivered, so the sender must report success and the next
+    /// send must survive the dead socket.
+    AckThenReset,
+    /// Answer NACK, then immediately reset the connection.
+    NackThenReset,
+}
+
+/// The deterministic verdict-fault schedule for
+/// `tests/transport_robustness.rs`.
+pub fn verdict_faults() -> Vec<VerdictFault> {
+    vec![
+        VerdictFault::Garbage(0x00),
+        VerdictFault::Garbage(0xFF),
+        // one bit off ACK: nearly-right garbage must not pass
+        VerdictFault::Garbage(0xA4),
+        VerdictFault::Truncated,
+        VerdictFault::AckThenReset,
+        VerdictFault::NackThenReset,
+    ]
 }
 
 /// Seeded random fault source for end-to-end corruption injection.
@@ -298,6 +342,52 @@ mod tests {
             })
             .count();
         assert_eq!(oversize, 2, "MAX+1 and u32::MAX variants present");
+    }
+
+    #[test]
+    fn wire_mutations_target_the_v2_layout() {
+        use crate::net::wire;
+
+        let msg = wire::encode_msg_v2(&[5u8; 40], 42);
+        let muts = wire_mutations(&msg);
+        // 17 header truncations + 3 body cuts + 4 length overwrites
+        // + 136 header bit flips
+        assert_eq!(
+            muts.len(),
+            wire::HEADER_V2_LEN + 3 + 4 + 8 * wire::HEADER_V2_LEN
+        );
+        assert!(muts.iter().all(|m| m != &msg), "every mutation differs");
+        // the length overwrites must hit the *v2* length prefix (bytes
+        // 13..17), not the seq field: each carries a refreshed CRC and a
+        // parseable header whose frame_len is the hostile value
+        let hostile = muts
+            .iter()
+            .filter(|m| m.len() == msg.len())
+            .filter(|m| {
+                let body = &m[..m.len() - wire::CRC_LEN];
+                let mut t = [0u8; wire::CRC_LEN];
+                t.copy_from_slice(&m[m.len() - wire::CRC_LEN..]);
+                wire::check_crc(body, &t).is_ok()
+                    && u32::from_le_bytes([m[13], m[14], m[15], m[16]]) as usize != 40
+            })
+            .count();
+        assert_eq!(hostile, 4, "all four length overwrites land on 13..17");
+    }
+
+    #[test]
+    fn verdict_fault_schedule_is_garbage_only() {
+        use crate::net::wire;
+
+        let faults = verdict_faults();
+        assert!(faults.len() >= 4, "garbage, truncated, and reset variants");
+        for f in &faults {
+            if let VerdictFault::Garbage(b) = f {
+                assert!(
+                    *b != wire::ACK && *b != wire::NACK && *b != wire::BUSY,
+                    "0x{b:02X} is a legitimate verdict, not garbage"
+                );
+            }
+        }
     }
 
     #[test]

@@ -75,6 +75,15 @@ pub struct ServerConfig {
     /// TCP serving mode, edge side: ship frames to a listening server
     /// at this address instead of running the local pipeline.
     pub connect: Option<String>,
+    /// TCP serving mode: capacity of the bounded ingress queue between
+    /// the receiver thread and the decode dispatcher. When it fills,
+    /// the overload policy in [`crate::coordinator::ingress`] decides
+    /// between shedding the oldest expired frame and answering BUSY.
+    pub ingress_depth: usize,
+    /// TCP serving mode: per-frame latency budget, milliseconds. A
+    /// queued frame older than this is shed-eligible when the ingress
+    /// queue is full (drop-oldest past deadline).
+    pub shed_deadline_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -90,6 +99,8 @@ impl Default for ServerConfig {
             corrupt_rate: 0.0,
             listen: None,
             connect: None,
+            ingress_depth: 256,
+            shed_deadline_ms: 250,
         }
     }
 }
@@ -192,6 +203,16 @@ impl ServerConfig {
         if let Some(s) = v.get("connect").and_then(Value::as_str) {
             self.connect = Some(s.to_string());
         }
+        if let Some(d) = v.get("ingress_depth").and_then(Value::as_usize) {
+            if d == 0 {
+                bail!("config field 'ingress_depth': must be >= 1, got {d}");
+            }
+            self.ingress_depth = d;
+        }
+        set_if(
+            &mut self.shed_deadline_ms,
+            v.get("shed_deadline_ms").and_then(Value::as_i64).map(|x| x as u64),
+        );
         Ok(())
     }
 
@@ -289,6 +310,20 @@ mod tests {
         assert_eq!(cfg.listen.as_deref(), Some("0.0.0.0:7878"));
         cfg.apply(&parse(r#"{"connect": "10.0.0.2:7878"}"#).unwrap()).unwrap();
         assert_eq!(cfg.connect.as_deref(), Some("10.0.0.2:7878"));
+    }
+
+    #[test]
+    fn ingress_overlay_and_validation() {
+        let mut cfg = ServerConfig::default();
+        assert_eq!(cfg.ingress_depth, 256);
+        assert_eq!(cfg.shed_deadline_ms, 250);
+        cfg.apply(&parse(r#"{"ingress_depth": 8, "shed_deadline_ms": 50}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.ingress_depth, 8);
+        assert_eq!(cfg.shed_deadline_ms, 50);
+        let err = cfg.apply(&parse(r#"{"ingress_depth": 0}"#).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("'ingress_depth'"), "{err}");
+        assert_eq!(cfg.ingress_depth, 8);
     }
 
     #[test]

@@ -122,6 +122,10 @@ impl EdgeNode {
 }
 
 /// Summary of one TCP edge-client run (`baf serve --connect ADDR`).
+///
+/// Every request id lands in exactly one bucket: `sent + rejected +
+/// busy + shed + failed == num_requests` (the client-side half of the
+/// transport conservation law).
 #[derive(Debug)]
 pub struct EdgeClientReport {
     /// Frames acked by the server.
@@ -129,6 +133,15 @@ pub struct EdgeClientReport {
     /// Frames the server rejected at the wire layer (NACK). Only
     /// non-zero when `corrupt_rate` injects wire faults.
     pub rejected: usize,
+    /// Frames the server refused with BUSY (its ingress queue was full
+    /// of still-live frames): shed at the edge, never retransmitted.
+    pub busy: usize,
+    /// Frames shed locally by the open circuit breaker (the link was
+    /// down long enough that retrying each frame would only add load).
+    pub shed: usize,
+    /// Frames that exhausted the reconnect budget without a verdict
+    /// (link down or flapping).
+    pub failed: usize,
     /// Wire bytes shipped (acked messages only).
     pub bytes: u64,
     /// Reconnect attempts performed by the sender.
@@ -148,8 +161,10 @@ pub struct EdgeClientReport {
 /// `corrupt_rate` here mangles frames *before* the wire layer wraps
 /// them, so the container CRC (not the wire CRC) is what the server's
 /// decode stage trips on — exactly the lossy-channel scenario of the
-/// paper. A server NACK (wire-level reject) or decode-stage drop both
-/// consume the request id, keeping both ends' accounting aligned.
+/// paper. A server NACK (wire-level reject), a BUSY refusal, a
+/// breaker-shed frame, or a decode-stage drop all consume the request
+/// id, keeping both ends' accounting aligned; transport faults degrade
+/// the run (counted buckets) instead of aborting it.
 pub fn run_edge_client(
     pcfg: &PipelineConfig,
     scfg: &ServerConfig,
@@ -175,9 +190,14 @@ pub fn run_edge_client(
     let edge_h = registry.histogram("1_edge_total");
     let send_h = registry.histogram("1_net_send");
 
+    let failed_c = registry.counter("net_frames_send_failed");
+
     let t_start = Instant::now();
     let mut sent = 0usize;
     let mut rejected = 0usize;
+    let mut busy = 0usize;
+    let mut shed = 0usize;
+    let mut failed = 0usize;
     let mut next_arrival = Instant::now();
     for id in 0..scfg.num_requests {
         next_arrival +=
@@ -209,10 +229,27 @@ pub fn run_edge_client(
                 rejected += 1;
                 rejected_c.inc();
             }
+            // the server's ingress is full of still-live frames: this
+            // frame is shed at the edge (the server accounted it too),
+            // and the client moves on without retransmitting
+            Err(e @ crate::net::Error::Busy) => {
+                log::warn!("edge client: frame {id} shed: {e}");
+                busy += 1;
+            }
+            // the breaker is open: the link has been down for a while,
+            // so the frame is shed instantly instead of burning a full
+            // reconnect budget on it
+            Err(e @ crate::net::Error::BreakerOpen) => {
+                log::debug!("edge client: frame {id} shed: {e}");
+                shed += 1;
+            }
+            // transient transport failure that exhausted the reconnect
+            // budget: the frame is lost, the run continues — a flapping
+            // link must degrade the edge client, not kill it
             Err(e) => {
-                return Err(anyhow::anyhow!(
-                    "edge client: giving up on frame {id}: {e}"
-                ));
+                log::warn!("edge client: frame {id} failed: {e}");
+                failed += 1;
+                failed_c.inc();
             }
         }
     }
@@ -223,6 +260,9 @@ pub fn run_edge_client(
     Ok(EdgeClientReport {
         sent,
         rejected,
+        busy,
+        shed,
+        failed,
         bytes: st.bytes,
         reconnects: st.reconnects,
         wall_seconds: wall,

@@ -1,0 +1,244 @@
+//! The bounded server ingress queue with an explicit overload policy.
+//!
+//! In TCP serving mode the receiver thread must never block on the
+//! decode pipeline: while it blocks it is not reading the socket, the
+//! kernel buffers fill, and overload turns into opaque sender timeouts
+//! instead of a measured signal. The ingress queue sits between the
+//! receiver thread and the decode dispatcher and makes the overload
+//! policy explicit:
+//!
+//! * space available → the frame is enqueued;
+//! * queue full and the *oldest* queued frame is past its arrival
+//!   deadline → that frame is shed (drop-oldest: it has already missed
+//!   its latency budget, finishing it helps nobody) and the new frame
+//!   is enqueued — counted by the server as `frames_shed`;
+//! * queue full and even the oldest frame is still within its deadline
+//!   → the new frame is refused ([`PushOutcome::Rejected`]) and the
+//!   receiver answers BUSY, shedding at the *edge* instead.
+//!
+//! Frames are pushed in arrival order, so the front entry always holds
+//! the earliest deadline — deadline ordering is arrival ordering.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Poison-safe lock: a panicked holder cannot leave the queue unusable
+/// (mirrors `codec::scratch`).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[derive(Debug)]
+struct Entry<T> {
+    item: T,
+    deadline: Instant,
+}
+
+#[derive(Debug)]
+struct Inner<T> {
+    q: VecDeque<Entry<T>>,
+    closed: bool,
+}
+
+/// What happened to a pushed frame (and to its victim, if any).
+#[derive(Debug)]
+pub enum PushOutcome<T> {
+    /// Enqueued; `shed` carries the expired oldest entry this push
+    /// evicted, if the queue was full.
+    Accepted { shed: Option<T> },
+    /// Queue full and nothing shed-eligible: the caller gets the item
+    /// back and should answer BUSY.
+    Rejected(T),
+}
+
+/// Result of a blocking pop.
+#[derive(Debug)]
+pub enum PopOutcome<T> {
+    Item(T),
+    /// Nothing arrived within the timeout; the queue is still open.
+    TimedOut,
+    /// Closed and drained: no more items will ever arrive.
+    Closed,
+}
+
+/// Bounded MPMC queue with deadline-aware drop-oldest shedding. See the
+/// module docs for the policy.
+#[derive(Debug)]
+pub struct IngressQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl<T> IngressQueue<T> {
+    /// A queue holding at most `capacity` entries (clamped to >= 1).
+    pub fn new(capacity: usize) -> Self {
+        IngressQueue {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        lock(&self.inner).q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Would a push right now be accepted (with or without shedding)?
+    /// The admission answer can only improve between this call and the
+    /// matching `push` as long as this thread is the only pusher:
+    /// consumers shrink the queue and time only expires deadlines.
+    pub fn can_accept(&self, now: Instant) -> bool {
+        let inner = lock(&self.inner);
+        if inner.closed {
+            return false;
+        }
+        inner.q.len() < self.capacity
+            || inner.q.front().is_some_and(|e| e.deadline <= now)
+    }
+
+    /// Push with the module-level overload policy. Never blocks.
+    pub fn push(&self, item: T, deadline: Instant) -> PushOutcome<T> {
+        let mut inner = lock(&self.inner);
+        if inner.closed {
+            return PushOutcome::Rejected(item);
+        }
+        let mut shed = None;
+        if inner.q.len() >= self.capacity {
+            let oldest_expired =
+                inner.q.front().is_some_and(|e| e.deadline <= Instant::now());
+            if !oldest_expired {
+                return PushOutcome::Rejected(item);
+            }
+            shed = inner.q.pop_front().map(|e| e.item);
+        }
+        inner.q.push_back(Entry { item, deadline });
+        drop(inner);
+        self.cv.notify_one();
+        PushOutcome::Accepted { shed }
+    }
+
+    /// Blocking pop with a timeout. Returns [`PopOutcome::Closed`] only
+    /// once the queue is both closed and drained, so no accepted frame
+    /// is ever lost at shutdown.
+    pub fn pop(&self, timeout: Duration) -> PopOutcome<T> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = lock(&self.inner);
+        loop {
+            if let Some(e) = inner.q.pop_front() {
+                return PopOutcome::Item(e.item);
+            }
+            if inner.closed {
+                return PopOutcome::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopOutcome::TimedOut;
+            }
+            let (guard, _timed_out) = self
+                .cv
+                .wait_timeout(inner, deadline - now)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            inner = guard;
+        }
+    }
+
+    /// Close the queue: pushes are rejected from now on and, once the
+    /// backlog drains, pops return [`PopOutcome::Closed`].
+    pub fn close(&self) {
+        lock(&self.inner).closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    fn later(ms: u64) -> Instant {
+        Instant::now() + Duration::from_millis(ms)
+    }
+
+    #[test]
+    fn fifo_within_capacity() {
+        let q = IngressQueue::new(4);
+        for i in 0..4 {
+            assert!(matches!(q.push(i, later(1000)), PushOutcome::Accepted { shed: None }));
+        }
+        for i in 0..4 {
+            match q.pop(Duration::from_millis(50)) {
+                PopOutcome::Item(v) => assert_eq!(v, i),
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(matches!(q.pop(Duration::from_millis(10)), PopOutcome::TimedOut));
+    }
+
+    #[test]
+    fn full_queue_with_live_deadlines_rejects() {
+        let q = IngressQueue::new(2);
+        assert!(matches!(q.push(1, later(1000)), PushOutcome::Accepted { .. }));
+        assert!(matches!(q.push(2, later(1000)), PushOutcome::Accepted { .. }));
+        assert!(!q.can_accept(Instant::now()));
+        match q.push(3, later(1000)) {
+            PushOutcome::Rejected(v) => assert_eq!(v, 3),
+            other => panic!("{other:?}"),
+        }
+        // nothing was lost
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn full_queue_sheds_expired_oldest() {
+        let q = IngressQueue::new(2);
+        // already-expired deadline on the oldest entry
+        assert!(matches!(
+            q.push(1, Instant::now() - Duration::from_millis(1)),
+            PushOutcome::Accepted { .. }
+        ));
+        assert!(matches!(q.push(2, later(1000)), PushOutcome::Accepted { .. }));
+        assert!(q.can_accept(Instant::now()));
+        match q.push(3, later(1000)) {
+            PushOutcome::Accepted { shed: Some(v) } => assert_eq!(v, 1),
+            other => panic!("{other:?}"),
+        }
+        match q.pop(Duration::from_millis(50)) {
+            PopOutcome::Item(v) => assert_eq!(v, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn close_drains_then_signals_closed() {
+        let q = IngressQueue::new(4);
+        assert!(matches!(q.push(7, later(1000)), PushOutcome::Accepted { .. }));
+        q.close();
+        assert!(matches!(q.push(8, later(1000)), PushOutcome::Rejected(8)));
+        assert!(matches!(q.pop(Duration::from_millis(10)), PopOutcome::Item(7)));
+        assert!(matches!(q.pop(Duration::from_millis(10)), PopOutcome::Closed));
+    }
+
+    #[test]
+    fn pop_wakes_on_concurrent_push() {
+        let q = std::sync::Arc::new(IngressQueue::new(2));
+        let q2 = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(matches!(q.push(42, later(1000)), PushOutcome::Accepted { .. }));
+        match h.join().unwrap() {
+            PopOutcome::Item(v) => assert_eq!(v, 42),
+            other => panic!("{other:?}"),
+        }
+    }
+}

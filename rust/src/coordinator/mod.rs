@@ -15,10 +15,12 @@
 pub mod batcher;
 pub mod cloud;
 pub mod edge;
+pub mod ingress;
 pub mod pipeline;
 pub mod server;
 
 pub use cloud::{CloudNode, CloudTrace};
+pub use ingress::{IngressQueue, PopOutcome, PushOutcome};
 pub use edge::{run_edge_client, EdgeClientReport, EdgeNode, EdgeTrace};
 pub use pipeline::{CloudOnly, Pipeline, PipelineOutput};
 pub use server::{run_server, ServerReport};

@@ -32,8 +32,19 @@
 //! message (so the reported p50/p95 *include* transport time), and
 //! wire-rejected messages are accounted as `frames_dropped`. The decode
 //! dispatcher, batcher, and collector are identical in both modes.
+//!
+//! In TCP mode a bounded [`super::ingress::IngressQueue`] sits between
+//! the receiver thread and the decode dispatcher so the receiver never
+//! blocks on a slow pipeline. Overload becomes a measured signal
+//! instead of opaque sender timeouts: a full queue sheds the oldest
+//! frame past its `shed_deadline_ms` budget (`frames_shed`) or, when
+//! even the oldest frame is still live, answers BUSY on the wire so
+//! the edge sheds instead (`frames_busy`). The collector's
+//! conservation law is `completed + dropped + shed + busy ==
+//! num_requests` — every request id ends in exactly one bucket.
 
 use super::batcher::{next_batch, BatchOutcome};
+use super::ingress::{IngressQueue, PopOutcome, PushOutcome};
 use crate::codec::scratch::ScratchPool;
 use crate::config::{PipelineConfig, ServerConfig};
 use crate::runtime::pool::WorkerPool;
@@ -77,8 +88,15 @@ struct DecodedMsg {
 pub struct ServerReport {
     pub requests: usize,
     /// Frames dropped by the decode stage (corrupt/truncated); the run
-    /// still completes — `requests` counts completions + drops.
+    /// still completes — `requests` counts completions + drops + sheds
+    /// + BUSY refusals.
     pub dropped: usize,
+    /// Frames shed from the ingress queue under overload (accepted off
+    /// the wire, then evicted past their deadline). TCP mode only.
+    pub shed: usize,
+    /// Frames refused with a BUSY verdict (shed at the edge before
+    /// entering the pipeline). TCP mode only.
+    pub busy: usize,
     pub wall_seconds: f64,
     pub throughput_rps: f64,
     pub mean_batch_size: f64,
@@ -113,74 +131,139 @@ pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerRe
             // inference + encode on its side of the wire. t_arrival is
             // the first wire byte, so the collector's p50/p95 include
             // transport time.
-            let scfg = scfg.clone();
-            let registry = Arc::clone(&registry);
-            scope.spawn(move || {
-                let cfg = crate::net::NetConfig::default();
-                let dropped_c = registry.counter("frames_dropped");
-                let mut rx = match crate::net::FrameReceiver::bind(&listen, cfg) {
-                    Ok(rx) => rx,
-                    Err(e) => {
-                        log::error!("net: bind {listen} failed: {e}");
-                        // nothing can arrive: account every request as
-                        // dropped so the collector terminates
-                        dropped_c.add(scfg.num_requests as u64);
-                        return;
-                    }
-                };
-                let recv_h = registry.histogram("0_net_recv");
-                let mut accounted = 0usize;
-                let mut strikes = 0u32;
-                while accounted < scfg.num_requests {
-                    match rx.recv() {
-                        Ok(r) => {
-                            strikes = 0;
-                            recv_h.record_us(
-                                r.t_done
-                                    .saturating_duration_since(r.t_first_byte)
-                                    .as_secs_f64()
-                                    * 1e6,
-                            );
-                            frame_tx
-                                .send(FrameMsg {
+            //
+            // The receiver never blocks on the decode pipeline: admitted
+            // frames land in the bounded ingress queue (overload policy
+            // in `super::ingress`) and a drain thread forwards them to
+            // the decode dispatcher's channel.
+            let ingress =
+                Arc::new(IngressQueue::<FrameMsg>::new(scfg.ingress_depth));
+            {
+                let ingress = Arc::clone(&ingress);
+                let scfg = scfg.clone();
+                let registry = Arc::clone(&registry);
+                let scratch = Arc::clone(&scratch);
+                scope.spawn(move || {
+                    let cfg = crate::net::NetConfig::default();
+                    let dropped_c = registry.counter("frames_dropped");
+                    let mut rx = match crate::net::FrameReceiver::bind(&listen, cfg) {
+                        Ok(rx) => rx,
+                        Err(e) => {
+                            log::error!("net: bind {listen} failed: {e}");
+                            // nothing can arrive: account every request as
+                            // dropped so the collector terminates
+                            dropped_c.add(scfg.num_requests as u64);
+                            ingress.close();
+                            return;
+                        }
+                    };
+                    let recv_h = registry.histogram("0_net_recv");
+                    let shed_c = registry.counter("frames_shed");
+                    let busy_c = registry.counter("frames_busy");
+                    let budget = Duration::from_millis(scfg.shed_deadline_ms);
+                    let mut accounted = 0usize;
+                    let mut strikes = 0u32;
+                    while accounted < scfg.num_requests {
+                        let outcome = rx.recv_admit(&mut |_received| {
+                            ingress.can_accept(Instant::now())
+                        });
+                        match outcome {
+                            Ok(r) => {
+                                strikes = 0;
+                                recv_h.record_us(
+                                    r.t_done
+                                        .saturating_duration_since(r.t_first_byte)
+                                        .as_secs_f64()
+                                        * 1e6,
+                                );
+                                let msg = FrameMsg {
                                     id: accounted,
                                     frame: r.frame,
                                     t_arrival: r.t_first_byte,
                                     t_edge_done: r.t_done,
-                                })
-                                .ok();
-                            accounted += 1;
-                        }
-                        // a wire-rejected message consumed a request slot
-                        // on the edge (the sender sees the NACK): count
-                        // it as a drop so the run stays fully accounted
-                        Err(e @ crate::net::Error::Protocol(_))
-                        | Err(e @ crate::net::Error::TooLarge { .. }) => {
-                            log::warn!("net: rejecting frame: {e}");
-                            dropped_c.inc();
-                            accounted += 1;
-                        }
-                        // the edge disconnected (done, or reconnecting
-                        // after a fault): the next recv re-accepts
-                        Err(crate::net::Error::ConnClosed { .. }) => {}
-                        Err(e) => {
-                            // accept/read timeouts and socket errors: a
-                            // few in a row mean the edge is gone for good
-                            strikes += 1;
-                            if strikes >= 3 {
-                                log::warn!(
-                                    "net: idle after {e}; abandoning {} request(s)",
-                                    scfg.num_requests - accounted
-                                );
-                                break;
+                                };
+                                match ingress.push(msg, r.t_first_byte + budget) {
+                                    PushOutcome::Accepted { shed: Some(old) } => {
+                                        // the victim's request id is spent;
+                                        // the collector counts it via
+                                        // `frames_shed`
+                                        log::warn!(
+                                            "ingress: shedding frame {} (past \
+                                             its {budget:?} budget)",
+                                            old.id,
+                                        );
+                                        shed_c.inc();
+                                        scratch.put_u8(old.frame);
+                                    }
+                                    PushOutcome::Accepted { shed: None } => {}
+                                    PushOutcome::Rejected(msg) => {
+                                        // only reachable if the queue was
+                                        // closed under us; shed rather than
+                                        // lose the id
+                                        shed_c.inc();
+                                        scratch.put_u8(msg.frame);
+                                    }
+                                }
+                                accounted += 1;
+                            }
+                            // admission refused: the sender got BUSY and
+                            // sheds at the edge; the request id is spent
+                            // on both ends
+                            Err(crate::net::Error::Busy) => {
+                                busy_c.inc();
+                                accounted += 1;
+                            }
+                            // a wire-rejected message consumed a request slot
+                            // on the edge (the sender sees the NACK): count
+                            // it as a drop so the run stays fully accounted
+                            Err(e @ crate::net::Error::Protocol(_))
+                            | Err(e @ crate::net::Error::TooLarge { .. }) => {
+                                log::warn!("net: rejecting frame: {e}");
+                                dropped_c.inc();
+                                accounted += 1;
+                            }
+                            // the edge disconnected (done, or reconnecting
+                            // after a fault): the next recv re-accepts
+                            Err(crate::net::Error::ConnClosed { .. }) => {}
+                            Err(e) => {
+                                // accept/read timeouts and socket errors: a
+                                // few in a row mean the edge is gone for good
+                                strikes += 1;
+                                if strikes >= 3 {
+                                    log::warn!(
+                                        "net: idle after {e}; abandoning {} request(s)",
+                                        scfg.num_requests - accounted
+                                    );
+                                    break;
+                                }
                             }
                         }
                     }
+                    if accounted < scfg.num_requests {
+                        dropped_c.add((scfg.num_requests - accounted) as u64);
+                    }
+                    rx.stats().export_receiver_into(&registry);
+                    // no more pushes: once the backlog drains the drain
+                    // thread sees Closed and drops frame_tx
+                    ingress.close();
+                });
+            }
+            // ---- ingress drain thread: queue -> decode dispatcher ----
+            scope.spawn(move || {
+                loop {
+                    match ingress.pop(Duration::from_millis(100)) {
+                        PopOutcome::Item(msg) => {
+                            // blocking here is fine: backpressure lands on
+                            // the queue, whose shed policy keeps the
+                            // receiver responsive
+                            if frame_tx.send(msg).is_err() {
+                                break;
+                            }
+                        }
+                        PopOutcome::TimedOut => continue,
+                        PopOutcome::Closed => break,
+                    }
                 }
-                if accounted < scfg.num_requests {
-                    dropped_c.add((scfg.num_requests - accounted) as u64);
-                }
-                rx.stats().export_receiver_into(&registry);
                 // frame_tx dropped here -> decode workers drain and stop
             });
         } else {
@@ -434,24 +517,34 @@ pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerRe
         drop(done_tx);
 
         // ---- collector (this thread) ----
-        // Completions arrive on done_rx; dropped frames are only visible
-        // through the counter, so run until every request is accounted
-        // for (completed + dropped) or the pipeline shuts down (channel
-        // closes when edge -> decode -> cloud have all drained).
+        // Completions arrive on done_rx; drops, sheds, and BUSY refusals
+        // are only visible through counters, so run until every request
+        // is accounted for or the pipeline shuts down (channel closes
+        // when edge -> decode -> cloud have all drained). Conservation:
+        // every request id ends in exactly one bucket.
         let e2e = registry.histogram("5_e2e");
         let dropped_c = registry.counter("frames_dropped");
+        let shed_c = registry.counter("frames_shed");
+        let busy_c = registry.counter("frames_busy");
         let mut completed = 0usize;
         while let Ok((_id, t_arrival, t_done, _nboxes)) = done_rx.recv() {
             e2e.record_us((t_done - t_arrival).as_secs_f64() * 1e6);
             completed += 1;
-            if completed + dropped_c.get() as usize >= scfg.num_requests {
+            let accounted = completed
+                + dropped_c.get() as usize
+                + shed_c.get() as usize
+                + busy_c.get() as usize;
+            if accounted >= scfg.num_requests {
                 break;
             }
         }
         let dropped = dropped_c.get() as usize;
+        let shed = shed_c.get() as usize;
+        let busy = busy_c.get() as usize;
         anyhow::ensure!(
-            completed + dropped == scfg.num_requests,
-            "served {completed} + dropped {dropped} of {} requests",
+            completed + dropped + shed + busy == scfg.num_requests,
+            "served {completed} + dropped {dropped} + shed {shed} + busy \
+             {busy} of {} requests",
             scfg.num_requests
         );
         Ok(())
@@ -470,9 +563,13 @@ pub fn run_server(pcfg: &PipelineConfig, scfg: &ServerConfig) -> Result<ServerRe
     let batches = registry.counter("batches").get().max(1);
     let items = registry.counter("batched_items").get();
     let dropped = registry.counter("frames_dropped").get() as usize;
+    let shed = registry.counter("frames_shed").get() as usize;
+    let busy = registry.counter("frames_busy").get() as usize;
     Ok(ServerReport {
         requests: scfg.num_requests,
         dropped,
+        shed,
+        busy,
         wall_seconds: wall,
         throughput_rps: scfg.num_requests as f64 / wall,
         mean_batch_size: items as f64 / batches as f64,

@@ -105,6 +105,7 @@ pub fn check_drift(
     let c_v2 = const_num(&container, "VERSION2");
     let w_magic = const_bytes(&wire, "MAGIC");
     let w_v = const_num(&wire, "VERSION");
+    let w_v2 = const_num(&wire, "VERSION2");
     let frame_cap = const_init_tokens(&wire, "MAX_FRAME_LEN");
 
     match (&c_magic, c_v1, c_v2) {
@@ -126,20 +127,44 @@ pub fn check_drift(
         }),
     }
 
-    match (&w_magic, w_v) {
-        (Some(magic), Some(v)) => {
-            let needle = format!("{magic} | ver={v}");
-            out.push(DriftCheck {
-                what: "wire message".to_string(),
-                ok: roadmap.contains(&needle),
-                detail: format!("ROADMAP grammar block must contain `{needle}`"),
-            });
+    match (&w_magic, w_v, w_v2) {
+        (Some(magic), Some(v1), Some(v2)) => {
+            for (name, ver) in [("wire v1", v1), ("wire v2", v2)] {
+                let needle = format!("{magic} | ver={ver}");
+                out.push(DriftCheck {
+                    what: name.to_string(),
+                    ok: roadmap.contains(&needle),
+                    detail: format!("ROADMAP grammar block must contain `{needle}`"),
+                });
+            }
         }
         _ => out.push(DriftCheck {
             what: "wire constants".to_string(),
             ok: false,
-            detail: "could not extract MAGIC/VERSION from net::wire".to_string(),
+            detail: "could not extract MAGIC/VERSION/VERSION2 from net::wire"
+                .to_string(),
         }),
+    }
+
+    // the three verdict bytes are load-bearing for every client of the
+    // protocol (a misread BUSY is an unexplained drop), so ROADMAP must
+    // name each one with its hex value
+    for name in ["ACK", "NACK", "BUSY"] {
+        match const_num(&wire, name) {
+            Some(v) => {
+                let needle = format!("{name} (0x{v:02X})");
+                out.push(DriftCheck {
+                    what: format!("wire verdict {name}"),
+                    ok: roadmap.contains(&needle),
+                    detail: format!("ROADMAP must name the verdict `{needle}`"),
+                });
+            }
+            None => out.push(DriftCheck {
+                what: format!("wire verdict {name}"),
+                ok: false,
+                detail: format!("could not extract {name} from net::wire"),
+            }),
+        }
     }
 
     // MAX_FRAME_LEN must be `<mult> * MAX_DECODED_SAMPLES` in source and
@@ -208,12 +233,22 @@ fn const_init_tokens(code: &[Token], name: &str) -> Option<Vec<String>> {
     None
 }
 
-/// A `const <name>: ... = <num>;` integer initializer.
+/// A `const <name>: ... = <num>;` integer initializer. Accepts decimal
+/// and `0x` hex literals, with `_` separators (the verdict bytes are
+/// written `0xA5`-style in source).
 fn const_num(code: &[Token], name: &str) -> Option<u64> {
     let init = const_init_tokens(code, name)?;
     match init.as_slice() {
-        [n] => n.parse::<u64>().ok(),
+        [n] => parse_int_literal(n),
         _ => None,
+    }
+}
+
+fn parse_int_literal(text: &str) -> Option<u64> {
+    let s = text.replace('_', "");
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse::<u64>().ok(),
     }
 }
 
@@ -276,20 +311,46 @@ mod tests {
         let wire = r#"
             pub const MAGIC: &[u8; 4] = b"BAFN";
             pub const VERSION: u8 = 1;
+            pub const VERSION2: u8 = 2;
             pub const MAX_FRAME_LEN: usize = 4 * MAX_DECODED_SAMPLES;
+            pub const ACK: u8 = 0xA5;
+            pub const NACK: u8 = 0x5A;
+            pub const BUSY: u8 = 0xB5;
         "#;
         let good = "BAFT | ver=1 ... BAFT | ver=2 ... BAFN | ver=1 ...\n\
+                    BAFN | ver=2 ... ACK (0xA5), NACK (0x5A), BUSY (0xB5)\n\
                     MAX_FRAME_LEN = 4 * codec::MAX_DECODED_SAMPLES";
         let checks = check_drift(container, wire, good);
-        assert_eq!(checks.len(), 4);
+        assert_eq!(checks.len(), 8);
         assert!(checks.iter().all(|c| c.ok), "{checks:?}");
-        // a stale ROADMAP (wrong version, wrong multiplier) fails
-        let stale = "BAFT | ver=1 ... BAFN | ver=1 ...\n\
+        // a stale ROADMAP (wrong versions, wrong multiplier, no BUSY)
+        // fails exactly those checks
+        let stale = "BAFT | ver=1 ... BAFN | ver=1 ... BAFN | ver=2 ...\n\
+                     ACK (0xA5), NACK (0x5A)\n\
                      MAX_FRAME_LEN = 2 * codec::MAX_DECODED_SAMPLES";
         let checks = check_drift(container, wire, stale);
-        assert_eq!(checks.iter().filter(|c| !c.ok).count(), 2, "{checks:?}");
+        assert_eq!(checks.iter().filter(|c| !c.ok).count(), 3, "{checks:?}");
         // an unextractable constant is a failure, not a silent pass
         let checks = check_drift("", wire, good);
         assert!(checks.iter().any(|c| !c.ok && c.what == "container constants"));
+        // a wire module missing the verdict consts is a failure too
+        let old_wire = r#"
+            pub const MAGIC: &[u8; 4] = b"BAFN";
+            pub const VERSION: u8 = 1;
+            pub const MAX_FRAME_LEN: usize = 4 * MAX_DECODED_SAMPLES;
+        "#;
+        let checks = check_drift(container, old_wire, good);
+        assert!(checks.iter().any(|c| !c.ok && c.what == "wire constants"));
+        assert!(checks.iter().any(|c| !c.ok && c.what == "wire verdict ACK"));
+    }
+
+    #[test]
+    fn int_literal_parser_handles_hex_and_separators() {
+        assert_eq!(parse_int_literal("42"), Some(42));
+        assert_eq!(parse_int_literal("0xA5"), Some(0xA5));
+        assert_eq!(parse_int_literal("0XB5"), Some(0xB5));
+        assert_eq!(parse_int_literal("1_000"), Some(1000));
+        assert_eq!(parse_int_literal("0x9E37_79B9"), Some(0x9E37_79B9));
+        assert_eq!(parse_int_literal("ver"), None);
     }
 }

@@ -37,6 +37,10 @@ COMMANDS
              e.g. --listen 0.0.0.0:7878; default is the in-process edge)
              --connect ADDR (edge side: run only the edge stage and ship
              frames to a --listen server over TCP)
+             --ingress-depth N (TCP mode: bounded ingress queue; full =>
+             shed oldest expired frame or answer BUSY)
+             --shed-deadline-ms MS (TCP mode: per-frame latency budget
+             for the ingress shed policy)
   encode     compress a CHW f32 .npy tensor into a .baf frame
              <in.npy> <out.baf> [--n BITS] [--codec NAME] [--qp QP]
              [--stripes K]
@@ -195,7 +199,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(&[
         "artifacts", "c", "n", "codec", "qp", "policy", "no-consolidate", "rate",
         "requests", "batch-cap", "deadline-us", "decode-workers", "burst",
-        "corrupt-rate", "stripes", "listen", "connect",
+        "corrupt-rate", "stripes", "listen", "connect", "ingress-depth",
+        "shed-deadline-ms",
     ])?;
     let pcfg = pipeline_cfg(args)?;
     let mut scfg = ServerConfig::default();
@@ -226,6 +231,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     scfg.listen = args.opt("listen").map(str::to_string);
     scfg.connect = args.opt("connect").map(str::to_string);
+    if let Some(v) = args.opt_parse::<usize>("ingress-depth")? {
+        anyhow::ensure!(v >= 1, "--ingress-depth: must be >= 1, got {v}");
+        scfg.ingress_depth = v;
+    }
+    if let Some(v) = args.opt_parse::<u64>("shed-deadline-ms")? {
+        scfg.shed_deadline_ms = v;
+    }
     anyhow::ensure!(
         scfg.listen.is_none() || scfg.connect.is_none(),
         "--listen and --connect are mutually exclusive (one process is \
@@ -238,11 +250,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         let report = baf::coordinator::run_edge_client(&pcfg, &scfg, &connect)?;
         println!(
-            "\nsent {} frames ({} B on the wire) in {:.2}s, {} rejected, {} reconnects",
+            "\nsent {} frames ({} B on the wire) in {:.2}s, {} rejected, \
+             {} busy, {} shed, {} failed, {} reconnects",
             report.sent,
             report.bytes,
             report.wall_seconds,
             report.rejected,
+            report.busy,
+            report.shed,
+            report.failed,
             report.reconnects
         );
         println!("\n{}", report.table);
@@ -264,12 +280,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let report = run_server(&pcfg, &scfg)?;
     println!(
-        "\nserved {} requests in {:.2}s -> {:.1} req/s (mean batch {:.2}, {} dropped)",
+        "\nserved {} requests in {:.2}s -> {:.1} req/s (mean batch {:.2}, \
+         {} dropped, {} shed, {} busy)",
         report.requests,
         report.wall_seconds,
         report.throughput_rps,
         report.mean_batch_size,
-        report.dropped
+        report.dropped,
+        report.shed,
+        report.busy
     );
     println!("\n{}", report.table);
     Ok(())

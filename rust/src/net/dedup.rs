@@ -1,0 +1,136 @@
+//! Bounded receive-side dedup window for wire-v2 sequence numbers.
+//!
+//! The sender's delivery loop is at-least-once: a retransmit after a
+//! lost ACK puts the same frame on the wire twice. Every v2 message
+//! carries a per-sender-stream sequence number that survives
+//! reconnects, so the receiver can recognize the second copy. The
+//! window remembers the most recent sequence numbers in a fixed ring —
+//! O(capacity) memory, O(1) per lookup — and classifies each arrival:
+//!
+//! * inside the ring and recorded → duplicate (ACK it, don't deliver);
+//! * more than `capacity` below the highest seen → *conservatively*
+//!   duplicate: the ring can no longer prove freshness, and with a
+//!   bounded retransmission budget a genuinely fresh frame can never
+//!   lag the stream head that far;
+//! * anything else → fresh.
+//!
+//! Correctness of the ring indexing: slots are keyed by `seq %
+//! capacity`. All remembered sequence numbers lie in a half-open span
+//! of `capacity` consecutive values ending at the highest seen, and any
+//! two distinct values in such a span have distinct residues, so a slot
+//! collision can only evict a below-window entry — which the lag check
+//! already classifies as duplicate without consulting the ring.
+//!
+//! Recording is split from lookup (`contains` / `observe`) on purpose:
+//! the receiver records a sequence number only after the frame is
+//! *admitted*. A frame rejected with BUSY at admission stays fresh, so
+//! its retransmit is not mistaken for a duplicate.
+
+/// See the module docs. `Default` capacity comes from
+/// [`super::NetConfig::default`]'s `dedup_window`.
+#[derive(Debug)]
+pub struct DedupWindow {
+    /// `slots[seq % capacity] == Some(seq)` means `seq` was observed
+    /// recently enough for the ring to still prove it.
+    slots: Vec<Option<u64>>,
+    /// Highest sequence number ever observed (valid only if `any`).
+    hi: u64,
+    any: bool,
+}
+
+impl DedupWindow {
+    /// A window remembering up to `capacity` recent sequence numbers
+    /// (clamped to at least 1).
+    pub fn new(capacity: usize) -> Self {
+        DedupWindow { slots: vec![None; capacity.max(1)], hi: 0, any: false }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Has `seq` been observed (or is it too far below the window to
+    /// prove otherwise)? Does not record anything.
+    pub fn contains(&self, seq: u64) -> bool {
+        if !self.any {
+            return false;
+        }
+        let cap = self.slots.len() as u64;
+        if seq < self.hi && self.hi - seq >= cap {
+            // below the window: conservatively a duplicate
+            return true;
+        }
+        let idx = (seq % cap) as usize;
+        self.slots.get(idx).copied().flatten() == Some(seq)
+    }
+
+    /// Record `seq` as observed. Call only after the frame is admitted.
+    pub fn observe(&mut self, seq: u64) {
+        let cap = self.slots.len() as u64;
+        let idx = (seq % cap) as usize;
+        if let Some(slot) = self.slots.get_mut(idx) {
+            *slot = Some(seq);
+        }
+        if !self.any || seq > self.hi {
+            self.hi = seq;
+        }
+        self.any = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn fresh_then_duplicate() {
+        let mut w = DedupWindow::new(8);
+        assert!(!w.contains(1));
+        w.observe(1);
+        assert!(w.contains(1));
+        assert!(!w.contains(2));
+    }
+
+    #[test]
+    fn observe_is_explicit_not_implied_by_contains() {
+        let mut w = DedupWindow::new(8);
+        // a BUSY-rejected frame is looked up but never observed: its
+        // retransmit must still be fresh
+        assert!(!w.contains(5));
+        assert!(!w.contains(5));
+        w.observe(5);
+        assert!(w.contains(5));
+    }
+
+    #[test]
+    fn below_window_is_conservatively_duplicate() {
+        let mut w = DedupWindow::new(4);
+        w.observe(100);
+        assert!(w.contains(96), "100 - 96 == capacity: below the window");
+        assert!(!w.contains(97), "inside the window and never observed");
+        assert!(!w.contains(101));
+    }
+
+    #[test]
+    fn ring_collisions_only_evict_below_window_entries() {
+        let mut w = DedupWindow::new(4);
+        for seq in 0..100u64 {
+            w.observe(seq);
+            // every in-window observed seq stays provably observed
+            for back in 0..4u64.min(seq + 1) {
+                assert!(w.contains(seq - back), "seq {seq} back {back}");
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_clamped_to_one() {
+        let mut w = DedupWindow::new(0);
+        assert_eq!(w.capacity(), 1);
+        w.observe(7);
+        assert!(w.contains(7));
+        assert!(!w.contains(8));
+    }
+}

@@ -15,7 +15,14 @@
 //! * [`FrameReceiver`] — the cloud side: accepts, reads and validates
 //!   messages with read timeouts, acks good frames, nacks and drops the
 //!   connection on wire corruption (framing can't be trusted after a
-//!   bad message).
+//!   bad message);
+//! * [`dedup`] — the bounded sequence-number window that turns the
+//!   sender's at-least-once retry loop into exactly-once delivery at
+//!   the pipeline (wire v2 carries a per-stream `u64` seq);
+//! * [`chaos`] — a deterministic userspace loopback shim that injects
+//!   latency, throttling, fragmentation, corruption, resets, and stalls
+//!   between the two ends, so the soak tests exercise the transport
+//!   under the packet-level faults it exists to survive.
 //!
 //! # Error handling & robustness
 //!
@@ -31,10 +38,14 @@
 //! ([`crate::codec::faultgen::wire_mutations`]) plus mid-stream
 //! disconnects and stalls over a loopback socket to enforce it.
 
+pub mod chaos;
+pub mod dedup;
 pub mod receiver;
 pub mod sender;
 pub mod wire;
 
+pub use chaos::{ChaosConfig, ChaosProxy};
+pub use dedup::DedupWindow;
 pub use receiver::{FrameReceiver, Received};
 pub use sender::FrameSender;
 
@@ -60,6 +71,16 @@ pub enum Error {
     /// The wire message was intact but the container frame inside it
     /// failed to decode.
     Codec(crate::codec::Error),
+    /// The receiver answered [`wire::BUSY`]: the frame was wire-valid
+    /// but shed at ingress admission because the server is saturated.
+    /// Not retried — retrying into an overloaded server makes the
+    /// overload worse; the caller counts the frame as shed.
+    Busy,
+    /// The sender's circuit breaker is open after repeated whole-budget
+    /// delivery failures; the frame was shed at the edge without
+    /// touching the socket, so the arrival process is never blocked by
+    /// a dead link.
+    BreakerOpen,
     /// Any other socket-level failure (resolve, bind, connect refused).
     Io(String),
 }
@@ -74,6 +95,10 @@ impl fmt::Display for Error {
                 write!(f, "wire frame too large: {requested} > {limit}")
             }
             Error::Codec(e) => write!(f, "frame decode failed: {e}"),
+            Error::Busy => write!(f, "receiver busy: frame shed at ingress"),
+            Error::BreakerOpen => {
+                write!(f, "circuit breaker open: frame shed at the edge")
+            }
             Error::Io(msg) => write!(f, "net i/o error: {msg}"),
         }
     }
@@ -129,6 +154,17 @@ pub struct NetConfig {
     pub backoff_max: Duration,
     /// Seed for the jitter PRNG (deterministic backoff in tests).
     pub seed: u64,
+    /// Sender circuit breaker: consecutive sends that exhaust the whole
+    /// `max_reconnects` budget before the breaker opens and frames are
+    /// shed at the edge instead of blocking on a dead link. 0 disables
+    /// the breaker.
+    pub breaker_threshold: u32,
+    /// How long an open breaker sheds before allowing one half-open
+    /// probe send (single attempt, no backoff loop).
+    pub breaker_cooldown: Duration,
+    /// Receiver dedup window capacity: how many recent v2 sequence
+    /// numbers are remembered to suppress retransmitted duplicates.
+    pub dedup_window: usize,
 }
 
 impl Default for NetConfig {
@@ -142,6 +178,9 @@ impl Default for NetConfig {
             backoff_base: Duration::from_millis(50),
             backoff_max: Duration::from_secs(2),
             seed: 0xBAF_0E7,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(500),
+            dedup_window: 1024,
         }
     }
 }
@@ -163,6 +202,17 @@ pub struct NetStats {
     /// Receiver: messages rejected at the wire layer (bad magic/CRC/
     /// oversized length).
     pub rejected: u64,
+    /// Receiver: v2 retransmits recognized by the dedup window — ACKed
+    /// but not delivered a second time.
+    pub duplicates: u64,
+    /// Receiver: frames answered BUSY at admission. Sender: BUSY
+    /// verdicts received.
+    pub busy: u64,
+    /// Sender: frames shed by the open circuit breaker without touching
+    /// the socket.
+    pub shed: u64,
+    /// Sender: times the circuit breaker opened.
+    pub breaker_opens: u64,
 }
 
 impl NetStats {
@@ -172,6 +222,9 @@ impl NetStats {
         r.counter("net_bytes_out").add(self.bytes);
         r.counter("net_reconnects").add(self.reconnects);
         r.counter("net_timeouts").add(self.timeouts);
+        r.counter("net_frames_busy").add(self.busy);
+        r.counter("net_frames_shed_breaker").add(self.shed);
+        r.counter("net_breaker_opens").add(self.breaker_opens);
     }
 
     /// Publish the receiver-side view into a metrics registry.
@@ -180,6 +233,8 @@ impl NetStats {
         r.counter("net_bytes_in").add(self.bytes);
         r.counter("net_frames_rejected").add(self.rejected);
         r.counter("net_timeouts").add(self.timeouts);
+        r.counter("net_frames_duplicate").add(self.duplicates);
+        r.counter("net_frames_busy_answered").add(self.busy);
     }
 }
 
@@ -220,7 +275,17 @@ mod tests {
     #[test]
     fn stats_export_uses_net_prefix() {
         let r = crate::metrics::Registry::default();
-        let st = NetStats { frames: 3, bytes: 100, reconnects: 1, timeouts: 2, rejected: 4 };
+        let st = NetStats {
+            frames: 3,
+            bytes: 100,
+            reconnects: 1,
+            timeouts: 2,
+            rejected: 4,
+            duplicates: 5,
+            busy: 6,
+            shed: 7,
+            breaker_opens: 8,
+        };
         st.export_sender_into(&r);
         st.export_receiver_into(&r);
         let v = r.export();
@@ -230,5 +295,16 @@ mod tests {
         assert_eq!(c.get("net_reconnects").unwrap().as_usize(), Some(1));
         assert_eq!(c.get("net_frames_rejected").unwrap().as_usize(), Some(4));
         assert_eq!(c.get("net_timeouts").unwrap().as_usize(), Some(4));
+        assert_eq!(c.get("net_frames_duplicate").unwrap().as_usize(), Some(5));
+        assert_eq!(c.get("net_frames_busy").unwrap().as_usize(), Some(6));
+        assert_eq!(c.get("net_frames_busy_answered").unwrap().as_usize(), Some(6));
+        assert_eq!(c.get("net_frames_shed_breaker").unwrap().as_usize(), Some(7));
+        assert_eq!(c.get("net_breaker_opens").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn new_error_variants_display() {
+        assert!(Error::Busy.to_string().contains("shed at ingress"));
+        assert!(Error::BreakerOpen.to_string().contains("breaker open"));
     }
 }

@@ -1,7 +1,9 @@
 //! The cloud side of the transport: accept, read one validated message
-//! at a time, ACK good frames, NACK-and-drop on wire corruption.
+//! at a time, ACK good frames, NACK-and-drop on wire corruption,
+//! suppress wire-v2 retransmits via the dedup window, and answer BUSY
+//! when the caller's admission check sheds under overload.
 
-use super::{wire, Error, NetConfig, NetStats, Result};
+use super::{dedup::DedupWindow, wire, Error, NetConfig, NetStats, Result};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
@@ -13,6 +15,8 @@ use std::time::{Duration, Instant};
 pub struct Received {
     /// The container frame bytes, verbatim as sent.
     pub frame: Vec<u8>,
+    /// The wire-v2 sequence number (`None` for a v1 message).
+    pub seq: Option<u64>,
     /// When the first header byte of this message was read.
     pub t_first_byte: Instant,
     /// When the message was fully read and validated.
@@ -23,8 +27,8 @@ pub struct Received {
 ///
 /// [`Self::recv`] blocks for one message: it accepts a connection if
 /// none is live (bounded by `accept_timeout`), reads and validates one
-/// wire message (bounded by `read_timeout`), and answers ACK or NACK.
-/// Error policy:
+/// wire message (bounded by `read_timeout`), and answers ACK, NACK, or
+/// BUSY. Error policy:
 ///
 /// * idle timeouts (no connection, or a live but silent connection)
 ///   keep the connection and return [`Error::Timeout`];
@@ -33,13 +37,23 @@ pub struct Received {
 ///   lets a sender reconnect mid-run;
 /// * wire corruption ([`Error::Protocol`] / [`Error::TooLarge`]) and
 ///   mid-message truncation NACK (best effort) and drop the connection:
-///   after a bad message the stream's framing cannot be trusted.
+///   after a bad message the stream's framing cannot be trusted;
+/// * a v2 message whose sequence number the [`DedupWindow`] already
+///   holds is a retransmit whose ACK got lost: it is ACKed again (so
+///   the sender stops resending) but never returned to the caller —
+///   `recv` silently keeps reading, which is what makes delivery
+///   exactly-once at the pipeline;
+/// * when the admission check passed to [`Self::recv_admit`] refuses a
+///   frame, the receiver answers BUSY, keeps the connection, and
+///   returns [`Error::Busy`]. The sequence number is deliberately *not*
+///   recorded, so a retransmit after the overload clears is fresh.
 #[derive(Debug)]
 pub struct FrameReceiver {
     listener: TcpListener,
     conn: Option<TcpStream>,
     cfg: NetConfig,
     stats: NetStats,
+    dedup: DedupWindow,
 }
 
 /// Outcome of an exact read: how many bytes landed before the error.
@@ -66,7 +80,8 @@ impl FrameReceiver {
         listener
             .set_nonblocking(true)
             .map_err(|e| Error::Io(format!("listener options: {e}")))?;
-        Ok(FrameReceiver { listener, conn: None, cfg, stats: NetStats::default() })
+        let dedup = DedupWindow::new(cfg.dedup_window);
+        Ok(FrameReceiver { listener, conn: None, cfg, stats: NetStats::default(), dedup })
     }
 
     /// The bound address (resolves ephemeral ports).
@@ -122,51 +137,98 @@ impl FrameReceiver {
         let _ = conn.write_all(&[byte]);
     }
 
-    /// Receive one frame. See the type-level docs for the error policy.
+    /// Receive one frame (always admitted). See the type-level docs for
+    /// the error policy.
     pub fn recv(&mut self) -> Result<Received> {
-        if self.conn.is_none() {
-            self.accept()?;
-        }
-        let Some(mut conn) = self.conn.take() else {
-            return Err(Error::ConnClosed { what: "no connection" });
-        };
-        match self.read_one(&mut conn) {
-            Ok(r) => {
-                Self::verdict(&mut conn, wire::ACK);
-                self.conn = Some(conn);
-                self.stats.frames += 1;
-                self.stats.bytes +=
-                    (wire::HEADER_LEN + wire::CRC_LEN) as u64 + r.frame.len() as u64;
-                Ok(r)
+        self.recv_admit(&mut |_| true)
+    }
+
+    /// Receive one frame, consulting `admit` before accepting it: a
+    /// refused frame is answered BUSY and surfaced as [`Error::Busy`]
+    /// (the connection survives). The server's ingress queue is the
+    /// admission check in TCP serving mode. Retransmitted duplicates
+    /// are consumed (and ACKed) internally without being offered to
+    /// `admit` — only fresh frames reach it.
+    pub fn recv_admit(
+        &mut self,
+        admit: &mut dyn FnMut(&Received) -> bool,
+    ) -> Result<Received> {
+        loop {
+            if self.conn.is_none() {
+                self.accept()?;
             }
-            Err(e) => {
-                match &e {
-                    // idle is benign: keep the connection for the next call
-                    Error::Timeout { what } if *what == "message header" => {
-                        self.stats.timeouts += 1;
+            let Some(mut conn) = self.conn.take() else {
+                return Err(Error::ConnClosed { what: "no connection" });
+            };
+            match self.read_one(&mut conn) {
+                Ok(r) => {
+                    if let Some(seq) = r.seq {
+                        if self.dedup.contains(seq) {
+                            // retransmit of a frame already delivered:
+                            // re-ACK so the sender stops resending, but
+                            // never deliver it twice
+                            Self::verdict(&mut conn, wire::ACK);
+                            self.conn = Some(conn);
+                            self.stats.duplicates += 1;
+                            continue;
+                        }
+                    }
+                    if !admit(&r) {
+                        // overload: shed at admission. The seq was not
+                        // observed, so a retransmit stays fresh.
+                        Self::verdict(&mut conn, wire::BUSY);
                         self.conn = Some(conn);
+                        self.stats.busy += 1;
+                        return Err(Error::Busy);
                     }
-                    Error::Timeout { .. } => {
-                        // mid-message stall: framing lost, drop the conn
-                        self.stats.timeouts += 1;
-                        Self::verdict(&mut conn, wire::NACK);
+                    if let Some(seq) = r.seq {
+                        self.dedup.observe(seq);
                     }
-                    Error::Protocol(_) | Error::TooLarge { .. } => {
-                        self.stats.rejected += 1;
-                        Self::verdict(&mut conn, wire::NACK);
-                    }
-                    // closed (cleanly or mid-message): nothing to answer
-                    _ => {}
+                    Self::verdict(&mut conn, wire::ACK);
+                    self.conn = Some(conn);
+                    self.stats.frames += 1;
+                    let hdr_len = if r.seq.is_some() {
+                        wire::HEADER_V2_LEN
+                    } else {
+                        wire::HEADER_LEN
+                    };
+                    self.stats.bytes +=
+                        (hdr_len + wire::CRC_LEN) as u64 + r.frame.len() as u64;
+                    return Ok(r);
                 }
-                Err(e)
+                Err(e) => {
+                    match &e {
+                        // idle is benign: keep the connection for the next call
+                        Error::Timeout { what } if *what == "message header" => {
+                            self.stats.timeouts += 1;
+                            self.conn = Some(conn);
+                        }
+                        Error::Timeout { .. } => {
+                            // mid-message stall: framing lost, drop the conn
+                            self.stats.timeouts += 1;
+                            Self::verdict(&mut conn, wire::NACK);
+                        }
+                        Error::Protocol(_) | Error::TooLarge { .. } => {
+                            self.stats.rejected += 1;
+                            Self::verdict(&mut conn, wire::NACK);
+                        }
+                        // closed (cleanly or mid-message): nothing to answer
+                        _ => {}
+                    }
+                    return Err(e);
+                }
             }
         }
     }
 
-    /// Read and validate exactly one wire message from `conn`.
+    /// Read and validate exactly one wire message (either version) from
+    /// `conn`.
     fn read_one(&mut self, conn: &mut TcpStream) -> Result<Received> {
-        let mut hdr = [0u8; wire::HEADER_LEN];
-        match read_full(conn, &mut hdr, "message header") {
+        let mut hdr = [0u8; wire::HEADER_V2_LEN];
+        // the version-independent prefix first; the version byte then
+        // says how much more header follows
+        let mut prefix = [0u8; wire::PREFIX_LEN];
+        match read_full(conn, &mut prefix, "message header") {
             (_, None) => {}
             // zero bytes read: the connection was merely idle (benign
             // timeout) or closed cleanly between messages
@@ -186,11 +248,27 @@ impl FrameReceiver {
             }
             (_, Some(e)) => return Err(e),
         }
-        // the header is in hand just now: this timestamps the start of
+        // the prefix is in hand just now: this timestamps the start of
         // the message for the transport-inclusive latency accounting
         let t_first_byte = Instant::now();
-        let len = wire::validate_header(&hdr)?;
-        // bounded by MAX_FRAME_LEN (validate_header) before this alloc
+        let version = wire::validate_prefix(&prefix)?;
+        let hdr_len = wire::header_len_for(version);
+        hdr[..wire::PREFIX_LEN].copy_from_slice(&prefix);
+        let tail = hdr
+            .get_mut(wire::PREFIX_LEN..hdr_len)
+            .ok_or(Error::ConnClosed { what: "impossible header length" })?;
+        if let (_, Some(e)) = read_full(conn, tail, "header tail") {
+            return Err(match e {
+                Error::ConnClosed { .. } => Error::ConnClosed { what: "mid-message" },
+                Error::Timeout { .. } => Error::Timeout { what: "mid-header" },
+                other => other,
+            });
+        }
+        let head = hdr
+            .get(..hdr_len)
+            .ok_or(Error::ConnClosed { what: "impossible header length" })?;
+        let (seq, len) = wire::parse_header(head)?;
+        // bounded by MAX_FRAME_LEN (parse_header) before this alloc
         let mut payload = vec![0u8; len];
         if let (_, Some(e)) = read_full(conn, &mut payload, "message payload") {
             return Err(match e {
@@ -209,8 +287,8 @@ impl FrameReceiver {
         }
         // the wire CRC covers header + payload; hash the two pieces in
         // sequence instead of concatenating them (one copy fewer)
-        wire::check_crc_parts(&hdr, &payload, &trailer)?;
-        Ok(Received { frame: payload, t_first_byte, t_done: Instant::now() })
+        wire::check_crc_parts(head, &payload, &trailer)?;
+        Ok(Received { frame: payload, seq, t_first_byte, t_done: Instant::now() })
     }
 
     /// [`Self::recv`] plus container parsing: the typed
@@ -241,6 +319,9 @@ mod tests {
             backoff_base: Duration::from_millis(5),
             backoff_max: Duration::from_millis(20),
             seed: 3,
+            breaker_threshold: 0,
+            breaker_cooldown: Duration::from_millis(100),
+            dedup_window: 64,
         }
     }
 
@@ -291,5 +372,93 @@ mod tests {
         let got = rx.recv().unwrap();
         assert_eq!(got.frame, vec![9u8; 16]);
         tx_thread.join().unwrap();
+    }
+
+    #[test]
+    fn retransmitted_v2_frame_is_acked_but_delivered_once() {
+        let mut rx = FrameReceiver::bind("127.0.0.1:0", fast_cfg()).unwrap();
+        let addr = rx.local_addr().unwrap().to_string();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let msg = wire::encode_msg_v2(&[1, 2, 3], 7);
+            let mut v = [0u8; 1];
+            // original
+            s.write_all(&msg).unwrap();
+            s.read_exact(&mut v).unwrap();
+            assert_eq!(v[0], wire::ACK);
+            // retransmit after a "lost" ACK: byte-identical message
+            s.write_all(&msg).unwrap();
+            s.read_exact(&mut v).unwrap();
+            assert_eq!(v[0], wire::ACK, "a duplicate must still be ACKed");
+            // the stream continues with a fresh seq
+            s.write_all(&wire::encode_msg_v2(&[4, 5, 6], 8)).unwrap();
+            s.read_exact(&mut v).unwrap();
+            assert_eq!(v[0], wire::ACK);
+        });
+        let a = rx.recv().unwrap();
+        assert_eq!(a.frame, vec![1, 2, 3]);
+        assert_eq!(a.seq, Some(7));
+        // the next recv skips the duplicate internally and returns the
+        // fresh frame behind it
+        let b = rx.recv().unwrap();
+        assert_eq!(b.frame, vec![4, 5, 6]);
+        assert_eq!(b.seq, Some(8));
+        let st = rx.stats();
+        assert_eq!(st.duplicates, 1);
+        assert_eq!(st.frames, 2, "the duplicate is not counted as a delivery");
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn v1_messages_still_parse_and_bypass_dedup() {
+        let mut rx = FrameReceiver::bind("127.0.0.1:0", fast_cfg()).unwrap();
+        let addr = rx.local_addr().unwrap().to_string();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let msg = wire::encode_msg(&[9, 9]);
+            let mut v = [0u8; 1];
+            // identical v1 messages carry no seq: both are delivered
+            for _ in 0..2 {
+                s.write_all(&msg).unwrap();
+                s.read_exact(&mut v).unwrap();
+                assert_eq!(v[0], wire::ACK);
+            }
+        });
+        for _ in 0..2 {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.frame, vec![9, 9]);
+            assert_eq!(r.seq, None);
+        }
+        assert_eq!(rx.stats().duplicates, 0);
+        assert_eq!(rx.stats().frames, 2);
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn busy_rejection_keeps_conn_and_does_not_poison_dedup() {
+        let mut rx = FrameReceiver::bind("127.0.0.1:0", fast_cfg()).unwrap();
+        let addr = rx.local_addr().unwrap().to_string();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let msg = wire::encode_msg_v2(&[5, 5, 5], 42);
+            let mut v = [0u8; 1];
+            s.write_all(&msg).unwrap();
+            s.read_exact(&mut v).unwrap();
+            assert_eq!(v[0], wire::BUSY, "overload must answer BUSY, not NACK");
+            // retransmit once the overload clears: must be fresh
+            s.write_all(&msg).unwrap();
+            s.read_exact(&mut v).unwrap();
+            assert_eq!(v[0], wire::ACK);
+        });
+        let err = rx.recv_admit(&mut |_| false).unwrap_err();
+        assert!(matches!(err, Error::Busy), "{err}");
+        let got = rx.recv().unwrap();
+        assert_eq!(got.frame, vec![5, 5, 5]);
+        assert_eq!(got.seq, Some(42));
+        let st = rx.stats();
+        assert_eq!(st.busy, 1);
+        assert_eq!(st.frames, 1);
+        assert_eq!(st.duplicates, 0, "a BUSY-shed frame is not a duplicate");
+        client.join().unwrap();
     }
 }

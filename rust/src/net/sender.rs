@@ -5,17 +5,33 @@ use super::{classify_io, wire, Error, NetConfig, NetStats, Result};
 use crate::util::SplitMix64;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Sends container frames to a [`super::FrameReceiver`].
 ///
-/// Delivery is at-least-once: a frame is only counted sent once its ACK
-/// arrives, and a connection failure anywhere in the write→ack window
-/// triggers reconnect-and-resend (bounded by
+/// Delivery is at-least-once on the wire: a frame is only counted sent
+/// once its ACK arrives, and a connection failure anywhere in the
+/// write→ack window triggers reconnect-and-resend (bounded by
 /// [`NetConfig::max_reconnects`], delayed by exponential backoff with
 /// jitter from [`SplitMix64`] so a fleet of edges doesn't reconnect in
-/// lockstep). A NACK is returned as [`Error::Protocol`] without retry —
-/// the receiver rejected the bytes deterministically.
+/// lockstep). Every message carries a wire-v2 sequence number from a
+/// per-sender monotone stream — retransmits of one frame reuse the same
+/// number, which is what lets the receiver's dedup window turn
+/// at-least-once into exactly-once delivery at the pipeline.
+///
+/// Two verdicts short-circuit the retry loop: a NACK is returned as
+/// [`Error::Protocol`] (the receiver rejected the bytes
+/// deterministically — resending cannot succeed) and a BUSY as
+/// [`Error::Busy`] (the receiver shed the frame under overload —
+/// retrying into a saturated server makes it worse).
+///
+/// A circuit breaker guards the arrival process against a dead link:
+/// after [`NetConfig::breaker_threshold`] consecutive sends that each
+/// burned the whole reconnect budget, the breaker opens and subsequent
+/// frames are shed immediately ([`Error::BreakerOpen`]) for
+/// [`NetConfig::breaker_cooldown`], after which a single half-open
+/// probe send (one attempt, no backoff loop) decides whether to close
+/// it again.
 #[derive(Debug)]
 pub struct FrameSender {
     addr: String,
@@ -23,6 +39,14 @@ pub struct FrameSender {
     stream: Option<TcpStream>,
     rng: SplitMix64,
     stats: NetStats,
+    /// Next wire-v2 sequence number; allocated once per `send` call so
+    /// retransmits inside the call share it.
+    next_seq: u64,
+    /// Consecutive `send` calls that exhausted the whole retry budget.
+    consec_failures: u32,
+    /// While `Some(t)` and `now < t`, the breaker is open and frames
+    /// are shed; past `t` the next send is a half-open probe.
+    open_until: Option<Instant>,
 }
 
 impl FrameSender {
@@ -36,6 +60,9 @@ impl FrameSender {
             stream: None,
             rng,
             stats: NetStats::default(),
+            next_seq: 1,
+            consec_failures: 0,
+            open_until: None,
         };
         let mut last = Error::Io(format!("never attempted {}", s.addr));
         for attempt in 0..=s.cfg.max_reconnects {
@@ -117,6 +144,7 @@ impl FrameSender {
                 wire::NACK => Err(Error::Protocol(
                     "receiver rejected the frame (NACK)".to_string(),
                 )),
+                wire::BUSY => Err(Error::Busy),
                 other => Err(Error::Protocol(format!("unknown ack byte {other:#04x}"))),
             },
             Err(e) => Err(classify_io("ack read", &e)),
@@ -128,11 +156,29 @@ impl FrameSender {
     /// Connection-level failures (closed, reset, timed out) drop the
     /// socket and retry through the reconnect/backoff loop; after
     /// `max_reconnects` failed attempts the last typed error is
-    /// returned. [`Error::Protocol`] (NACK) is returned immediately.
+    /// returned and the breaker's failure streak advances.
+    /// [`Error::Protocol`] (NACK) and [`Error::Busy`] are returned
+    /// immediately; both prove the link alive, so they reset the
+    /// breaker. While the breaker is open, [`Error::BreakerOpen`] is
+    /// returned without touching the socket.
     pub fn send(&mut self, frame: &[u8]) -> Result<()> {
-        let msg = wire::encode_msg(frame);
+        let half_open = match self.open_until {
+            Some(until) if Instant::now() < until => {
+                self.stats.shed += 1;
+                return Err(Error::BreakerOpen);
+            }
+            Some(_) => true,
+            None => false,
+        };
+        let seq = self.next_seq;
+        self.next_seq = self.next_seq.wrapping_add(1);
+        let msg = wire::encode_msg_v2(frame, seq);
+        // a half-open probe gets one attempt, not the whole budget: the
+        // point of the open state is to stop burning the arrival
+        // process on a link that keeps failing
+        let budget = if half_open { 0 } else { self.cfg.max_reconnects };
         let mut last = Error::ConnClosed { what: "never attempted" };
-        for attempt in 0..=self.cfg.max_reconnects {
+        for attempt in 0..=budget {
             if attempt > 0 {
                 self.stats.reconnects += 1;
                 std::thread::sleep(self.backoff_delay(attempt - 1));
@@ -147,15 +193,25 @@ impl FrameSender {
             }
             match self.try_send(&msg) {
                 Ok(()) => {
+                    self.note_link_alive();
                     self.stats.frames += 1;
                     self.stats.bytes += msg.len() as u64;
                     return Ok(());
                 }
                 Err(Error::Protocol(p)) => {
                     // deterministic rejection: resending the same bytes
-                    // cannot succeed, surface it to the caller
+                    // cannot succeed, surface it to the caller. The
+                    // receiver answered, so the link itself is fine.
+                    self.note_link_alive();
                     self.stream = None;
                     return Err(Error::Protocol(p));
+                }
+                Err(Error::Busy) => {
+                    // overload shed at the receiver: don't retry into a
+                    // saturated server. The connection stays usable.
+                    self.note_link_alive();
+                    self.stats.busy += 1;
+                    return Err(Error::Busy);
                 }
                 Err(e) => {
                     if matches!(e, Error::Timeout { .. }) {
@@ -166,7 +222,27 @@ impl FrameSender {
                 }
             }
         }
+        // the whole budget failed: advance the breaker streak
+        self.consec_failures = self.consec_failures.saturating_add(1);
+        if self.cfg.breaker_threshold > 0
+            && self.consec_failures >= self.cfg.breaker_threshold
+        {
+            self.open_until = Some(Instant::now() + self.cfg.breaker_cooldown);
+            self.stats.breaker_opens += 1;
+        }
         Err(last)
+    }
+
+    /// A verdict byte arrived, so the link works: reset the breaker.
+    fn note_link_alive(&mut self) {
+        self.consec_failures = 0;
+        self.open_until = None;
+    }
+
+    /// Is the circuit breaker currently shedding (open, cooldown not
+    /// yet elapsed)?
+    pub fn breaker_open(&self) -> bool {
+        self.open_until.is_some_and(|until| Instant::now() < until)
     }
 
     /// Drop the current connection (next send reconnects).
@@ -192,6 +268,24 @@ mod tests {
             backoff_base: Duration::from_millis(5),
             backoff_max: Duration::from_millis(20),
             seed: 1,
+            // breaker disabled unless a test opts in: these tests probe
+            // the raw retry loop
+            breaker_threshold: 0,
+            breaker_cooldown: Duration::from_millis(100),
+            dedup_window: 64,
+        }
+    }
+
+    fn bare_sender(addr: String, cfg: NetConfig, seed: u64) -> FrameSender {
+        FrameSender {
+            addr,
+            cfg,
+            stream: None,
+            rng: SplitMix64::new(seed),
+            stats: NetStats::default(),
+            next_seq: 1,
+            consec_failures: 0,
+            open_until: None,
         }
     }
 
@@ -224,7 +318,8 @@ mod tests {
         let addr = listener.local_addr().unwrap().to_string();
         let server = std::thread::spawn(move || {
             let (mut conn, _) = listener.accept().unwrap();
-            let mut buf = vec![0u8; wire::HEADER_LEN + 3 + wire::CRC_LEN];
+            // the sender speaks wire v2 now: header carries the seq
+            let mut buf = vec![0u8; wire::HEADER_V2_LEN + 3 + wire::CRC_LEN];
             conn.read_exact(&mut buf).unwrap();
             conn.write_all(&[wire::NACK]).unwrap();
         });
@@ -241,17 +336,15 @@ mod tests {
             let l = TcpListener::bind("127.0.0.1:0").unwrap();
             l.local_addr().unwrap().to_string()
         };
-        let mut s = FrameSender {
+        let mut s = bare_sender(
             addr,
-            cfg: NetConfig {
+            NetConfig {
                 backoff_base: Duration::from_millis(100),
                 backoff_max: Duration::from_secs(60),
                 ..fast_cfg()
             },
-            stream: None,
-            rng: SplitMix64::new(7),
-            stats: NetStats::default(),
-        };
+            7,
+        );
         for attempt in 0..6u32 {
             let nominal = 100.0e-3 * f64::from(1u32 << attempt);
             let d = s.backoff_delay(attempt).as_secs_f64();
@@ -265,5 +358,154 @@ mod tests {
         // the cap holds even for absurd attempt counts (no overflow)
         let capped = s.backoff_delay(40);
         assert!(capped < Duration::from_secs(91));
+    }
+
+    #[test]
+    fn backoff_matches_formula_exactly_and_is_replayable() {
+        // the delay schedule is a pure function of (base, max, seed):
+        // base * 2^attempt capped at backoff_max, times a jitter factor
+        // of 0.5 + next_f64() from the seeded SplitMix64 stream
+        let cfg = NetConfig {
+            backoff_base: Duration::from_millis(100),
+            backoff_max: Duration::from_secs(1),
+            ..fast_cfg()
+        };
+        let addr = "127.0.0.1:1".to_string();
+        let mut s = bare_sender(addr.clone(), cfg.clone(), 42);
+        let mut model = SplitMix64::new(42);
+        let mut schedule = Vec::new();
+        for attempt in 0..8u32 {
+            let nominal = (0.1 * f64::from(1u32 << attempt)).min(1.0);
+            let expect = nominal * (0.5 + model.next_f64());
+            let got = s.backoff_delay(attempt).as_secs_f64();
+            assert!(
+                (got - expect).abs() < 1e-9,
+                "attempt {attempt}: got {got}, formula says {expect}"
+            );
+            schedule.push(got);
+        }
+        // same seed → identical schedule (replayable); different seed → not
+        let mut again = bare_sender(addr.clone(), cfg.clone(), 42);
+        let replay: Vec<f64> =
+            (0..8u32).map(|a| again.backoff_delay(a).as_secs_f64()).collect();
+        assert_eq!(schedule, replay);
+        let mut other = bare_sender(addr, cfg, 43);
+        assert_ne!(
+            schedule,
+            (0..8u32).map(|a| other.backoff_delay(a).as_secs_f64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn max_reconnects_is_honored_exactly() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let cfg = NetConfig { max_reconnects: 3, ..fast_cfg() };
+        let h = std::thread::spawn(move || {
+            let mut tx = FrameSender::connect(&addr, cfg).unwrap();
+            let err = tx.send(&[9, 9, 9]).unwrap_err();
+            (err, tx.stats())
+        });
+        // every accepted connection is dropped immediately, so the send
+        // fails each attempt: 1 accept from connect() + exactly
+        // max_reconnects accepts from the retry loop, no more
+        let mut accepts = 0u32;
+        while !h.is_finished() {
+            if listener.accept().is_ok() {
+                accepts += 1;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // catch any straggler the kernel had queued
+        std::thread::sleep(Duration::from_millis(50));
+        while listener.accept().is_ok() {
+            accepts += 1;
+        }
+        let (err, stats) = h.join().unwrap();
+        assert!(
+            matches!(err, Error::ConnClosed { .. } | Error::Io(_) | Error::Timeout { .. }),
+            "{err}"
+        );
+        assert_eq!(accepts, 1 + 3, "connect + exactly max_reconnects retries");
+        assert_eq!(stats.reconnects, 3);
+        assert_eq!(stats.frames, 0);
+    }
+
+    #[test]
+    fn busy_verdict_is_typed_and_not_retried() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            let mut buf = vec![0u8; wire::HEADER_V2_LEN + 3 + wire::CRC_LEN];
+            conn.read_exact(&mut buf).unwrap();
+            conn.write_all(&[wire::BUSY]).unwrap();
+        });
+        let mut tx = FrameSender::connect(&addr, fast_cfg()).unwrap();
+        let err = tx.send(&[1, 2, 3]).unwrap_err();
+        assert!(matches!(err, Error::Busy), "{err}");
+        let st = tx.stats();
+        assert_eq!(st.busy, 1);
+        assert_eq!(st.frames, 0, "a shed frame must not count as sent");
+        assert_eq!(st.reconnects, 0, "BUSY must not trigger the retry loop");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn breaker_opens_sheds_and_recovers_via_half_open_probe() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let mut accepts = 0u32;
+            loop {
+                let Ok((mut conn, _)) = listener.accept() else { break };
+                accepts += 1;
+                if accepts <= 2 {
+                    // outage phase: kill the connection immediately
+                    drop(conn);
+                    continue;
+                }
+                // recovered: serve two messages on this connection
+                for _ in 0..2 {
+                    let mut buf =
+                        vec![0u8; wire::HEADER_V2_LEN + 3 + wire::CRC_LEN];
+                    if conn.read_exact(&mut buf).is_err() {
+                        break;
+                    }
+                    if conn.write_all(&[wire::ACK]).is_err() {
+                        break;
+                    }
+                }
+                break;
+            }
+            accepts
+        });
+        let cfg = NetConfig {
+            max_reconnects: 0,
+            breaker_threshold: 2,
+            breaker_cooldown: Duration::from_millis(150),
+            ..fast_cfg()
+        };
+        let mut tx = FrameSender::connect(&addr, cfg).unwrap();
+        // two whole-budget failures trip the breaker...
+        assert!(tx.send(&[1, 2, 3]).is_err());
+        assert!(!tx.breaker_open());
+        assert!(tx.send(&[1, 2, 3]).is_err());
+        assert!(tx.breaker_open());
+        assert_eq!(tx.stats().breaker_opens, 1);
+        // ...after which frames shed instantly without touching the socket
+        let t0 = std::time::Instant::now();
+        assert!(matches!(tx.send(&[4, 5, 6]), Err(Error::BreakerOpen)));
+        assert!(matches!(tx.send(&[4, 5, 6]), Err(Error::BreakerOpen)));
+        assert!(t0.elapsed() < Duration::from_millis(100), "shedding must be instant");
+        assert_eq!(tx.stats().shed, 2);
+        // cooldown elapses → half-open probe succeeds → breaker closes
+        std::thread::sleep(Duration::from_millis(180));
+        tx.send(&[7, 8, 9]).unwrap();
+        assert!(!tx.breaker_open());
+        tx.send(&[7, 8, 9]).unwrap();
+        assert_eq!(tx.stats().frames, 2);
+        assert_eq!(server.join().unwrap(), 3, "shed frames never reached the socket");
     }
 }

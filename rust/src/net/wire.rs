@@ -1,39 +1,75 @@
 //! The length-prefixed wire layout for one edge→cloud message.
 //!
+//! Two wire versions coexist on the same port (the receiver dispatches
+//! on the version byte, so old senders keep working):
+//!
 //! ```text
+//! v1:
 //! offset size  field
 //! 0      4     magic "BAFN"
 //! 4      1     wire version (1)
 //! 5      4     frame_len (u32 LE, <= MAX_FRAME_LEN)
 //! 9      len   container frame (the codec::container bytes, verbatim)
 //! 9+len  4     CRC32 over everything above (header + frame)
+//!
+//! v2 (sequenced — what FrameSender speaks):
+//! offset size  field
+//! 0      4     magic "BAFN"
+//! 4      1     wire version (2)
+//! 5      8     seq (u64 LE, per-sender stream; retransmits reuse it)
+//! 13     4     frame_len (u32 LE, <= MAX_FRAME_LEN)
+//! 17     len   container frame
+//! 17+len 4     CRC32 over everything above (header + frame)
 //! ```
 //!
 //! After reading and validating a message the receiver answers with one
-//! byte: [`ACK`] (frame accepted) or [`NACK`] (wire-level rejection; the
-//! receiver drops the connection right after, because framing downstream
-//! of a corrupt message cannot be trusted). The sender treats a NACK as
-//! a non-retryable [`super::Error::Protocol`] — resending the same bytes
-//! would fail the same way.
+//! byte: [`ACK`] (frame accepted — or already accepted: a v2 retransmit
+//! of a sequence number inside the receiver's dedup window is ACKed so
+//! the sender stops resending, but is *not* delivered again), [`NACK`]
+//! (wire-level rejection; the receiver drops the connection right after,
+//! because framing downstream of a corrupt message cannot be trusted),
+//! or [`BUSY`] (the frame was valid but the receiver's ingress is
+//! saturated — the frame is shed at admission, the connection survives).
+//! The sender treats a NACK as a non-retryable
+//! [`super::Error::Protocol`] — resending the same bytes would fail the
+//! same way — and a BUSY as [`super::Error::Busy`], an overload signal
+//! the caller sheds on rather than retries.
+//!
+//! The v2 sequence number is what upgrades the sender's at-least-once
+//! retry loop to exactly-once delivery at the pipeline: a retransmit
+//! after a lost ACK carries the same `seq`, and the receiver's bounded
+//! dedup window ([`super::dedup::DedupWindow`]) suppresses the second
+//! delivery while still ACKing it.
 //!
 //! The message CRC is deliberately redundant with the container's own
 //! trailing CRC32: the wire check localizes corruption to the transport
-//! (and covers the length prefix, which the container CRC cannot), while
-//! the container check keeps protecting frames at rest.
+//! (and covers the length prefix and sequence number, which the
+//! container CRC cannot), while the container check keeps protecting
+//! frames at rest.
 
 use super::{Error, Result};
 use crate::codec::MAX_DECODED_SAMPLES;
 
 pub const MAGIC: &[u8; 4] = b"BAFN";
 pub const VERSION: u8 = 1;
-/// magic + version + frame_len.
+/// The sequenced wire version (adds a u64 sequence number).
+pub const VERSION2: u8 = 2;
+/// magic + version: the version-independent part every message starts
+/// with; the rest of the header is dispatched on the version byte.
+pub const PREFIX_LEN: usize = 5;
+/// v1 header: magic + version + frame_len.
 pub const HEADER_LEN: usize = 9;
+/// v2 header: magic + version + seq + frame_len.
+pub const HEADER_V2_LEN: usize = 17;
 /// Trailing message CRC32.
 pub const CRC_LEN: usize = 4;
 
 /// Receiver's one-byte verdict on a message.
 pub const ACK: u8 = 0xA5;
 pub const NACK: u8 = 0x5A;
+/// Overload verdict: the message was wire-valid but the receiver's
+/// ingress is saturated; the frame is shed, the connection survives.
+pub const BUSY: u8 = 0xB5;
 
 /// Hard cap on the transported frame length, derived from the decode
 /// cap: a frame decodes to at most [`MAX_DECODED_SAMPLES`] u16 samples
@@ -62,7 +98,88 @@ pub fn encode_msg(frame: &[u8]) -> Vec<u8> {
     out
 }
 
-/// Validate a message header; returns the declared frame length.
+/// Serialize one container frame into a complete sequenced (v2) wire
+/// message. Panics on an oversized frame, like [`encode_msg`].
+pub fn encode_msg_v2(frame: &[u8], seq: u64) -> Vec<u8> {
+    assert!(
+        frame.len() <= MAX_FRAME_LEN,
+        "frame of {} bytes exceeds the wire cap {MAX_FRAME_LEN}",
+        frame.len()
+    );
+    let mut out = Vec::with_capacity(HEADER_V2_LEN + frame.len() + CRC_LEN);
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION2);
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+    out.extend_from_slice(frame);
+    let crc = crc32fast::hash(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Validate the version-independent message prefix (magic + version);
+/// returns the wire version so the caller knows how much more header to
+/// read. Total: bad magic or an unknown version is [`Error::Protocol`].
+pub fn validate_prefix(prefix: &[u8; PREFIX_LEN]) -> Result<u8> {
+    if &prefix[0..4] != MAGIC {
+        return Err(Error::Protocol(format!(
+            "bad wire magic {:02x?} (want {MAGIC:02x?})",
+            &prefix[0..4]
+        )));
+    }
+    let ver = prefix[4];
+    if ver != VERSION && ver != VERSION2 {
+        return Err(Error::Protocol(format!(
+            "wire version {ver} (this build speaks {VERSION} and {VERSION2})"
+        )));
+    }
+    Ok(ver)
+}
+
+/// Total header length (including the prefix) for a wire version that
+/// [`validate_prefix`] accepted.
+pub fn header_len_for(version: u8) -> usize {
+    if version == VERSION2 { HEADER_V2_LEN } else { HEADER_LEN }
+}
+
+/// Parse a complete, prefix-validated header of either version: returns
+/// the sequence number (None for v1) and the declared frame length,
+/// re-checking magic/version so the function is total on any slice.
+/// An oversized length is [`Error::TooLarge`] — checked before the
+/// caller allocates.
+pub fn parse_header(hdr: &[u8]) -> Result<(Option<u64>, usize)> {
+    let prefix: &[u8; PREFIX_LEN] = hdr
+        .get(..PREFIX_LEN)
+        .and_then(|s| s.try_into().ok())
+        .ok_or_else(|| Error::Protocol(format!("header of {} bytes is shorter than the prefix", hdr.len())))?;
+    let ver = validate_prefix(prefix)?;
+    let want = header_len_for(ver);
+    if hdr.len() != want {
+        return Err(Error::Protocol(format!(
+            "v{ver} header must be {want} bytes, got {}",
+            hdr.len()
+        )));
+    }
+    let (seq, len_bytes) = if ver == VERSION2 {
+        let seq_bytes: [u8; 8] = hdr
+            .get(5..13)
+            .and_then(|s| s.try_into().ok())
+            .ok_or_else(|| Error::Protocol("v2 header too short for seq".to_string()))?;
+        (Some(u64::from_le_bytes(seq_bytes)), hdr.get(13..17))
+    } else {
+        (None, hdr.get(5..9))
+    };
+    let len_bytes: [u8; 4] = len_bytes
+        .and_then(|s| s.try_into().ok())
+        .ok_or_else(|| Error::Protocol("header too short for frame_len".to_string()))?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(Error::TooLarge { requested: len, limit: MAX_FRAME_LEN });
+    }
+    Ok((seq, len))
+}
+
+/// Validate a v1 message header; returns the declared frame length.
 /// Total: bad magic / version is [`Error::Protocol`], an oversized
 /// length is [`Error::TooLarge`] — checked before the caller allocates.
 pub fn validate_header(hdr: &[u8; HEADER_LEN]) -> Result<usize> {
@@ -165,6 +282,60 @@ mod tests {
         let mut h = header_of(&msg);
         h[5..9].copy_from_slice(&(MAX_FRAME_LEN as u32).to_le_bytes());
         assert_eq!(validate_header(&h).unwrap(), MAX_FRAME_LEN);
+    }
+
+    #[test]
+    fn v2_encode_parse_roundtrip() {
+        let frame = vec![3u8; 21];
+        let msg = encode_msg_v2(&frame, 0xDEAD_BEEF_0123_4567);
+        assert_eq!(msg.len(), HEADER_V2_LEN + 21 + CRC_LEN);
+        let mut prefix = [0u8; PREFIX_LEN];
+        prefix.copy_from_slice(&msg[..PREFIX_LEN]);
+        assert_eq!(validate_prefix(&prefix).unwrap(), VERSION2);
+        assert_eq!(header_len_for(VERSION2), HEADER_V2_LEN);
+        let (seq, len) = parse_header(&msg[..HEADER_V2_LEN]).unwrap();
+        assert_eq!(seq, Some(0xDEAD_BEEF_0123_4567));
+        assert_eq!(len, 21);
+        let (body, crc) = msg.split_at(msg.len() - CRC_LEN);
+        let mut trailer = [0u8; CRC_LEN];
+        trailer.copy_from_slice(crc);
+        check_crc(body, &trailer).unwrap();
+        assert_eq!(&body[HEADER_V2_LEN..], frame.as_slice());
+    }
+
+    #[test]
+    fn parse_header_handles_both_versions_and_rejects_junk() {
+        // v1 parses with no sequence number
+        let msg = encode_msg(&[1, 2, 3]);
+        assert_eq!(parse_header(&msg[..HEADER_LEN]).unwrap(), (None, 3));
+        // wrong version byte in the prefix
+        let mut p = [0u8; PREFIX_LEN];
+        p.copy_from_slice(&msg[..PREFIX_LEN]);
+        p[4] = 7;
+        assert!(matches!(validate_prefix(&p), Err(Error::Protocol(_))));
+        // a v2 header truncated to v1 length is a protocol error
+        let msg2 = encode_msg_v2(&[1, 2, 3], 9);
+        assert!(matches!(
+            parse_header(&msg2[..HEADER_LEN]),
+            Err(Error::Protocol(_))
+        ));
+        // hostile v2 length is rejected before allocation
+        let mut hdr = [0u8; HEADER_V2_LEN];
+        hdr.copy_from_slice(&msg2[..HEADER_V2_LEN]);
+        hdr[13..17].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            parse_header(&hdr),
+            Err(Error::TooLarge { requested, .. }) if requested == u32::MAX as usize
+        ));
+        // empty slice
+        assert!(parse_header(&[]).is_err());
+    }
+
+    #[test]
+    fn verdict_bytes_are_distinct() {
+        assert_ne!(ACK, NACK);
+        assert_ne!(ACK, BUSY);
+        assert_ne!(NACK, BUSY);
     }
 
     #[test]

@@ -15,6 +15,12 @@ cargo test -q
 # drop them from the gate (they enforce the no-panic wire contract)
 cargo test -q --test net_loopback --test transport_robustness --test json_fuzz \
     --test npy_fuzz --test decode_robustness
+# short fixed-seed chaos smoke: sender -> chaos shim -> receiver ->
+# ingress under a seeded loss/stall/reset/throttle schedule, asserting
+# exactly-once delivery and exact conservation. The full soak runs the
+# same test with BAF_CHAOS_FRAMES raised; the per-seed summary JSON
+# lands in target/chaos-soak/ (archived by CI).
+BAF_CHAOS_FRAMES=300 cargo test -q --test chaos_soak --test dedup_prop
 cargo clippy --all-targets -- -D clippy::unwrap_used -D clippy::expect_used
 # the source-level no-panic gate: zero unsuppressed findings, every
 # suppression reasoned, wire/container constants in sync with ROADMAP.

@@ -1,0 +1,140 @@
+//! Property test for [`baf::net::DedupWindow`], the bounded ring that
+//! makes wire-v2 delivery exactly-once at the receiver.
+//!
+//! The generator mimics what the sender's bounded retransmission budget
+//! actually puts on the wire: a monotone per-stream sequence with
+//!
+//! * **bounded reorder** — arrivals are shuffled within blocks no wider
+//!   than the window, so a fresh frame never lags the stream head by a
+//!   full window (exactly the guarantee a bounded retry budget gives);
+//! * **gaps** — some sequence numbers never arrive at all (frames lost
+//!   and terminally dropped);
+//! * **duplicates** — already-delivered frames are re-presented at
+//!   random (retransmits after lost ACKs), including ones far enough
+//!   back to have left the ring (the below-window conservative case);
+//! * **BUSY probes** — a fresh frame is looked up but *not* observed
+//!   (admission refused it), then immediately re-presented: it must
+//!   still read as fresh.
+//!
+//! Checked against a `HashSet` model on every arrival, across window
+//! capacities from 1 to 64, ring wraparound (streams several times the
+//! capacity), and sequence values up near `u64::MAX`:
+//!
+//! * a fresh in-window sequence number is **never** rejected;
+//! * an already-observed sequence number is **never** fresh again;
+//! * an in-window gap (never observed) stays fresh no matter how many
+//!   ring slots were reused around it.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use baf::net::DedupWindow;
+use baf::util::SplitMix64;
+use std::collections::HashSet;
+
+/// One seeded trial: a shuffled-within-blocks stream of `n` sequence
+/// numbers starting above `base`, driven through the window with
+/// duplicates, gaps, and BUSY probes injected along the way.
+fn run_trial(cap: usize, base: u64, n: u64, seed: u64) {
+    // the window clamps capacity 0 to 1; mirror that in the model
+    let cap_eff = cap.max(1);
+    let mut rng = SplitMix64::new(seed);
+    let mut stream: Vec<u64> = (1..=n).map(|k| base + k).collect();
+    // bounded reorder: an element of block k is delivered after at most
+    // block-1 larger values from its own block, and everything in
+    // earlier blocks is smaller — so `hi - seq < cap` whenever a fresh
+    // seq arrives, matching the sender's bounded retransmission budget
+    for chunk in stream.chunks_mut(cap_eff) {
+        rng.shuffle(chunk);
+    }
+
+    let mut w = DedupWindow::new(cap);
+    assert_eq!(w.capacity(), cap_eff);
+    let mut observed: HashSet<u64> = HashSet::new();
+    let mut delivered: Vec<u64> = Vec::new();
+    let mut hi = 0u64;
+    let mut any = false;
+
+    let ctx = |hi: u64| format!("cap {cap} base {base} seed {seed:#x} hi {hi}");
+
+    for &seq in &stream {
+        if rng.next_f64() < 0.1 {
+            // gap: this frame is lost for good and never arrives
+            continue;
+        }
+        if rng.next_f64() < 0.15 {
+            // BUSY probe: admission refuses the frame, so it is looked
+            // up but not observed; the immediate retransmit below must
+            // still be fresh
+            assert!(
+                !w.contains(seq),
+                "{}: BUSY-probed fresh seq {seq} misread as duplicate",
+                ctx(hi)
+            );
+        }
+        // fresh arrival: must never be rejected
+        assert!(!w.contains(seq), "{}: fresh seq {seq} rejected", ctx(hi));
+        w.observe(seq);
+        assert!(observed.insert(seq), "generator bug: {seq} presented twice");
+        if !any || seq > hi {
+            hi = seq;
+            any = true;
+        }
+        delivered.push(seq);
+
+        // duplicate retransmit: anything already delivered — recent or
+        // long since evicted from the ring — must never be fresh again
+        if rng.next_f64() < 0.3 {
+            let pick = delivered[(rng.next_u64() as usize) % delivered.len()];
+            assert!(
+                w.contains(pick),
+                "{}: duplicate seq {pick} not recognized",
+                ctx(hi)
+            );
+        }
+        // an in-window seq that was never observed (a gap, or simply
+        // not yet arrived) must stay fresh despite ring slot reuse
+        if rng.next_f64() < 0.2 {
+            let lo = hi.saturating_sub(cap_eff as u64 - 1).max(base + 1);
+            let g = lo + rng.next_u64() % (hi - lo + 1);
+            if !observed.contains(&g) {
+                assert!(
+                    !w.contains(g),
+                    "{}: in-window gap seq {g} misread as duplicate",
+                    ctx(hi)
+                );
+            }
+        }
+    }
+
+    // final sweep: every observed seq is a duplicate forever after
+    for &seq in &delivered {
+        assert!(w.contains(seq), "{}: {seq} forgotten entirely", ctx(hi));
+    }
+}
+
+#[test]
+fn random_orders_with_duplicates_and_gaps_across_wraparound() {
+    let mut master = SplitMix64::new(0xDED0_57A7);
+    for &cap in &[1usize, 2, 3, 8, 16, 64] {
+        for _ in 0..8 {
+            let seed = master.next_u64();
+            // streams several times the capacity, so every ring slot is
+            // reused repeatedly (wraparound) within each trial
+            run_trial(cap, 0, (cap as u64 * 6).max(64), seed);
+        }
+    }
+}
+
+#[test]
+fn sequence_values_near_u64_max_do_not_confuse_the_ring() {
+    let mut master = SplitMix64::new(0xB16_5EA5);
+    for &cap in &[1usize, 3, 8, 32] {
+        let seed = master.next_u64();
+        run_trial(cap, u64::MAX - 4096, 4000, seed);
+    }
+}
+
+#[test]
+fn zero_capacity_is_clamped_and_still_correct() {
+    run_trial(0, 0, 64, 0x0CA9);
+}

@@ -53,6 +53,9 @@ fn cfg() -> NetConfig {
         backoff_base: Duration::from_millis(5),
         backoff_max: Duration::from_millis(50),
         seed: 0x10CA1,
+        breaker_threshold: 0,
+        breaker_cooldown: Duration::from_millis(100),
+        dedup_window: 64,
     }
 }
 

@@ -182,6 +182,7 @@ fn server_smoke() {
             queue_depth: 16,
             burst_factor: 1.0,
             corrupt_rate: 0.0,
+            ..Default::default()
         };
         let report = run_server(&pcfg, &scfg).unwrap();
         assert_eq!(report.requests, 32);
@@ -210,6 +211,7 @@ fn server_striped_smoke() {
         queue_depth: 16,
         burst_factor: 1.0,
         corrupt_rate: 0.0,
+        ..Default::default()
     };
     let report = run_server(&pcfg, &scfg).unwrap();
     assert_eq!(report.requests, 32);
@@ -241,6 +243,7 @@ fn server_survives_fault_injection() {
         queue_depth: 16,
         burst_factor: 1.0,
         corrupt_rate: 0.10,
+        ..Default::default()
     };
     let report = run_server(&pcfg, &scfg).unwrap();
     assert_eq!(report.requests, 64, "every request must be accounted for");
